@@ -1,0 +1,53 @@
+"""Thesis Fig 6.5 — steadiness of the run-time metric and micro-profiling
+correctness: per-step times of two real conv schedules (interpret mode)
+must be steady enough (low CV) that a short profile picks the true winner,
+which is the property that makes adaptive selection sound."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.adaptive import AdaptiveSelector, microprofile, steadiness
+from repro.core.schedule import ConvSchedule
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.normal(size=(1, 16, 18, 18)).astype(np.float32))
+    wgt = jnp.asarray(rng.normal(size=(32, 16, 3, 3)).astype(np.float32))
+
+    good = ConvSchedule.make(("oc", "y", "x", "ic"),
+                             {"oc": 32, "ic": 16, "y": 16, "x": 16})
+    bad = ConvSchedule.make(("ic", "y", "x", "oc"),
+                            {"oc": 4, "ic": 2, "y": 4, "x": 4})
+
+    def run_sched(s):
+        jax.block_until_ready(s.run(img, wgt))
+
+    prof = microprofile([good, bad], run_sched, repeats=5)
+    emit("adaptive.microprofile.good", prof["medians"][0] * 1e6,
+         f"cv={prof['steadiness'][0]:.3f}")
+    emit("adaptive.microprofile.bad", prof["medians"][1] * 1e6,
+         f"cv={prof['steadiness'][1]:.3f}")
+    emit("adaptive.microprofile.winner", 0.0,
+         f"index={prof['best_index']};correct={prof['best_index'] == 0}")
+
+    # online selector embedded in a step loop
+    sel = AdaptiveSelector(probes_per_candidate=3)
+    sel.register("conv", [good, bad])
+    import time
+    steps = 0
+    while sel.committed("conv") is None and steps < 40:
+        s = sel.propose("conv")
+        t0 = time.perf_counter()
+        run_sched(s)
+        sel.observe("conv", time.perf_counter() - t0)
+        steps += 1
+    emit("adaptive.online.committed", 0.0,
+         f"steps={steps};correct={sel.committed('conv') == good}")
+
+
+if __name__ == "__main__":
+    run()

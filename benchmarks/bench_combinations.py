@@ -1,0 +1,44 @@
+"""Thesis Fig 5.3/5.4 — top-K permutation combinations and random-sampling
+bounds: the best *pair* (selected per layer by micro-profiling) should beat
+any single static permutation, and ~10/26 random samples give 1/2-sigma
+confidence of a >=0.9-optimal permutation."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.configs.squeezenet_layers import synthetic_design_space
+from repro.core import tuner
+from repro.core.loopnest import LOOPS
+
+
+def run() -> None:
+    layers = synthetic_design_space()
+    t0 = time.perf_counter()
+    sweeps = [tuner.sweep_layer(l) for l in layers]
+    per_sim_us = (time.perf_counter() - t0) / (len(layers) * 720) * 1e6
+
+    single = tuner.static_candidates(sweeps)["top_average"]
+    pairs = tuner.top_pairs(sweeps, n_best=1)
+    (pa, pb, avg, worst) = pairs[0]
+    emit("combinations.top_pair", per_sim_us,
+         f"a={'/'.join(LOOPS[i] for i in pa)};"
+         f"b={'/'.join(LOOPS[i] for i in pb)};"
+         f"avg={avg:.4f};worst={worst:.4f};"
+         f"single_avg={single.avg_speedup:.4f}")
+
+    pairs_l2 = tuner.top_pairs(sweeps, metric="l2", n_best=1)
+    emit("combinations.top_pair_l2", per_sim_us,
+         f"avg={pairs_l2[0][2]:.4f};worst={pairs_l2[0][3]:.4f}")
+
+    for conf, label in ((0.683, "1sigma"), (0.954, "2sigma")):
+        k = tuner.sample_size_for_confidence(sweeps, 0.9, conf)
+        emit(f"combinations.random_sample.{label}", per_sim_us,
+             f"k={k}")
+    counts = tuner.good_permutation_counts(sweeps, 0.9)
+    emit("combinations.good_perms", per_sim_us,
+         f"min={int(counts.min())};median={int(sorted(counts)[len(counts)//2])}")
+
+
+if __name__ == "__main__":
+    run()

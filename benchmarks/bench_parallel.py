@@ -1,0 +1,40 @@
+"""Thesis Fig 4.4 + 5.2 — impact of multi-threading on permutation ranks:
+1/2/4/8-way parallelism, the kernel-outermost third degrading, and rank
+correlation between thread counts for the remaining two thirds."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+from scipy import stats
+
+from benchmarks.common import emit
+from repro.configs.squeezenet_layers import synthetic_design_space_mt
+from repro.core import tuner
+from repro.core.loopnest import LOOPS
+
+
+def run() -> None:
+    layers = synthetic_design_space_mt()
+    avg = {}
+    t0 = time.perf_counter()
+    for threads in (1, 2, 4, 8):
+        sweeps = [tuner.sweep_layer(l, threads=threads) for l in layers]
+        avg[threads] = tuner.speedup_matrix(sweeps).mean(axis=0)
+    per_sim_us = (time.perf_counter() - t0) / (len(layers) * 720 * 4) * 1e6
+
+    kernel_outer = np.array([LOOPS[p[0]] in ("ky", "kx")
+                             for p in tuner.ALL_PERMS])
+    for threads in (2, 4, 8):
+        d_ko = float(avg[threads][kernel_outer].mean())
+        d_ok = float(avg[threads][~kernel_outer].mean())
+        emit(f"parallel.{threads}t.kernel_outer_third", per_sim_us,
+             f"kernel_outer={d_ko:.4f};others={d_ok:.4f}")
+        rho = stats.spearmanr(avg[1][~kernel_outer],
+                              avg[threads][~kernel_outer]).statistic
+        emit(f"parallel.rank_corr.1t-vs-{threads}t", per_sim_us,
+             f"spearman={rho:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Roofline summary — reads the dry-run JSON (results/dryrun_baseline.json
+by default) and emits one CSV row per (arch x shape x mesh) cell with the
+three terms, the dominant bottleneck, and MFU.  Run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes \
+        --out results/dryrun_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT = "results/dryrun_baseline_final.json"
+
+
+def run(path: str = DEFAULT) -> None:
+    if not os.path.exists(path):
+        emit("roofline.missing", 0.0, f"run dryrun first ({path})")
+        return
+    with open(path) as f:
+        cells = json.load(f)
+    for cell in cells:
+        name = f"roofline.{cell['arch']}.{cell['shape']}.{cell['mesh']}"
+        if cell.get("status") == "skipped":
+            emit(name, 0.0, "skipped:" + cell.get("reason", "")[:60])
+            continue
+        if cell.get("status") != "ok":
+            emit(name, 0.0, "FAILED")
+            continue
+        r = cell.get("roofline")
+        if not r:
+            mem = cell.get("full", {}).get("bytes_per_device")
+            emit(name, 0.0, f"compiled;bytes_per_device={mem}")
+            continue
+        emit(name, r["step_time_s"] * 1e6,
+             f"dom={r['dominant']};compute_s={r['compute_s']:.3e};"
+             f"memory_s={r['memory_s']:.3e};"
+             f"collective_s={r['collective_s']:.3e};"
+             f"mfu={r['mfu']:.4f};useful={r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Thesis Fig 6.2 — dense vs sparsity-aware convolution across weight
+density.  Measured (interpret-mode, CPU) kernel times at block densities
+0..1 plus the cost-model crossover; the dense kernel must be density-
+insensitive and the sparse kernel should scale with density."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.loopnest import ConvLayer
+from repro.core.sparsity import choose_algorithm, crossover_density
+from repro.kernels.conv2d import conv2d
+from repro.kernels.sparse_conv import analyze_weights, sparse_conv2d
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    n, ic, oc, img, k = 1, 32, 32, 12, 3
+    block = {"oc": 8, "ic": 8}
+    x = jnp.asarray(rng.normal(size=(n, ic, img + k - 1, img + k - 1))
+                    .astype(np.float32))
+
+    import jax
+    for density in (0.125, 0.25, 0.5, 0.75, 1.0):
+        w = rng.normal(size=(oc, ic, k, k)).astype(np.float32)
+        mask = rng.random((oc // block["oc"], ic // block["ic"])) >= density
+        for o in range(mask.shape[0]):
+            for i in range(mask.shape[1]):
+                if mask[o, i]:
+                    w[o * block["oc"]:(o + 1) * block["oc"],
+                      i * block["ic"]:(i + 1) * block["ic"]] = 0.0
+        wj = jnp.asarray(w)
+        sp = analyze_weights(w, block)
+
+        t_dense = time_call(lambda: jax.block_until_ready(
+            conv2d(x, wj, block={"oc": 8, "ic": 8, "y": img, "x": img})))
+        t_sparse = time_call(lambda: jax.block_until_ready(
+            sparse_conv2d(x, wj, block=block, sparsity=sp)))
+        emit(f"sparsity.density_{density:.3f}.dense", t_dense * 1e6,
+             f"block_density={sp.density:.3f}")
+        emit(f"sparsity.density_{density:.3f}.sparse", t_sparse * 1e6,
+             f"imbalance={sp.imbalance:.2f}")
+
+    layer = ConvLayer(128, 128, 25, 25, 3, 3)   # thesis Fig 6.2 layer
+    xd = crossover_density(layer, {"oc": 128, "ic": 32})
+    d = choose_algorithm(layer, {"oc": 128, "ic": 32}, density=0.2)
+    emit("sparsity.model.crossover", 0.0, f"density={xd:.3f}")
+    emit("sparsity.model.at_0.2", 0.0,
+         f"algo={d.algorithm};dense_s={d.dense_time_s:.3g};"
+         f"sparse_s={d.sparse_time_s:.3g}")
+
+
+if __name__ == "__main__":
+    run()

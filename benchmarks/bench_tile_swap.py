@@ -1,0 +1,61 @@
+"""Thesis Fig 6.3/6.4 — swapping resources between compute and cache.
+
+Kernel-level analogue: the matmul VMEM budget is spent either streaming
+B-blocks ("compute tiles") or pinning the whole RHS resident ("L2 tiles").
+We sweep the 15-configuration space (block shapes x resident flag) per
+layer shape with the TPU cost model, find the best static configuration
+across layers, and report the per-layer-optimal speedup over that static
+choice — the thesis found ~1.5 % average / ~12 % max, concluding dynamic
+tile reconfiguration is marginal; we check whether the same holds here."""
+from __future__ import annotations
+
+import itertools
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import cost_model as cm
+
+
+def run() -> None:
+    # layer shapes: (m = tokens, n = d_ff, k = d_model) across model scales
+    shapes = [(512, f, d) for d, f in
+              ((1024, 4096), (2048, 5632), (3072, 8192), (4096, 12288),
+               (5120, 25600), (6144, 24576))]
+    shapes += [(2048, f, d) for d, f in ((2048, 5632), (4096, 12288))]
+
+    configs = []
+    for bm, bn, bk in itertools.product((128, 256), (128, 256),
+                                        (128, 512)):
+        for resident in (False, True):
+            configs.append((bm, bn, bk, resident))
+
+    t0 = time.perf_counter()
+    times = np.zeros((len(shapes), len(configs)))
+    for si, (m, n, k) in enumerate(shapes):
+        for ci, (bm, bn, bk, res) in enumerate(configs):
+            c = cm.matmul_schedule_cost(m, n, k, min(bm, m), min(bn, n),
+                                        min(bk, k),
+                                        resident_rhs=res)
+            times[si, ci] = c.time_s
+    per_eval_us = ((time.perf_counter() - t0)
+                   / times.size * 1e6)
+
+    best_static = int(np.argmin(times.mean(axis=0)))
+    per_layer_best = times.min(axis=1)
+    static_times = times[:, best_static]
+    speedups = static_times / per_layer_best
+    bm, bn, bk, res = configs[best_static]
+    emit("tile_swap.best_static", per_eval_us,
+         f"block={bm}x{bn}x{bk};resident={res}")
+    emit("tile_swap.dynamic_gain", per_eval_us,
+         f"avg={speedups.mean():.4f};max={speedups.max():.4f}")
+    resident_wins = sum(1 for s in range(len(shapes))
+                        if configs[int(np.argmin(times[s]))][3])
+    emit("tile_swap.resident_wins", per_eval_us,
+         f"{resident_wins}/{len(shapes)} layers prefer resident RHS")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Thesis Fig 4.7/4.8 (+ 4.9/4.10, Tables 4.2/4.3) — static candidate
+permutations over the synthetic design spaces, single- and multi-thread.
+
+Reproduces the thesis' headline numbers: a single permutation reaching
+~0.97 average speedup (1-thread) and the multi-thread degradation, with
+the same three selection criteria (avg cycles / worst-case / L2)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.squeezenet_layers import (synthetic_design_space,
+                                             synthetic_design_space_mt)
+from repro.core import tuner
+from repro.core.loopnest import LOOPS
+
+
+def run() -> None:
+    layers = synthetic_design_space()
+    t0 = time.perf_counter()
+    sweeps = [tuner.sweep_layer(l) for l in layers]
+    per_sim_us = (time.perf_counter() - t0) / (len(layers) * 720) * 1e6
+    cands = tuner.static_candidates(sweeps)
+    for key, c in cands.items():
+        loops = "/".join(LOOPS[i] for i in c.perm)
+        emit(f"top_candidates.1t.{key}", per_sim_us,
+             f"perm={loops};avg={c.avg_speedup:.4f};"
+             f"worst={c.worst_speedup:.4f}")
+
+    layers_mt = synthetic_design_space_mt()
+    t0 = time.perf_counter()
+    sweeps_mt = [tuner.sweep_layer(l, threads=8) for l in layers_mt]
+    per_sim_mt = (time.perf_counter() - t0) / (len(layers_mt) * 720) * 1e6
+    cands_mt = tuner.static_candidates(sweeps_mt)
+    for key, c in cands_mt.items():
+        loops = "/".join(LOOPS[i] for i in c.perm)
+        emit(f"top_candidates.8t.{key}", per_sim_mt,
+             f"perm={loops};avg={c.avg_speedup:.4f};"
+             f"worst={c.worst_speedup:.4f}")
+
+    # thesis: one third of permutations (kernel loop outermost) are bad
+    # in the multi-thread case
+    s = tuner.speedup_matrix(sweeps_mt)
+    kernel_outer = [i for i, p in enumerate(tuner.ALL_PERMS)
+                    if LOOPS[p[0]] in ("ky", "kx")]
+    other = [i for i in range(720) if i not in set(kernel_outer)]
+    emit("top_candidates.8t.kernel_outer_avg", per_sim_mt,
+         f"kernel_outer={s[:, kernel_outer].mean():.4f};"
+         f"others={s[:, other].mean():.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Thesis Fig 2.3 + 6.1 — fast-model-vs-detailed-simulator validation.
+
+(a) Analytic footprint model vs the exact trace-driven cache simulator:
+    Spearman rank correlation over sampled permutations (the thesis'
+    MARSSx86-vs-cache-simulator comparison).
+(b) The analytic model's top candidate must land in the exact simulator's
+    top decile (the lokisim evaluation of Ch. 6: rank-1 predicted should
+    perform best on the detailed platform)."""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+from scipy import stats
+
+from benchmarks.common import emit
+from repro.core import cost_model as cm
+from repro.core import tracesim, tuner
+from repro.core.cost_model import CacheLevel, MachineModel
+from repro.core.loopnest import ConvLayer
+
+
+def run() -> None:
+    machine = MachineModel(levels=(
+        CacheLevel("L1", 2 * 1024, 32, 3),
+        CacheLevel("L2", 8 * 1024, 32, 10, associativity=8)))
+    layers = [ConvLayer(16, 8, 12, 12, 3, 3),
+              ConvLayer(8, 32, 10, 10, 1, 1)]
+    random.seed(0)
+    sample = random.sample(range(720), 48)
+
+    for li, layer in enumerate(layers):
+        t0 = time.perf_counter()
+        analytic = np.array(
+            [cm.simulate(layer, tuner.ALL_PERMS[i], machine).cycles
+             for i in sample])
+        t_analytic = (time.perf_counter() - t0) / len(sample) * 1e6
+        t0 = time.perf_counter()
+        exact = np.array(
+            [tracesim.simulate_trace(layer, tuner.ALL_PERMS[i],
+                                     machine).cycles for i in sample])
+        t_exact = (time.perf_counter() - t0) / len(sample) * 1e6
+        rho = stats.spearmanr(analytic, exact).statistic
+        emit(f"validation.layer{li}.rank_corr", t_analytic,
+             f"spearman={rho:.3f};speedup_vs_exact="
+             f"{t_exact / max(t_analytic, 1e-9):.0f}x")
+
+        # (b) rank-1 predicted lands where in the exact ranking?
+        full_analytic = np.array(
+            [cm.simulate(layer, p, machine).cycles
+             for p in tuner.ALL_PERMS])
+        top = int(np.argmin(full_analytic))
+        exact_top = tracesim.simulate_trace(layer, tuner.ALL_PERMS[top],
+                                            machine).cycles
+        exact_rank = float(np.mean(exact <= exact_top))
+        emit(f"validation.layer{li}.top1_exact_percentile", t_exact,
+             f"percentile={exact_rank:.2f} (lower=better)")
+
+
+if __name__ == "__main__":
+    run()

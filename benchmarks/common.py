@@ -1,0 +1,23 @@
+"""Shared benchmark helpers: CSV emission + timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+              **kw) -> float:
+    """Median wall-time of fn(*args) in seconds."""
+    import numpy as np
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per thesis table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §6):
+
+    bench_loop_orders      Fig 4.2/4.3/4.5   720-perm signatures
+    bench_top_candidates   Fig 4.7-4.10      static candidates, 1t/8t
+    bench_cache_hierarchy  Fig 5.1           rank stability vs caches
+    bench_parallel         Fig 4.4/5.2       rank stability vs threads
+    bench_combinations     Fig 5.3/5.4       top-K pairs, random samples
+    bench_sparsity         Fig 6.2           dense vs sparse kernels
+    bench_tile_swap        Fig 6.3/6.4       compute/cache resource split
+    bench_adaptive         Fig 6.5           micro-profiling steadiness
+    bench_validation       Fig 2.3/6.1       fast-vs-exact simulator
+    bench_roofline         (TPU adaptation)  dry-run roofline summary
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_adaptive, bench_cache_hierarchy,
+                        bench_combinations, bench_loop_orders,
+                        bench_parallel, bench_roofline, bench_sparsity,
+                        bench_tile_swap, bench_top_candidates,
+                        bench_validation)
+
+ALL = {
+    "loop_orders": bench_loop_orders,
+    "top_candidates": bench_top_candidates,
+    "cache_hierarchy": bench_cache_hierarchy,
+    "parallel": bench_parallel,
+    "combinations": bench_combinations,
+    "sparsity": bench_sparsity,
+    "tile_swap": bench_tile_swap,
+    "adaptive": bench_adaptive,
+    "validation": bench_validation,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        mod = ALL[name]
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

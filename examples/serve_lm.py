@@ -1,0 +1,52 @@
+"""Serving example: batched prefill + greedy decode with KV caches.
+
+Works with any registry arch's smoke config (attention, MoE, SSM, hybrid).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+      PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b-smoke
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.serve_loop import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+
+    batch = {"tokens": jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (args.batch, cfg.encoder_seq, cfg.d_model),
+            jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.key(2),
+            (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+
+    out, stats = generate(model, params, batch,
+                          max_new_tokens=args.new_tokens)
+    print(f"arch={cfg.name} generated {out.shape} tokens")
+    print(f"prefill {stats.prefill_s*1e3:.1f}ms, decode "
+          f"{stats.decode_s*1e3:.1f}ms "
+          f"({stats.decode_tok_s:.0f} tok/s)")
+    print("sample:", out[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Design-space exploration — the thesis' Ch. 4/5 study in one script:
+Table 4.1 layers, 720-permutation sweeps, static candidates, top pairs,
+random-sampling bounds, and locality-aware neighbour-swap search.
+
+Run:  PYTHONPATH=src python examples/tune_conv.py
+"""
+import numpy as np
+
+from repro.configs.squeezenet_layers import TABLE_4_1
+from repro.core import cost_model as cm
+from repro.core import tuner
+from repro.core.loopnest import LOOPS
+
+
+def pname(p):
+    return "/".join(LOOPS[i] for i in p)
+
+
+def main():
+    layers = dict(TABLE_4_1)
+    sweeps = [tuner.sweep_layer(l) for l in layers.values()]
+
+    print("== per-layer best permutations (Fig 4.3) ==")
+    for (name, layer), sweep in zip(layers.items(), sweeps):
+        b = int(np.argmin(sweep.cycles))
+        w = int(np.argmax(sweep.cycles))
+        print(f"  {name:18s} best={pname(tuner.ALL_PERMS[b]):22s} "
+              f"worst/best={sweep.cycles[w]/sweep.cycles[b]:.2f}x")
+
+    print("== static candidates (Fig 4.8) ==")
+    for key, c in tuner.static_candidates(sweeps).items():
+        print(f"  {key:15s} {pname(c.perm):22s} avg={c.avg_speedup:.3f} "
+              f"worst={c.worst_speedup:.3f}")
+
+    print("== top pair (Fig 5.3) ==")
+    (a, b, avg, worst) = tuner.top_pairs(sweeps, n_best=1)[0]
+    print(f"  {pname(a)} + {pname(b)}: avg={avg:.3f} worst={worst:.3f}")
+
+    print("== random sampling (Fig 5.4) ==")
+    for conf, label in ((0.683, "1-sigma"), (0.954, "2-sigma")):
+        k = tuner.sample_size_for_confidence(sweeps, 0.9, conf)
+        print(f"  {label}: {k} random perms for a >=0.9-optimal pick")
+
+    print("== neighbour-swap search vs exhaustive (§7.2) ==")
+    layer = layers["initial-conf"]
+    score = lambda p: cm.simulate(layer, p).cycles  # noqa: E731
+    exhaustive = min(score(p) for p in tuner.ALL_PERMS)
+    p, s, evals = tuner.neighbor_swap_search(score, (0, 1, 2, 3, 4, 5))
+    p2, s2, evals2 = tuner.bfs_search(score, (0, 1, 2, 3, 4, 5), budget=80)
+    print(f"  greedy:   {pname(p):22s} {s/exhaustive:.3f}x-opt "
+          f"in {evals} evals (vs 720)")
+    print(f"  best-first: {pname(p2):20s} {s2/exhaustive:.3f}x-opt "
+          f"in {evals2} evals")
+
+
+if __name__ == "__main__":
+    main()

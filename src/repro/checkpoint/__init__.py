@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import Checkpointer, save, restore
+
+__all__ = ["Checkpointer", "save", "restore"]

@@ -1,0 +1,177 @@
+"""Atomic, async, mesh-elastic checkpointing.
+
+Format: one directory per step —
+
+    <dir>/step_00000010/manifest.json   tree structure, shapes, dtypes,
+                                        offsets, user metadata
+    <dir>/step_00000010/data.bin        concatenated raw leaf bytes
+
+Writes go to ``*.tmp`` and are renamed only when complete (atomic commit:
+a crash mid-write never corrupts the latest checkpoint).  Leaves are saved
+*gathered* (plain host arrays), so a restore can be resharded onto any
+mesh — the elastic-resume path (DESIGN.md §8): the sharding rules re-derive
+per-leaf shardings for whatever mesh the job restarts with.
+
+The async mode snapshots leaves to host in the caller's thread (cheap
+device->host copies) and writes in a background thread; ``wait()`` joins
+before the next save or at shutdown.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_DTYPE_TO_NP = {
+    "bfloat16": None,  # resolved via ml_dtypes lazily
+}
+
+
+def _np_dtype(name: str):
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+def _flatten(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(path: str, tree: Any, extra: Optional[Dict] = None) -> None:
+    """Synchronous atomic save of a pytree (+ JSON-able extra metadata)."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten(tree)
+    manifest: Dict[str, Any] = {"extra": extra or {}, "leaves": []}
+    offset = 0
+    with open(os.path.join(tmp, "data.bin"), "wb") as f:
+        for key, leaf in leaves:
+            arr = np.asarray(leaf)          # gathers sharded jax arrays
+            raw = arr.tobytes()
+            manifest["leaves"].append({
+                "path": key, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "offset": offset,
+                "nbytes": len(raw)})
+            f.write(raw)
+            offset += len(raw)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def restore(path: str, like: Optional[Any] = None
+            ) -> Tuple[Any, Dict]:
+    """Load a checkpoint.  With ``like`` (a pytree of arrays or
+    ShapeDtypeStructs) the result uses its treedef; otherwise a nested dict
+    keyed by the stored paths is returned."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.memmap(os.path.join(path, "data.bin"), dtype=np.uint8,
+                     mode="r")
+    by_path: Dict[str, np.ndarray] = {}
+    for entry in manifest["leaves"]:
+        dt = _np_dtype(entry["dtype"])
+        raw = data[entry["offset"]:entry["offset"] + entry["nbytes"]]
+        arr = np.frombuffer(raw.tobytes(), dtype=dt).reshape(
+            entry["shape"])
+        by_path[entry["path"]] = arr
+    if like is None:
+        nested: Dict[str, Any] = {}
+        for key, arr in by_path.items():
+            node = nested
+            parts = key.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+        return nested, manifest["extra"]
+    flat = _flatten(like)
+    leaves = []
+    for key, leaf in flat:
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = by_path[key]
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {want}")
+        leaves.append(arr)
+    tdef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(tdef, leaves), manifest["extra"]
+
+
+class Checkpointer:
+    """Step-indexed checkpoint manager with async writes and retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[len("step_"):]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        self.wait()
+        # Snapshot to host in the caller thread (device buffers may be
+        # donated right after this call returns).
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def _do():
+            save(self._step_dir(step), host_tree, extra)
+            self._gc()
+
+        if blocking:
+            _do()
+        else:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+
+    def restore_latest(self, like: Optional[Any] = None
+                       ) -> Optional[Tuple[int, Any, Dict]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = restore(self._step_dir(step), like)
+        return step, tree, extra
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

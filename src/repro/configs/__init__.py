@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES,
+                                shape_applicable, reduce_for_smoke)
+
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.qwen2_moe_a2_7b import CONFIG as _qwen2_moe
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4
+from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
+from repro.configs.qwen3_32b import CONFIG as _qwen3
+from repro.configs.minitron_4b import CONFIG as _minitron
+from repro.configs.nemotron_4_15b import CONFIG as _nemotron
+from repro.configs.phi3_mini_3_8b import CONFIG as _phi3
+from repro.configs.paligemma_3b import CONFIG as _paligemma
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+
+REGISTRY: Dict[str, ModelConfig] = {
+    c.name: c for c in [
+        _falcon_mamba, _qwen2_moe, _llama4, _rgemma, _qwen3,
+        _minitron, _nemotron, _phi3, _paligemma, _whisper,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return reduce_for_smoke(get_config(name[:-len("-smoke")]))
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    return sorted(REGISTRY)
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "REGISTRY",
+           "get_config", "list_archs", "shape_applicable",
+           "reduce_for_smoke"]

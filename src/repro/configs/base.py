@@ -1,0 +1,179 @@
+"""Config system: model, shape, mesh and training configs.
+
+Every assigned architecture is a :class:`ModelConfig` in its own module
+under ``repro/configs``; the registry resolves ``--arch <id>``.  Shapes
+(``train_4k`` …) are :class:`ShapeConfig`; (arch x shape) defines one
+dry-run / roofline cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # MLP / norm flavour
+    mlp_type: str = "swiglu"         # swiglu | relu2 | gelu
+    qk_norm: bool = False
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0                # routed-expert hidden size
+    capacity_factor: float = 1.25
+
+    # SSM (mamba1)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0                 # 0 -> ceil(d_model / 16)
+
+    # Hybrid (recurrentgemma): repeating block pattern
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rglru", "rglru", "attn")
+    local_window: int = 2048
+    lru_width: int = 0               # 0 -> d_model
+
+    # Encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # e.g. 1500 precomputed frames
+    cross_attention: bool = False
+
+    # VLM (paligemma): stub frontend supplies patch embeddings
+    num_image_tokens: int = 0
+
+    rope_theta: float = 10000.0
+    max_seq_len: int = 524288
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    source: str = ""                 # provenance note
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k: SSM state or bounded attention window."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + layers + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        if self.mlp_type == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        per_layer = attn + mlp
+        if self.n_experts:
+            ef = self.moe_d_ff or f
+            routed = self.n_experts * 3 * d * ef
+            shared = self.n_shared_experts * 3 * d * ef
+            per_layer = attn + routed + shared + d * self.n_experts
+        if self.family == "ssm":
+            di, st, dr = self.d_inner, self.ssm_state, self.resolved_dt_rank
+            per_layer = (d * 2 * di + di * self.ssm_conv
+                         + di * (dr + 2 * st) + dr * di + di * st + di
+                         + di * d)
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = self.n_layers * per_layer + emb
+        if self.encoder_layers:
+            total += self.encoder_layers * per_layer  # encoder stack
+            total += self.n_layers * (2 * d * hd * self.n_kv_heads
+                                      + d * hd * self.n_heads
+                                      + self.n_heads * hd * d)  # cross-attn
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig
+                     ) -> Tuple[bool, str]:
+    """Whether a (arch x shape) cell runs; reason if skipped (the
+    assignment's sub-quadratic rule for long_500k)."""
+    if shape.name == "long_500k" and not model.subquadratic:
+        return False, ("full-attention arch: 500k dense-KV decode excluded "
+                       "per shape table (needs sub-quadratic attention)")
+    return True, ""
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests: few layers, narrow
+    width, tiny vocab/experts — structure preserved."""
+    n_layers = min(cfg.n_layers, 2)
+    pattern = cfg.block_pattern
+    if pattern:
+        n_layers = len(pattern)      # one full pattern group
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        moe_d_ff=32 if cfg.moe_d_ff else 0,
+        n_experts=min(cfg.n_experts, 4),
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        ssm_state=8,
+        lru_width=0,
+        local_window=16,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        encoder_seq=min(cfg.encoder_seq, 24) if cfg.encoder_seq else 0,
+        num_image_tokens=min(cfg.num_image_tokens, 8)
+        if cfg.num_image_tokens else 0,
+        max_seq_len=512,
+        dtype="float32",
+    )

@@ -1,0 +1,15 @@
+"""Core: the paper's contribution as a composable library.
+
+- permutations: Hamiltonian-path indexing of loop permutations (§4.2)
+- loopnest:     the six-loop convolution nest and footprint math (§2.2)
+- cost_model:   fast analytic cache/TPU cost models (§2.3.1)
+- tracesim:     exact trace-driven cache simulator (validation)
+- tuner:        design-space search, static candidates, combinations (Ch.4-5)
+- adaptive:     run-time micro-profiling selection (§6.4)
+- schedule:     Schedule objects consumed by the Pallas kernels
+- sparsity:     dense-vs-sparse algorithm policy (§3.6, §6.2)
+"""
+from repro.core.loopnest import ConvLayer
+from repro.core.schedule import ConvSchedule, MatmulSchedule
+
+__all__ = ["ConvLayer", "ConvSchedule", "MatmulSchedule"]

@@ -1,0 +1,138 @@
+"""Run-time adaptive selection by micro-profiling (thesis §6.4 + DySel [3]).
+
+The thesis' closing result: *recent IPC is steady during convolution and
+predicts total runtime*, so briefly profiling a few candidate
+implementations at run time and committing to the best is sound.  On TPU
+the steady metric is per-step wall time (tokens/s): the
+:class:`AdaptiveSelector` cycles the top-K tuner candidates through the
+first real steps of a training/serving job, measures each, checks the
+steadiness assumption actually holds (coefficient of variation), and
+commits to the argmin for the rest of the run.
+
+This is the run-time half of the paper's explore-cheap / validate-accurate
+/ adapt methodology, and it is how the framework consumes the tuner's
+output in production (runtime/train_loop.py hooks it per layer shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Generic, List, Optional, Sequence, TypeVar
+
+import numpy as np
+
+S = TypeVar("S")  # schedule type
+
+
+def steadiness(samples: Sequence[float]) -> float:
+    """Coefficient of variation of step times — the thesis' 'recent IPC is
+    steady' check (Fig 6.5).  Small (< ~0.1) means a short profile
+    predicts the full run."""
+    a = np.asarray(list(samples), dtype=np.float64)
+    if len(a) < 2 or a.mean() == 0:
+        return 0.0
+    return float(a.std(ddof=1) / a.mean())
+
+
+def microprofile(candidates: Sequence[S],
+                 run: Callable[[S], None],
+                 repeats: int = 3,
+                 warmup: int = 1) -> Dict:
+    """Time each candidate (median of ``repeats`` after ``warmup``) and
+    return the winner with full measurements."""
+    timings: List[List[float]] = []
+    for cand in candidates:
+        for _ in range(warmup):
+            run(cand)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            run(cand)
+            ts.append(time.perf_counter() - t0)
+        timings.append(ts)
+    medians = [float(np.median(t)) for t in timings]
+    best = int(np.argmin(medians))
+    return {"best": candidates[best], "best_index": best,
+            "medians": medians, "timings": timings,
+            "steadiness": [steadiness(t) for t in timings]}
+
+
+@dataclasses.dataclass
+class _Slot(Generic[S]):
+    candidates: List[S]
+    samples: Dict[int, List[float]]
+    committed: Optional[S] = None
+    next_candidate: int = 0
+
+
+class AdaptiveSelector(Generic[S]):
+    """Online schedule selection embedded in a step loop.
+
+    Usage per step::
+
+        sched = sel.propose(key)        # schedule to use this step
+        ... run the step, measure dt ...
+        sel.observe(key, dt)            # feeds the profile
+
+    For the first ``probes_per_candidate * len(candidates)`` steps the
+    selector round-robins candidates; then it commits to the argmin median
+    — unless the steadiness check fails (CV above threshold), in which case
+    it keeps probing up to ``max_extra_probes`` more rounds (the thesis'
+    caveat: micro-profiling is only valid because the metric is steady).
+    """
+
+    def __init__(self, probes_per_candidate: int = 3,
+                 steadiness_threshold: float = 0.2,
+                 max_extra_probes: int = 2):
+        self.probes = probes_per_candidate
+        self.threshold = steadiness_threshold
+        self.max_extra = max_extra_probes
+        self._slots: Dict[str, _Slot] = {}
+
+    def register(self, key: str, candidates: Sequence[S]) -> None:
+        if key not in self._slots:
+            self._slots[key] = _Slot(list(candidates),
+                                     {i: [] for i in
+                                      range(len(candidates))})
+
+    def propose(self, key: str) -> S:
+        slot = self._slots[key]
+        if slot.committed is not None:
+            return slot.committed
+        if len(slot.candidates) == 1:
+            slot.committed = slot.candidates[0]
+            return slot.committed
+        idx = slot.next_candidate
+        return slot.candidates[idx]
+
+    def observe(self, key: str, dt: float) -> None:
+        slot = self._slots[key]
+        if slot.committed is not None:
+            return
+        idx = slot.next_candidate
+        slot.samples[idx].append(dt)
+        slot.next_candidate = (idx + 1) % len(slot.candidates)
+        min_n = min(len(v) for v in slot.samples.values())
+        if min_n < self.probes:
+            return
+        cvs = [steadiness(v[1:]) if len(v) > 2 else 0.0
+               for v in slot.samples.values()]
+        if (max(cvs) > self.threshold
+                and min_n < self.probes + self.max_extra):
+            return  # unsteady: keep probing
+        medians = [float(np.median(v[1:] if len(v) > 2 else v))
+                   for i, v in sorted(slot.samples.items())]
+        slot.committed = slot.candidates[int(np.argmin(medians))]
+
+    def committed(self, key: str) -> Optional[S]:
+        slot = self._slots.get(key)
+        return slot.committed if slot else None
+
+    def report(self) -> Dict[str, Dict]:
+        out = {}
+        for key, slot in self._slots.items():
+            out[key] = {
+                "committed": slot.committed,
+                "samples": {i: list(v) for i, v in slot.samples.items()},
+            }
+        return out

@@ -1,0 +1,407 @@
+"""Fast analytic cost models (thesis §2.3.1 — the "cache simulator" role).
+
+Two models share the footprint machinery of :mod:`repro.core.loopnest`:
+
+``CacheCostModel``
+    Paper-faithful: a multi-level cache model parameterised like thesis
+    Table 2.1 (L1 64 KB / L2 512 KB / 32 B blocks, latencies 3/10/30).  For a
+    loop permutation it predicts per-level misses and "cycles" with the same
+    accounting the thesis uses (1 cycle per instruction + hit latencies).
+    It is *analytic* — footprint mathematics instead of a trace — so one
+    query costs microseconds and the 720-permutation sweeps of Ch. 4/5 run
+    in seconds.  The exact trace-driven simulator in
+    :mod:`repro.core.tracesim` validates it (benchmarks/bench_validation).
+
+``TPUCostModel``
+    The hardware-adapted model: the "cache" is a VMEM block-residency budget
+    and misses become HBM→VMEM DMA bytes.  It scores Pallas schedules
+    (grid-axis order × block shapes) with a three-term roofline
+    (MXU compute / HBM bandwidth / DMA overheads) and is what the tuner uses
+    to pick kernel configurations for the LM architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import loopnest as ln
+from repro.core.loopnest import ConvLayer, LOOPS
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful cache hierarchy model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheLevel:
+    name: str
+    size_bytes: int
+    block_bytes: int
+    latency: int          # access latency in cycles (thesis Table 2.1)
+    associativity: int = 1  # kept for parity with tracesim; analytic model
+    #                         treats capacity as fully effective
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Thesis Table 2.1 defaults: Loki-like hierarchy."""
+    levels: Tuple[CacheLevel, ...] = (
+        CacheLevel("L1", 64 * 1024, 32, 3),
+        CacheLevel("L2", 512 * 1024, 32, 10, associativity=8),
+    )
+    mem_latency: int = 30
+    cpi_compute: float = 1.0   # non-memory instructions per iteration cost
+    instrs_per_iter: float = 4.0  # mul+add+addr+branch (post §3.1 opts)
+    atomic_cost: float = 10.0  # extra cycles per atomic out[] update (§3.4)
+
+    def with_caches(self, l1_kb: int, l2_kb: int) -> "MachineModel":
+        lv = (CacheLevel("L1", l1_kb * 1024, 32, 3),
+              CacheLevel("L2", l2_kb * 1024, 32, 10, associativity=8))
+        return dataclasses.replace(self, levels=lv)
+
+
+# The three cache hierarchies of thesis §5.1.
+HIERARCHIES: Dict[str, MachineModel] = {
+    "16K/128K": MachineModel().with_caches(16, 128),
+    "32K/512K": MachineModel().with_caches(32, 512),
+    "64K/960K": MachineModel().with_caches(64, 960),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSimResult:
+    cycles: float
+    accesses: float
+    misses: Dict[str, float]          # per level name
+    misses_by_array: Dict[str, Dict[str, float]]  # level -> array -> misses
+    working_set_blocks: Dict[str, float]   # level -> fitting-depth footprint
+
+
+def _fetches_per_level(layer: ConvLayer, perm: Sequence[int],
+                       capacity_blocks: float, block_bytes: int,
+                       ) -> Dict[str, float]:
+    """Block fetches ("misses") per array for one cache level.
+
+    Recursive footprint model, innermost to outermost (see DESIGN.md §2):
+
+    * If one iteration of the loop at depth d keeps the *total* inner
+      footprint within capacity, all reuse across that loop's iterations is
+      realised: fetches collapse to the distinct blocks over depths >= d
+      (this also captures sliding-window halo reuse exactly, because
+      footprints of coupled dims use the a+b-1 extent arithmetic).
+    * Otherwise the inner working set is evicted between iterations and
+      fetches multiply by the trip count — whether or not the loop indexes
+      the array (a non-indexing loop re-touches the same, evicted, blocks).
+    * Hot-set exception: an array whose own full-depth footprint is <= half
+      the capacity is re-touched every iteration and survives streaming
+      (LRU keeps re-used blocks); its fetches stay at the one-pass count.
+    """
+    trips = layer.trips()
+    n = len(perm)
+    # Total footprint (blocks, all arrays) at each depth d = loops [d..n).
+    total_fp = []
+    for d in range(n + 1):
+        inner = ln.inner_set(perm, d)
+        total_fp.append(sum(
+            ln.footprint_blocks(layer, a, inner, block_bytes)
+            for a in ln.ARRAY_DIMS))
+
+    fetches: Dict[str, float] = {}
+    for array in ln.ARRAY_DIMS:
+        full_fp = ln.footprint_blocks(layer, array, ln.inner_set(perm, 0),
+                                      block_bytes)
+        if full_fp <= capacity_blocks / 2:
+            # Hot set: survives any streaming; compulsory misses only.
+            fetches[array] = float(full_fp)
+            continue
+        f = 1.0  # innermost body touches one block of each array
+        for d in range(n - 1, -1, -1):
+            name = LOOPS[perm[d]]
+            if total_fp[d] <= capacity_blocks:
+                # Whole sub-nest at depth d fits: one-pass distinct blocks.
+                f = float(ln.footprint_blocks(
+                    layer, array, ln.inner_set(perm, d), block_bytes))
+            else:
+                inner_fits = total_fp[d + 1] <= capacity_blocks
+                if inner_fits and name not in ln.ARRAY_LOOPS[array]:
+                    # Same blocks each iteration and they survive (one
+                    # iteration's set fits): no multiplier.
+                    pass
+                elif inner_fits and name in ln.ARRAY_LOOPS[array]:
+                    # Fresh data each iteration, but coupled (halo) overlap
+                    # is reused: charge distinct blocks over this depth.
+                    f = float(ln.footprint_blocks(
+                        layer, array, ln.inner_set(perm, d), block_bytes))
+                else:
+                    f *= trips[name]
+        fetches[array] = f
+    return fetches
+
+
+def simulate(layer: ConvLayer, perm: Sequence[int],
+             machine: MachineModel = MachineModel(),
+             threads: int = 1,
+             partial_sums: bool = True) -> CacheSimResult:
+    """Predict cycles / per-level misses for one loop permutation.
+
+    ``threads`` parallelises the outermost loop (thesis §3.4): effective
+    parallelism is capped by that loop's trip count, and permutations whose
+    outermost loop does not index ``out`` pay an atomic-update cost per
+    output write.
+    """
+    trips = layer.trips()
+    per_iter = ln.accesses_per_iteration(partial_sums)
+    iters = layer.iterations
+
+    accesses = sum(per_iter.values()) * iters
+    out_writes = (ln.out_writes_with_partial_sums(layer, perm)
+                  if partial_sums else 0)
+    accesses += 2 * out_writes  # read+write per accumulator spill
+
+    misses: Dict[str, float] = {}
+    misses_by_array: Dict[str, Dict[str, float]] = {}
+    ws: Dict[str, float] = {}
+    for level in machine.levels:
+        cap_blocks = level.size_bytes / level.block_bytes
+        per_array = _fetches_per_level(layer, perm, cap_blocks,
+                                       level.block_bytes)
+        if partial_sums:
+            # out[] traffic at block granularity: each spill run touches its
+            # block once; bounded by one access per spill.
+            blk_elems = level.block_bytes // layer.elem_bytes
+            per_array["out"] = min(per_array["out"], float(out_writes))
+            per_array["out"] = max(per_array["out"],
+                                   layer.oc * layer.h * layer.w / blk_elems)
+        misses_by_array[level.name] = per_array
+        misses[level.name] = sum(per_array.values())
+        ws[level.name] = cap_blocks
+
+    # Cycle accounting exactly as thesis §2.3.1: every access costs the
+    # latency of the level it hits in; plus 1 cycle per instruction.
+    l1, l2 = machine.levels[0], machine.levels[1]
+    m1, m2 = misses["L1"], misses["L2"]
+    m2 = min(m2, m1)  # inclusive hierarchy sanity
+    hits_l1 = max(accesses - m1, 0.0)
+    hits_l2 = max(m1 - m2, 0.0)
+    cycles = (iters * machine.instrs_per_iter * machine.cpi_compute
+              + hits_l1 * l1.latency + hits_l2 * l2.latency
+              + m2 * machine.mem_latency)
+
+    if threads > 1:
+        outer = LOOPS[perm[0]]
+        par = min(threads, trips[outer])
+        cycles = cycles / par
+        if outer not in ln.OUTPUT_LOOPS:
+            # Threads race on out[]: atomic per output update (§3.4).
+            upd = out_writes if partial_sums else iters
+            cycles += machine.atomic_cost * upd / max(par, 1)
+
+    return CacheSimResult(cycles=cycles, accesses=accesses, misses=misses,
+                          misses_by_array=misses_by_array,
+                          working_set_blocks=ws)
+
+
+def sweep_permutations(layer: ConvLayer,
+                       machine: MachineModel = MachineModel(),
+                       threads: int = 1,
+                       perms: Optional[Sequence[Sequence[int]]] = None,
+                       ) -> List[Tuple[Tuple[int, ...], CacheSimResult]]:
+    """All-720 sweep (thesis Ch. 4 experimental setup)."""
+    import itertools
+    if perms is None:
+        perms = list(itertools.permutations(range(6)))
+    return [(tuple(p), simulate(layer, p, machine, threads)) for p in perms]
+
+
+# ---------------------------------------------------------------------------
+# TPU-adapted model (hardware adaptation — see DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """TPU v5e per-chip numbers (roofline constants from the brief)."""
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # bytes/s
+    ici_bw: float = 50e9              # bytes/s per link
+    vmem_bytes: int = 96 * 1024 * 1024   # usable VMEM budget
+    mxu_dim: int = 128                # systolic tile
+    dma_latency_s: float = 1e-6       # fixed per-DMA overhead
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    flops: float
+    hbm_bytes: float
+    vmem_peak: float
+    grid_steps: int
+    compute_s: float
+    memory_s: float
+    overhead_s: float
+
+    @property
+    def time_s(self) -> float:
+        return max(self.compute_s, self.memory_s) + self.overhead_s
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, m: int) -> int:
+    return _ceil_div(a, m) * m
+
+
+def conv_schedule_cost(layer: ConvLayer,
+                       grid_order: Sequence[str],
+                       block: Dict[str, int],
+                       spec: TPUSpec = TPUSpec(),
+                       elem_bytes: int = 2) -> KernelCost:
+    """Cost of the Pallas direct-conv kernel for a (grid order, block) pick.
+
+    ``grid_order``: permutation of ("oc", "ic", "y", "x") outermost→
+    innermost (the TPU-legal projection of the thesis' 6-loop space; ky/kx
+    run in-kernel — see DESIGN.md §2 assumption 2).
+    ``block``: block sizes {"oc","ic","y","x"}.
+
+    HBM traffic is footprint arithmetic at *block* granularity: a block is
+    fetched once per visit, and a visit repeats whenever a grid axis that
+    the operand does not depend on iterates *outside* the operand's last
+    dependent axis.  Output blocks are written once if the reduction axis
+    (ic) is innermost (VMEM partial sums — thesis §3.3), else flushed and
+    refetched per reduction step (the model's penalty for reduction-outer
+    orders).
+    """
+    trips = {"oc": _ceil_div(layer.oc, block["oc"]),
+             "ic": _ceil_div(layer.ic, block["ic"]),
+             "y": _ceil_div(layer.h, block["y"]),
+             "x": _ceil_div(layer.w, block["x"])}
+    order = list(grid_order)
+    assert sorted(order) == sorted(trips), f"bad grid order {order}"
+    grid_steps = math.prod(trips.values())
+
+    # Operand block shapes and bytes.
+    out_blk = block["oc"] * block["y"] * block["x"]
+    wgt_blk = block["oc"] * block["ic"] * layer.kh * layer.kw
+    img_blk = (block["ic"] * (block["y"] + layer.kh - 1)
+               * (block["x"] + layer.kw - 1))
+    dep = {"out": {"oc", "y", "x"}, "wgt": {"oc", "ic"},
+           "img": {"ic", "y", "x"}}
+    blk_elems = {"out": out_blk, "wgt": wgt_blk, "img": img_blk}
+
+    def fetches(op: str) -> float:
+        # Distinct blocks = product of trips over dependent axes; each
+        # distinct block refetched once per combination of *outer*
+        # non-dependent axes (it is evicted between revisits unless no
+        # dependent axis iterates in between — i.e. non-dependent axes that
+        # are innermost contiguous cause residency).
+        distinct = math.prod(trips[a] for a in dep[op])
+        refetch = 1.0
+        # walk outermost -> innermost; a non-dependent axis multiplies
+        # refetches only if some dependent axis sits deeper (otherwise the
+        # block simply stays resident across its iterations).
+        for i, a in enumerate(order):
+            if a in dep[op]:
+                continue
+            if any(b in dep[op] for b in order[i + 1:]):
+                refetch *= trips[a]
+        return distinct * refetch
+
+    hbm = 0.0
+    hbm += fetches("wgt") * wgt_blk * elem_bytes
+    hbm += fetches("img") * img_blk * elem_bytes
+    # Output: written once per distinct block if reduction (ic) is the
+    # innermost of the axes below the last out-dependent axis; otherwise
+    # each revisit costs a read+write round trip (no VMEM accumulation).
+    out_distinct = trips["oc"] * trips["y"] * trips["x"]
+    out_visits = fetches("out")
+    if out_visits <= out_distinct:
+        hbm += out_distinct * out_blk * elem_bytes          # write once
+    else:
+        hbm += (2 * out_visits - out_distinct) * out_blk * elem_bytes
+
+    # FLOPs: MXU pads (oc, ic) contractions to 128 and the spatial dim to 8.
+    eff_oc = _round_up(min(block["oc"], layer.oc), spec.mxu_dim)
+    eff_ic = _round_up(min(block["ic"], layer.ic), spec.mxu_dim)
+    spatial = min(block["y"], layer.h) * min(block["x"], layer.w)
+    eff_spatial = _round_up(spatial, 8)
+    flops_per_step = 2.0 * eff_oc * eff_ic * eff_spatial * layer.kh * layer.kw
+    flops = flops_per_step * grid_steps
+    useful_flops = 2.0 * layer.macs
+
+    vmem = (out_blk * 4 + wgt_blk * elem_bytes + img_blk * elem_bytes)
+    compute_s = flops / spec.peak_flops
+    memory_s = hbm / spec.hbm_bw
+    overhead_s = spec.dma_latency_s * grid_steps
+    if vmem > spec.vmem_bytes:
+        # Infeasible schedule: huge penalty rather than exclusion so search
+        # code can still rank it.
+        overhead_s += 1e3
+    return KernelCost(flops=useful_flops, hbm_bytes=hbm, vmem_peak=vmem,
+                      grid_steps=grid_steps, compute_s=compute_s,
+                      memory_s=memory_s, overhead_s=overhead_s)
+
+
+def matmul_schedule_cost(m: int, n: int, k: int,
+                         bm: int, bn: int, bk: int,
+                         order: Sequence[str] = ("m", "n", "k"),
+                         spec: TPUSpec = TPUSpec(),
+                         elem_bytes: int = 2,
+                         resident_rhs: bool = False) -> KernelCost:
+    """Cost of the tiled matmul kernel C[m,n] += A[m,k] B[k,n].
+
+    ``resident_rhs`` pins the whole RHS (weights) in VMEM — the kernel-level
+    "tiles-for-L2" trade (thesis §6.3): VMEM spent caching weights vs
+    streaming larger activation blocks.
+    """
+    trips = {"m": _ceil_div(m, bm), "n": _ceil_div(n, bn),
+             "k": _ceil_div(k, bk)}
+    grid_steps = math.prod(trips.values())
+    dep = {"A": {"m", "k"}, "B": {"k", "n"}, "C": {"m", "n"}}
+    blk = {"A": bm * bk, "B": bk * bn, "C": bm * bn}
+
+    def fetches(op: str) -> float:
+        distinct = math.prod(trips[a] for a in dep[op])
+        refetch = 1.0
+        for i, a in enumerate(order):
+            if a in dep[op]:
+                continue
+            if any(b in dep[op] for b in list(order)[i + 1:]):
+                refetch *= trips[a]
+        return distinct * refetch
+
+    hbm = fetches("A") * blk["A"] * elem_bytes
+    if resident_rhs:
+        hbm += n * k * elem_bytes  # B loaded exactly once
+        vmem_b = n * k * elem_bytes
+    else:
+        hbm += fetches("B") * blk["B"] * elem_bytes
+        vmem_b = blk["B"] * elem_bytes
+    c_distinct = trips["m"] * trips["n"]
+    c_visits = fetches("C")
+    if c_visits <= c_distinct:
+        hbm += c_distinct * blk["C"] * elem_bytes
+    else:
+        hbm += (2 * c_visits - c_distinct) * blk["C"] * elem_bytes
+
+    eff_m = _round_up(min(bm, m), 8)
+    eff_n = _round_up(min(bn, n), spec.mxu_dim)
+    eff_k = _round_up(min(bk, k), spec.mxu_dim)
+    flops = 2.0 * eff_m * eff_n * eff_k * grid_steps
+    vmem = blk["A"] * elem_bytes + vmem_b + blk["C"] * 4
+    compute_s = flops / spec.peak_flops
+    memory_s = hbm / spec.hbm_bw
+    overhead_s = spec.dma_latency_s * grid_steps
+    if vmem > spec.vmem_bytes:
+        overhead_s += 1e3
+    return KernelCost(flops=2.0 * m * n * k, hbm_bytes=hbm, vmem_peak=vmem,
+                      grid_steps=grid_steps, compute_s=compute_s,
+                      memory_s=memory_s, overhead_s=overhead_s)

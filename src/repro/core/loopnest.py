@@ -1,0 +1,190 @@
+"""The six-loop direct-convolution nest (thesis §2.2, Fig 3.1/3.2).
+
+The thesis studies the nest::
+
+    for oc in range(OC):                  # output channels
+      for ic in range(IC):                # input channels
+        for y in range(H):                # image height
+          for x in range(W):              # image width
+            for ky in range(KH):          # kernel height
+              for kx in range(KW):        # kernel width
+                out[oc,y,x] += wgt[oc,ic,ky,kx] * img[ic,y+ky,x+kx]
+
+under all 720 orderings of the six loops.  This module gives the symbolic
+machinery the cost models need: per-array *footprints* (distinct elements /
+cache blocks touched by the loops below a given depth), trip counts, and the
+output-index dependence set that decides which parallelisations are
+"atomic-free" (thesis §3.4).
+
+Everything is exact combinatorics — no traces — so a footprint query costs
+microseconds and the 720-permutation sweeps of Ch. 4/5 are cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+# Canonical loop order (permutation identity): matches thesis Fig 3.1.
+LOOPS: Tuple[str, ...] = ("oc", "ic", "y", "x", "ky", "kx")
+LOOP_INDEX: Dict[str, int] = {name: i for i, name in enumerate(LOOPS)}
+
+# Loops whose value appears in the *output* index (thesis §3.4: parallelising
+# any of these partitions out[] across threads => no atomics needed).
+OUTPUT_LOOPS = frozenset({"oc", "y", "x"})
+# Reduction loops (their iterations accumulate into the same out element).
+REDUCTION_LOOPS = frozenset({"ic", "ky", "kx"})
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """One convolutional layer's parameters (thesis Table 4.1 columns)."""
+
+    oc: int          # output channels
+    ic: int          # input channels
+    h: int           # image height (output height; 'same' indexing as thesis)
+    w: int           # image width
+    kh: int          # kernel height
+    kw: int          # kernel width
+    elem_bytes: int = 4   # thesis uses 32-bit words
+
+    def trips(self) -> Dict[str, int]:
+        return {"oc": self.oc, "ic": self.ic, "y": self.h, "x": self.w,
+                "ky": self.kh, "kx": self.kw}
+
+    @property
+    def iterations(self) -> int:
+        """Total inner-body iterations (thesis §2.2: product of all six)."""
+        return self.oc * self.ic * self.h * self.w * self.kh * self.kw
+
+    @property
+    def macs(self) -> int:
+        return self.iterations
+
+    def array_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        return {
+            "out": (self.oc, self.h, self.w),
+            "wgt": (self.oc, self.ic, self.kh, self.kw),
+            "img": (self.ic, self.h + self.kh - 1, self.w + self.kw - 1),
+        }
+
+    def array_bytes(self) -> Dict[str, int]:
+        return {k: math.prod(v) * self.elem_bytes
+                for k, v in self.array_shapes().items()}
+
+
+# Array access functions: each array dimension is driven by a *group* of
+# loops.  A group of more than one loop means the index is the sum of those
+# loop variables (the sliding window: y+ky, x+kx).
+ARRAY_DIMS: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "out": (("oc",), ("y",), ("x",)),
+    "wgt": (("oc",), ("ic",), ("ky",), ("kx",)),
+    "img": (("ic",), ("y", "ky"), ("x", "kx")),
+}
+
+# Loops that appear anywhere in an array's index (its "dependence set" S_A).
+ARRAY_LOOPS: Dict[str, frozenset] = {
+    name: frozenset(l for grp in dims for l in grp)
+    for name, dims in ARRAY_DIMS.items()
+}
+
+
+def dim_extent(layer: ConvLayer, group: Tuple[str, ...],
+               inner: frozenset) -> int:
+    """Distinct index values of one array dimension when only the loops in
+    ``inner`` vary (others pinned).  For a coupled dimension (y+ky) the
+    distinct values of a sum of independent ranges [0,a)+[0,b) number
+    a+b-1 — this is the sliding-window halo arithmetic."""
+    trips = layer.trips()
+    total = 0
+    active = 0
+    for l in group:
+        if l in inner:
+            total += trips[l]
+            active += 1
+    if active == 0:
+        return 1
+    return total - (active - 1)
+
+
+def footprint_elems(layer: ConvLayer, array: str, inner: frozenset) -> int:
+    """Distinct elements of ``array`` touched while loops in ``inner`` run a
+    full pass (outer loops pinned)."""
+    return math.prod(dim_extent(layer, g, inner) for g in ARRAY_DIMS[array])
+
+
+def footprint_blocks(layer: ConvLayer, array: str, inner: frozenset,
+                     block_bytes: int) -> int:
+    """Distinct cache blocks touched.  The last array dimension is
+    contiguous in memory (thesis §3.1 linearisation); trailing dimensions
+    that are spanned *fully* merge into one contiguous run."""
+    dims = ARRAY_DIMS[array]
+    shape = _array_shape(layer, array)
+    extents = [dim_extent(layer, g, inner) for g in dims]
+    blk_elems = max(1, block_bytes // layer.elem_bytes)
+
+    # Merge trailing fully-covered dims into a single contiguous extent.
+    contig = extents[-1]
+    d = len(dims) - 1
+    while d > 0 and extents[d] == shape[d]:
+        contig = extents[d - 1] * math.prod(shape[d:])
+        d -= 1
+    other = math.prod(extents[:d]) if d > 0 else 1
+    # A run of `contig` elements straddles ceil(contig/blk) blocks (+1 for
+    # misalignment on average; we take the aligned count, as the thesis'
+    # arrays are malloc'd block-aligned in the simulator).
+    return other * math.ceil(contig / blk_elems)
+
+
+def _array_shape(layer: ConvLayer, array: str) -> Tuple[int, ...]:
+    return ConvLayer.array_shapes(layer)[array]
+
+
+def inner_set(perm: Sequence[int], depth: int) -> frozenset:
+    """Loops strictly below ``depth`` in permutation ``perm`` (depth d means
+    loops at positions d..5 are 'inner').  ``perm`` maps position->loop id
+    (position 0 = outermost)."""
+    return frozenset(LOOPS[perm[i]] for i in range(depth, len(perm)))
+
+
+def perm_loops(perm: Sequence[int]) -> Tuple[str, ...]:
+    """Loop names outermost->innermost for a permutation of range(6)."""
+    return tuple(LOOPS[i] for i in perm)
+
+
+def loops_to_perm(names: Sequence[str]) -> Tuple[int, ...]:
+    return tuple(LOOP_INDEX[n] for n in names)
+
+
+def accesses_per_iteration(partial_sums: bool) -> Dict[str, float]:
+    """Memory references issued by one inner-body iteration.
+
+    Without the partial-sums optimisation (thesis §3.3) the body reads and
+    writes ``out`` every iteration (2 refs) plus one read each of wgt/img.
+    With partial sums, the accumulator lives in a register and ``out`` is
+    only touched when the innermost *reduction-dependent* run finishes;
+    CacheCostModel accounts for that separately, so here out's per-iteration
+    cost is 0 and the model adds the boundary writes.
+    """
+    if partial_sums:
+        return {"img": 1.0, "wgt": 1.0, "out": 0.0}
+    return {"img": 1.0, "wgt": 1.0, "out": 2.0}
+
+
+def out_writes_with_partial_sums(layer: ConvLayer,
+                                 perm: Sequence[int]) -> int:
+    """Number of out[] memory writes when a register accumulator is used
+    (thesis Fig 3.4): one write (plus one read, except on first visit) per
+    *maximal innermost run of reduction loops*.  If the innermost k loops
+    are all reduction loops with trip product R, out is touched
+    iterations/R times; the accumulator covers the run."""
+    trips = {"oc": layer.oc, "ic": layer.ic, "y": layer.h, "x": layer.w,
+             "ky": layer.kh, "kx": layer.kw}
+    run = 1
+    for pos in range(len(perm) - 1, -1, -1):
+        name = LOOPS[perm[pos]]
+        if name in REDUCTION_LOOPS:
+            run *= trips[name]
+        else:
+            break
+    return layer.iterations // run

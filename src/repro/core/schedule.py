@@ -1,0 +1,57 @@
+"""Schedule: the unit of the thesis' design space, as a first-class object.
+
+A :class:`Schedule` is one point in the optimisation space the thesis
+explores — a loop/grid order plus block (tile) shapes plus the VMEM-split
+("tiles-for-L2", §6.3) choice.  The tuner produces ranked schedules from the
+cost model; the adaptive runtime (core/adaptive.py) micro-profiles the top
+few and commits; the kernels consume a schedule as launch parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSchedule:
+    grid_order: Tuple[str, ...]           # permutation of (oc, ic, y, x)
+    block: Tuple[Tuple[str, int], ...]    # hashable block dict
+
+    def block_dict(self) -> Dict[str, int]:
+        return dict(self.block)
+
+    @staticmethod
+    def make(grid_order, block: Dict[str, int]) -> "ConvSchedule":
+        return ConvSchedule(tuple(grid_order),
+                            tuple(sorted(block.items())))
+
+    def run(self, img: jnp.ndarray, wgt: jnp.ndarray, *,
+            interpret: bool = True) -> jnp.ndarray:
+        from repro.kernels.conv2d import conv2d
+        return conv2d(img, wgt, block=self.block_dict(),
+                      grid_order=self.grid_order, interpret=interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulSchedule:
+    grid_order: Tuple[str, ...]           # permutation of (m, n, k)
+    block: Tuple[Tuple[str, int], ...]
+    resident_rhs: bool = False            # the "tiles-for-L2" switch
+
+    def block_dict(self) -> Dict[str, int]:
+        return dict(self.block)
+
+    @staticmethod
+    def make(grid_order, block: Dict[str, int],
+             resident_rhs: bool = False) -> "MatmulSchedule":
+        return MatmulSchedule(tuple(grid_order),
+                              tuple(sorted(block.items())), resident_rhs)
+
+    def run(self, a: jnp.ndarray, b: jnp.ndarray, *,
+            interpret: bool = True) -> jnp.ndarray:
+        from repro.kernels.matmul import matmul
+        return matmul(a, b, block=self.block_dict(),
+                      grid_order=self.grid_order,
+                      resident_rhs=self.resident_rhs, interpret=interpret)

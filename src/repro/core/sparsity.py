@@ -1,0 +1,77 @@
+"""Dense-vs-sparse algorithm policy (thesis §3.6 + §6.2, Fig 6.2).
+
+The thesis' finding: the sparse algorithm wins only below a density
+crossover, and dense regions concentrated on one core become stragglers.
+The TPU adaptation works at *block* granularity (see
+kernels/sparse_conv): expected sparse-kernel time scales with block density
+and with the nnz imbalance across output-channel blocks (the straggler
+factor — the sequential grid executes per-oc-block work back to back, and
+on a parallel mesh the slowest shard gates the step).
+
+``choose_algorithm`` makes the static pick from the cost model;
+``crossover_density`` computes the break-even point the thesis plots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import cost_model as cm
+from repro.core.loopnest import ConvLayer
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityDecision:
+    algorithm: str              # "dense" | "sparse"
+    dense_time_s: float
+    sparse_time_s: float
+    density: float
+    imbalance: float
+
+
+def sparse_time_estimate(dense: cm.KernelCost, density: float,
+                         imbalance: float,
+                         check_overhead: float = 0.05) -> float:
+    """Expected sparse-kernel time: compute and DMA scale with block
+    density; the grid bookkeeping adds a small per-step overhead (the
+    thesis' 'checks'); imbalance stretches the critical path when the
+    oc-block work is spread across parallel units."""
+    busy = max(dense.compute_s, dense.memory_s)
+    return (busy * density * imbalance
+            + dense.overhead_s * (1.0 + check_overhead))
+
+
+def choose_algorithm(layer: ConvLayer, block: Dict[str, int],
+                     density: float, imbalance: float = 1.0,
+                     spec: cm.TPUSpec = cm.TPUSpec(),
+                     grid_order=("oc", "y", "x", "ic"),
+                     elem_bytes: int = 2) -> SparsityDecision:
+    dense = cm.conv_schedule_cost(
+        layer, grid_order,
+        {"oc": block["oc"], "ic": block["ic"],
+         "y": block.get("y", layer.h), "x": block.get("x", layer.w)},
+        spec, elem_bytes)
+    sparse = sparse_time_estimate(dense, density, imbalance)
+    algo = "sparse" if sparse < dense.time_s else "dense"
+    return SparsityDecision(algorithm=algo, dense_time_s=dense.time_s,
+                            sparse_time_s=sparse, density=density,
+                            imbalance=imbalance)
+
+
+def crossover_density(layer: ConvLayer, block: Dict[str, int],
+                      imbalance: float = 1.0,
+                      spec: cm.TPUSpec = cm.TPUSpec(),
+                      elem_bytes: int = 2,
+                      tol: float = 1e-3) -> float:
+    """Density at which sparse and dense predicted times cross (bisection;
+    the thesis' Fig 6.2 break-even point)."""
+    lo, hi = 0.0, 1.0
+    while hi - lo > tol:
+        mid = (lo + hi) / 2
+        d = choose_algorithm(layer, block, mid, imbalance, spec,
+                             elem_bytes=elem_bytes)
+        if d.algorithm == "sparse":
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2

@@ -1,0 +1,294 @@
+"""Design-space search (thesis Ch. 4–5) over loop orders and schedules.
+
+Offline part of the thesis' methodology: sweep the permutation space with
+the fast cost model, derive *static candidates* (single permutations that
+are near-optimal across a layer design space — Fig 4.7/4.8), *top-K
+combinations* (pairs selected per layer by quick profiling — Fig 5.3),
+*random-sampling bounds* (Fig 5.4), and locality-aware *neighbour-swap
+search* on the permutohedron (the thesis' proposed future work, §7.2,
+enabled by the Hamiltonian index).
+
+The TPU half tunes actual kernel schedules: grid order × block shapes ×
+resident-weights, ranked by the TPU cost model; the adaptive runtime
+(core/adaptive.py) then micro-profiles the top few.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import permutations as perms
+from repro.core.loopnest import ConvLayer
+from repro.core.schedule import ConvSchedule, MatmulSchedule
+
+Perm = Tuple[int, ...]
+ALL_PERMS: Tuple[Perm, ...] = tuple(itertools.permutations(range(6)))
+
+
+# ---------------------------------------------------------------------------
+# Sweeps and signatures (thesis Ch. 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    """720-permutation sweep of one layer: the thesis' 'signature'."""
+    layer: ConvLayer
+    cycles: np.ndarray      # [720], indexed by lex order (ALL_PERMS)
+    l1_misses: np.ndarray
+    l2_misses: np.ndarray
+
+    def signature(self, metric: str = "cycles",
+                  indexing: str = "hamiltonian") -> np.ndarray:
+        """Metric reordered by an indexing function (Fig 4.2)."""
+        vals = {"cycles": self.cycles, "l1": self.l1_misses,
+                "l2": self.l2_misses}[metric]
+        order = np.empty(len(ALL_PERMS), dtype=np.int64)
+        for i, p in enumerate(ALL_PERMS):
+            if indexing == "hamiltonian":
+                order[perms.hamiltonian_index(p)] = i
+            elif indexing == "lex":
+                order[perms.lex_index(p)] = i
+            elif indexing == "revlex":
+                order[perms.revlex_index(p)] = i
+            else:
+                raise ValueError(indexing)
+        return vals[order]
+
+
+def sweep_layer(layer: ConvLayer,
+                machine: cm.MachineModel = cm.MachineModel(),
+                threads: int = 1) -> SweepResult:
+    cycles = np.empty(len(ALL_PERMS))
+    l1 = np.empty(len(ALL_PERMS))
+    l2 = np.empty(len(ALL_PERMS))
+    for i, p in enumerate(ALL_PERMS):
+        r = cm.simulate(layer, p, machine, threads)
+        cycles[i] = r.cycles
+        l1[i] = r.misses["L1"]
+        l2[i] = r.misses["L2"]
+    return SweepResult(layer=layer, cycles=cycles, l1_misses=l1,
+                       l2_misses=l2)
+
+
+def speedup_matrix(sweeps: Sequence[SweepResult],
+                   metric: str = "cycles") -> np.ndarray:
+    """S[l, p] = best(layer l) / metric(layer l, perm p)  (in (0, 1];
+    1 = per-layer optimal).  The thesis' normalised 'speedup' measure."""
+    rows = []
+    for s in sweeps:
+        v = s.cycles if metric == "cycles" else (
+            s.l2_misses if metric == "l2" else s.l1_misses)
+        v = np.maximum(v, 1e-12)
+        rows.append(v.min() / v)
+    return np.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# Static candidates (thesis §4.3, Fig 4.7/4.8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    perm: Perm
+    avg_speedup: float
+    worst_speedup: float
+    criterion: str
+
+
+def static_candidates(sweeps: Sequence[SweepResult]) -> Dict[str, Candidate]:
+    """The thesis' three candidates: top average (cycles), top worst-case
+    (cycles), top average (L2 misses)."""
+    s_cyc = speedup_matrix(sweeps, "cycles")
+    s_l2 = speedup_matrix(sweeps, "l2")
+    out: Dict[str, Candidate] = {}
+
+    avg = s_cyc.mean(axis=0)
+    p = int(avg.argmax())
+    out["top_average"] = Candidate(ALL_PERMS[p], float(avg[p]),
+                                   float(s_cyc[:, p].min()), "cycles/avg")
+    worst = s_cyc.min(axis=0)
+    p = int(worst.argmax())
+    out["top_worst_case"] = Candidate(ALL_PERMS[p], float(avg[p]),
+                                      float(worst[p]), "cycles/worst")
+    avg2 = s_l2.mean(axis=0)
+    p = int(avg2.argmax())
+    out["top_l2"] = Candidate(ALL_PERMS[p], float(s_cyc[:, p].mean()),
+                              float(s_cyc[:, p].min()), "l2/avg")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Top-K combinations (thesis §5.3.1, Fig 5.3)
+# ---------------------------------------------------------------------------
+
+def top_pairs(sweeps: Sequence[SweepResult], metric: str = "cycles",
+              n_best: int = 5) -> List[Tuple[Perm, Perm, float, float]]:
+    """Best pairs of permutations when, per layer, the better of the two is
+    used (the micro-profiling pick).  Exact over all 720*719/2 pairs,
+    vectorised.  Returns (perm_a, perm_b, avg_speedup, worst_speedup)."""
+    S = speedup_matrix(sweeps, metric)            # [L, P]
+    P = S.shape[1]
+    best: List[Tuple[float, float, int, int]] = []
+    for i in range(P):
+        pair = np.maximum(S[:, i:i + 1], S)       # [L, P]
+        avg = pair.mean(axis=0)
+        avg[:i + 1] = -1.0                        # dedupe (j > i only)
+        j = int(avg.argmax())
+        worst = float(pair[:, j].min())
+        best.append((float(avg[j]), worst, i, j))
+    best.sort(reverse=True)
+    return [(ALL_PERMS[i], ALL_PERMS[j], a, w) for a, w, i, j in
+            best[:n_best]]
+
+
+# ---------------------------------------------------------------------------
+# Random sampling (thesis §5.3.2, Fig 5.4)
+# ---------------------------------------------------------------------------
+
+def sample_size_for_confidence(sweeps: Sequence[SweepResult],
+                               good_threshold: float = 0.9,
+                               confidence: float = 0.683,
+                               metric: str = "cycles") -> int:
+    """Smallest random-sample size k such that, for the *worst* layer of
+    the design space, a sample of k permutations contains a >=threshold
+    one with the given probability (thesis: 10 for 1 sigma, 26 for 2)."""
+    S = speedup_matrix(sweeps, metric)
+    n = S.shape[1]
+    g_min = int((S >= good_threshold).sum(axis=1).min())
+    if g_min == 0:
+        return n
+    for k in range(1, n + 1):
+        # P(no good in k draws without replacement)
+        p_none = math.prod((n - g_min - t) / (n - t) for t in range(k)
+                           if n - g_min - t > 0) if k <= n - g_min else 0.0
+        if 1.0 - p_none >= confidence:
+            return k
+    return n
+
+
+def good_permutation_counts(sweeps: Sequence[SweepResult],
+                            good_threshold: float = 0.9,
+                            metric: str = "cycles") -> np.ndarray:
+    S = speedup_matrix(sweeps, metric)
+    return (S >= good_threshold).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Locality-aware search on the permutohedron (thesis §7.2 future work)
+# ---------------------------------------------------------------------------
+
+def neighbor_swap_search(score: Callable[[Perm], float],
+                         start: Perm,
+                         max_steps: int = 100) -> Tuple[Perm, float, int]:
+    """Greedy descent over adjacent-transposition neighbours.  ``score`` is
+    minimised (e.g. predicted cycles).  Returns (perm, score, evals)."""
+    cur = tuple(start)
+    cur_score = score(cur)
+    evals = 1
+    for _ in range(max_steps):
+        nbrs = perms.permutohedron_neighbors(cur)
+        scored = [(score(p), p) for p in nbrs]
+        evals += len(nbrs)
+        best_s, best_p = min(scored, key=lambda t: t[0])
+        if best_s >= cur_score:
+            return cur, cur_score, evals
+        cur, cur_score = best_p, best_s
+    return cur, cur_score, evals
+
+
+def bfs_search(score: Callable[[Perm], float], start: Perm,
+               budget: int = 60) -> Tuple[Perm, float, int]:
+    """Best-first search on the permutohedron with an evaluation budget
+    (the thesis' suggested BFS variant)."""
+    import heapq
+    seen = {tuple(start)}
+    s0 = score(tuple(start))
+    heap = [(s0, tuple(start))]
+    best = (s0, tuple(start))
+    evals = 1
+    while heap and evals < budget:
+        s, p = heapq.heappop(heap)
+        for q in perms.permutohedron_neighbors(p):
+            if q in seen:
+                continue
+            seen.add(q)
+            sq = score(q)
+            evals += 1
+            if sq < best[0]:
+                best = (sq, q)
+            heapq.heappush(heap, (sq, q))
+            if evals >= budget:
+                break
+    return best[1], best[0], evals
+
+
+# ---------------------------------------------------------------------------
+# TPU schedule tuning (hardware-adapted search)
+# ---------------------------------------------------------------------------
+
+def _divisors(n: int, cap: int = 1 << 30) -> List[int]:
+    return [d for d in range(1, min(n, cap) + 1) if n % d == 0]
+
+
+def _block_candidates(dim: int, targets: Sequence[int]) -> List[int]:
+    """Divisors of ``dim`` closest to each MXU-friendly target."""
+    divs = _divisors(dim)
+    out = sorted({max(d for d in divs if d <= t) for t in targets if t >= 1})
+    return out
+
+
+def tune_conv(layer: ConvLayer, spec: cm.TPUSpec = cm.TPUSpec(),
+              elem_bytes: int = 2, top_k: int = 5,
+              ) -> List[Tuple[ConvSchedule, cm.KernelCost]]:
+    """Rank (grid order x block shape) conv schedules by the TPU model."""
+    oc_c = _block_candidates(layer.oc, (32, 128, 256))
+    ic_c = _block_candidates(layer.ic, (32, 128, 256))
+    y_c = _block_candidates(layer.h, (4, 8, layer.h))
+    x_c = _block_candidates(layer.w, (8, 16, layer.w))
+    ranked: List[Tuple[float, ConvSchedule, cm.KernelCost]] = []
+    for order in itertools.permutations(("oc", "ic", "y", "x")):
+        for boc, bic, by, bx in itertools.product(oc_c, ic_c, y_c, x_c):
+            block = {"oc": boc, "ic": bic, "y": by, "x": bx}
+            cost = cm.conv_schedule_cost(layer, order, block, spec,
+                                         elem_bytes)
+            ranked.append((cost.time_s, ConvSchedule.make(order, block),
+                           cost))
+    ranked.sort(key=lambda t: t[0])
+    return [(s, c) for _, s, c in ranked[:top_k]]
+
+
+def tune_matmul(m: int, n: int, k: int,
+                spec: cm.TPUSpec = cm.TPUSpec(), elem_bytes: int = 2,
+                top_k: int = 5,
+                ) -> List[Tuple[MatmulSchedule, cm.KernelCost]]:
+    """Rank matmul schedules: 6 loop orders x blocks x resident-RHS (the
+    kernel-level tiles-for-L2 trade, thesis §6.3)."""
+    m_c = _block_candidates(m, (128, 256, 512))
+    n_c = _block_candidates(n, (128, 256, 512))
+    k_c = _block_candidates(k, (128, 512, k))
+    ranked: List[Tuple[float, MatmulSchedule, cm.KernelCost]] = []
+    for order in itertools.permutations(("m", "n", "k")):
+        for bm, bn, bk in itertools.product(m_c, n_c, k_c):
+            for resident in (False, True):
+                cost = cm.matmul_schedule_cost(
+                    m, n, k, bm, bn, bk, order, spec, elem_bytes,
+                    resident_rhs=resident)
+                sched = MatmulSchedule.make(
+                    order, {"m": bm, "n": bn, "k": bk}, resident)
+                ranked.append((cost.time_s, sched, cost))
+    ranked.sort(key=lambda t: t[0])
+    out: List[Tuple[MatmulSchedule, cm.KernelCost]] = []
+    seen = set()
+    for _, s, c in ranked:
+        if s in seen:
+            continue
+        seen.add(s)
+        out.append((s, c))
+        if len(out) >= top_k:
+            break
+    return out

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, DataPipeline, PipelineState,
+                                 global_batch, shard_batch)
+
+__all__ = ["DataConfig", "DataPipeline", "PipelineState", "global_batch",
+           "shard_batch"]

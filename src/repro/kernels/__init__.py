@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (validated on CPU with interpret=True).
+
+Each kernel package ships three layers:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper
+  ref.py    — the pure-jnp oracle the tests allclose against
+"""
+from repro.kernels import (conv2d, matmul, flash_attention, sparse_conv,
+                           ssm_scan, decode_attention)
+
+__all__ = ["conv2d", "matmul", "flash_attention", "sparse_conv",
+           "ssm_scan", "decode_attention"]

@@ -1,0 +1,61 @@
+"""Jit'd public wrapper for the direct-convolution kernel.
+
+`conv2d` picks a schedule (grid order + block shapes) — explicitly, from a
+:class:`repro.core.schedule.Schedule`, or by asking the TPU cost model for
+the best one — and dispatches to the Pallas kernel (interpret=True on CPU,
+compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d.kernel import conv2d_pallas, GRID_AXES
+from repro.kernels.conv2d.ref import conv2d_ref
+
+
+def _divisor_le(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap."""
+    best = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and d <= cap:
+            best = d
+    return best
+
+
+def default_block(oc: int, ic: int, h: int, w: int) -> Dict[str, int]:
+    """MXU-friendly default blocks: channels up to 128, spatial up to 8x16
+    (the VPU lane layout), all divisors of their dims."""
+    return {"oc": _divisor_le(oc, 128), "ic": _divisor_le(ic, 128),
+            "y": _divisor_le(h, 8), "x": _divisor_le(w, 16)}
+
+
+@functools.partial(jax.jit, static_argnames=("block_tuple", "grid_order",
+                                             "interpret"))
+def _conv2d_jit(img, wgt, block_tuple, grid_order, interpret):
+    block = dict(zip(GRID_AXES, block_tuple))
+    return conv2d_pallas(img, wgt, block=block, grid_order=grid_order,
+                         interpret=interpret)
+
+
+def conv2d(img: jnp.ndarray, wgt: jnp.ndarray, *,
+           block: Optional[Dict[str, int]] = None,
+           grid_order: Sequence[str] = ("oc", "y", "x", "ic"),
+           interpret: bool = True) -> jnp.ndarray:
+    """Direct convolution, thesis semantics (valid, pre-padded input).
+
+    img: [N, IC, H+KH-1, W+KW-1]; wgt: [OC, IC, KH, KW] -> [N, OC, H, W].
+    """
+    n, ic, h2, w2 = img.shape
+    oc, _, kh, kw = wgt.shape
+    h, w = h2 - kh + 1, w2 - kw + 1
+    if block is None:
+        block = default_block(oc, ic, h, w)
+    block_tuple = tuple(block[a] for a in GRID_AXES)
+    return _conv2d_jit(img, wgt, block_tuple, tuple(grid_order), interpret)
+
+
+__all__ = ["conv2d", "conv2d_ref", "default_block"]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the direct-convolution kernel.
+
+Semantics match the thesis' nest (Fig 3.1): 'valid' convolution (really
+cross-correlation, as in all DL frameworks) of a pre-padded input::
+
+    out[n, oc, y, x] = sum_{ic, ky, kx} wgt[oc, ic, ky, kx]
+                                        * img[n, ic, y+ky, x+kx]
+
+``img`` has spatial extent (H + KH - 1, W + KW - 1) so ``out`` is (H, W).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(img: jnp.ndarray, wgt: jnp.ndarray) -> jnp.ndarray:
+    """img: [N, IC, H+KH-1, W+KW-1]; wgt: [OC, IC, KH, KW] ->
+    out: [N, OC, H, W] (float32 accumulation)."""
+    n, ic, h2, w2 = img.shape
+    oc, ic2, kh, kw = wgt.shape
+    assert ic == ic2, (img.shape, wgt.shape)
+    h, w = h2 - kh + 1, w2 - kw + 1
+    out = jnp.zeros((n, oc, h, w), jnp.float32)
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = img[:, :, ky:ky + h, kx:kx + w].astype(jnp.float32)
+            tap = wgt[:, :, ky, kx].astype(jnp.float32)
+            # [N,IC,H,W] x [OC,IC] -> [N,OC,H,W]
+            out = out + jnp.einsum("nihw,oi->nohw", patch, tap,
+                                   preferred_element_type=jnp.float32)
+    return out

@@ -1,0 +1,109 @@
+"""Single-query flash decode over a KV cache (Pallas TPU).
+
+Decode attention is the memory roofline of serving: each new token must
+stream the whole valid cache prefix.  This kernel reads each K/V block
+exactly once (online softmax in VMEM scratch) and — via scalar prefetch of
+the current position — *skips whole KV blocks beyond ``pos``*: with a
+32k-slot cache at position 1k, 31/32 of the DMAs never issue.  That is
+the thesis' sparsity-guard idea (§3.6) applied to the temporal dimension,
+and the same scalar-prefetch machinery as kernels/sparse_conv.
+
+GQA is handled by the KV index map folding query heads onto their group
+(no repeated KV in HBM), matching kernels/flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bkv: int, n_kv: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    k_start = ki * bkv
+
+    @pl.when(k_start <= pos)            # skip blocks wholly beyond pos
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # [1, D]
+        k = k_ref[0].astype(jnp.float32)            # [BKV, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray,
+                            v: jnp.ndarray, pos: jnp.ndarray, *,
+                            block_kv: int = 256,
+                            interpret: bool = True) -> jnp.ndarray:
+    """q [B,HQ,1,D]; k/v [B,HKV,S,D]; pos scalar int32."""
+    b, hq, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bkv = min(block_kv, s)
+    while s % bkv:
+        bkv //= 2
+    n_kv = s // bkv
+
+    scale = 1.0 / (d ** 0.5)
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(b * hq, 1, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    def kv_index(bh, ki, pos_ref):
+        batch = bh // hq
+        head = bh % hq
+        return (batch * hkv + head // group, ki, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bh, ki, pref: (bh, 0, 0)),
+            pl.BlockSpec((1, bkv, d), kv_index),
+            pl.BlockSpec((1, bkv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bh, ki, pref: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, bkv=bkv, n_kv=n_kv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qf, kf, vf)
+    return out.reshape(b, hq, 1, d)

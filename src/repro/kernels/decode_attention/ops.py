@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, k, v, pos, *, block_kv: int = 256,
+                     interpret: bool = True):
+    return decode_attention_pallas(q, k, v, pos, block_kv=block_kv,
+                                   interpret=interpret)
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,25 @@
+"""Oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         pos: int) -> jnp.ndarray:
+    """q [B, HQ, 1, D]; k/v caches [B, HKV, S, D]; entries at index > pos
+    are invalid.  Returns [B, HQ, 1, D]."""
+    b, hq, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qg * scale,
+                        k.astype(jnp.float32))
+    valid = jnp.arange(s)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

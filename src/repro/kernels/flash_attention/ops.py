@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "causal",
+                                             "window", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    block_q: int = 128, block_kv: int = 128,
+                    causal: bool = True, window: Optional[int] = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Flash attention; q [B,HQ,S,D], k/v [B,HKV,S,D] -> [B,HQ,S,D]."""
+    return flash_attention_pallas(q, k, v, block_q=block_q,
+                                  block_kv=block_kv, causal=causal,
+                                  window=window, interpret=interpret)
+
+
+__all__ = ["flash_attention", "mha_ref"]

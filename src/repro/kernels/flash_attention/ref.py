@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (causal, optional sliding window,
+GQA)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True,
+            window: Optional[int] = None) -> jnp.ndarray:
+    """q: [B, HQ, S, D]; k, v: [B, HKV, S, D]; HKV divides HQ (GQA).
+
+    ``window``: sliding-window size (a query attends to keys in
+    (pos-window, pos]); None = full causal.
+    Returns [B, HQ, S, D] in q's dtype, float32 softmax.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,49 @@
+"""Jit'd public wrapper for the tiled matmul kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul.kernel import matmul_pallas, GRID_AXES
+from repro.kernels.matmul.ref import matmul_ref
+
+
+def _divisor_le(n: int, cap: int) -> int:
+    best = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and d <= cap:
+            best = d
+    return best
+
+
+def default_block(m: int, n: int, k: int) -> Dict[str, int]:
+    return {"m": _divisor_le(m, 256), "n": _divisor_le(n, 256),
+            "k": _divisor_le(k, 512)}
+
+
+@functools.partial(jax.jit, static_argnames=("block_tuple", "grid_order",
+                                             "resident_rhs", "interpret"))
+def _matmul_jit(a, b, block_tuple, grid_order, resident_rhs, interpret):
+    block = dict(zip(GRID_AXES, block_tuple))
+    return matmul_pallas(a, b, block=block, grid_order=grid_order,
+                         resident_rhs=resident_rhs, interpret=interpret)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *,
+           block: Optional[Dict[str, int]] = None,
+           grid_order: Sequence[str] = ("m", "n", "k"),
+           resident_rhs: bool = False,
+           interpret: bool = True) -> jnp.ndarray:
+    m, k = a.shape
+    _, n = b.shape
+    if block is None:
+        block = default_block(m, n, k)
+    block_tuple = tuple(block[ax] for ax in GRID_AXES)
+    return _matmul_jit(a, b, block_tuple, tuple(grid_order), resident_rhs,
+                       interpret)
+
+
+__all__ = ["matmul", "matmul_ref", "default_block"]

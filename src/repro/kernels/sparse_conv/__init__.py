@@ -1,0 +1,7 @@
+from repro.kernels.sparse_conv.ops import (sparse_conv2d, sparse_conv_ref,
+                                           analyze_weights, BlockSparsity)
+from repro.kernels.sparse_conv.kernel import (sparse_conv2d_pallas,
+                                              build_block_index)
+
+__all__ = ["sparse_conv2d", "sparse_conv_ref", "analyze_weights",
+           "BlockSparsity", "sparse_conv2d_pallas", "build_block_index"]

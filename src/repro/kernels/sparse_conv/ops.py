@@ -1,0 +1,62 @@
+"""Public wrapper: builds block structure from weights and dispatches,
+with the dense-vs-sparse policy hook the thesis' §6.2 comparison needs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sparse_conv.kernel import (build_block_index,
+                                              sparse_conv2d_pallas)
+from repro.kernels.sparse_conv.ref import sparse_conv_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparsity:
+    """Host-side compacted sparsity structure of a weight tensor."""
+    idx: np.ndarray        # [n_oc_blocks, max_nnz]
+    counts: np.ndarray     # [n_oc_blocks]
+    block: Dict[str, int]
+    n_ic_blocks: int
+
+    @property
+    def density(self) -> float:
+        return float(self.counts.sum()) / (len(self.counts)
+                                           * self.n_ic_blocks)
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean nonzero count across oc blocks — the thesis' dense-
+        region straggler measure (§3.6)."""
+        mean = max(float(self.counts.mean()), 1e-9)
+        return float(self.counts.max(initial=0)) / mean
+
+
+def analyze_weights(wgt: np.ndarray, block: Dict[str, int],
+                    threshold: float = 0.0) -> BlockSparsity:
+    oc, ic = wgt.shape[0], wgt.shape[1]
+    boc, bic = block["oc"], block["ic"]
+    w = np.abs(np.asarray(wgt)).reshape(oc // boc, boc, ic // bic, bic, -1)
+    mask = (w.max(axis=(1, 3, 4)) > threshold)
+    idx, counts = build_block_index(mask)
+    return BlockSparsity(idx=idx, counts=counts, block=dict(block),
+                         n_ic_blocks=ic // bic)
+
+
+def sparse_conv2d(img: jnp.ndarray, wgt: jnp.ndarray, *,
+                  block: Dict[str, int],
+                  sparsity: Optional[BlockSparsity] = None,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Block-sparse direct conv; recomputes structure if not supplied."""
+    if sparsity is None:
+        sparsity = analyze_weights(np.asarray(wgt), block)
+    return sparse_conv2d_pallas(
+        img, wgt, jnp.asarray(sparsity.idx), jnp.asarray(sparsity.counts),
+        block=block, interpret=interpret)
+
+
+__all__ = ["sparse_conv2d", "sparse_conv_ref", "analyze_weights",
+           "BlockSparsity"]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the block-sparse convolution kernel.
+
+Semantics: identical to dense conv — zero weight blocks contribute zero —
+so the oracle is the dense reference applied to the (already zeroed)
+weights.  The kernel must produce the same numbers while *skipping* the
+zero blocks (compute and DMA), which the tests check via the dense ref.
+"""
+from repro.kernels.conv2d.ref import conv2d_ref as sparse_conv_ref
+
+__all__ = ["sparse_conv_ref"]

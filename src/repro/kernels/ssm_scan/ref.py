@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused selective-scan kernel (mamba-1 SSM).
+
+Given pre-activated inputs (dt already softplus'd, B/C projected):
+
+    dA_t  = exp(dt_t * A)            # [Di, N] per step
+    h_t   = dA_t * h_{t-1} + dt_t * B_t * x_t
+    y_t   = <h_t, C_t> + D * x_t
+
+This reference materialises the [Bt, S, Di, N] tensors (what the naive
+JAX path does — the measured memory bottleneck of falcon-mamba training);
+the Pallas kernel must produce the same numbers while keeping h in VMEM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import linear_scan
+
+
+def ssm_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, b: jnp.ndarray,
+                 c: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """x, dt: [Bt, S, Di]; b, c: [Bt, S, N]; a: [Di, N]; d: [Di]
+    -> y [Bt, S, Di] (float32 math, x.dtype out)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a.astype(jnp.float32))      # [Bt,S,Di,N]
+    dbx = (dtf[..., None] * b.astype(jnp.float32)[:, :, None, :]
+           * xf[..., None])
+    h = linear_scan(da, dbx, axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))
+    y = y + d.astype(jnp.float32) * xf
+    return y.astype(x.dtype)

@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve CLIs.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — its first
+two lines set XLA_FLAGS for 512 placeholder devices (required before jax
+initialises).  Import the analysis helpers from ``hlo_analysis`` /
+``roofline`` instead.
+"""

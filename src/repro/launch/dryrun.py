@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init, and the production meshes need 512 host placeholder
+devices (16x16 single pod, 2x16x16 multi-pod).
+
+Per cell this driver:
+  1. builds the model + sharding specs from the logical-axis rules,
+  2. ``jit(step).lower(**ShapeDtypeStructs).compile()`` on the full
+     config — the pass/fail deliverable — and records
+     ``memory_analysis()`` + the collective schedule,
+  3. compiles two small *unrolled* layer counts and extrapolates
+     FLOPs / bytes / collective-bytes linearly in the layer count
+     (XLA's cost_analysis counts while-loop bodies once — see
+     models/scan_config.py), producing the §Roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --seq-shard   # SP override (hillclimb)
+"""
+# (no ``from __future__`` here: the XLA_FLAGS lines must stay first)
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import hlo_analysis, roofline
+from repro.launch.mesh import make_production_mesh, make_mesh
+from repro.models import build_model, scan_config
+from repro.models.model_zoo import Model
+from repro.optim import adamw
+from repro.optim.schedule import constant
+from repro.runtime import sharding as shd
+from repro.runtime.train_loop import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Config scaling for the two-point calibration
+# ---------------------------------------------------------------------------
+
+def scale_unit(cfg: ModelConfig) -> int:
+    """Layers per scaling unit (pattern group for hybrid, else 1)."""
+    return len(cfg.block_pattern) if cfg.block_pattern else 1
+
+
+def full_units(cfg: ModelConfig) -> int:
+    return cfg.n_layers // scale_unit(cfg)
+
+
+def with_units(cfg: ModelConfig, units: int) -> ModelConfig:
+    """Config with ``units`` scaling units (keeps the hybrid tail)."""
+    u = scale_unit(cfg)
+    tail = cfg.n_layers % u if cfg.block_pattern else 0
+    kw: Dict[str, Any] = {"n_layers": units * u + tail}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = units * u + tail
+    return dataclasses.replace(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Step functions + sharding per shape kind
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+               backend: str = "xla", remat: str = "full",
+               zero1: bool = False, microbatches: int = 1):
+    """Returns (fn, example_args (abstract), in_shardings, donate).
+
+    ``zero1``: ZeRO-1 instead of FSDP — parameters replicated over the
+    data axes in compute (no per-layer weight all-gathers; the gradient
+    all-reduce + a single per-step parameter gather replace them) while
+    optimizer moments stay fully sharded.  One of the §Perf moves: the
+    FSDP weight re-gathers were the dominant collective term."""
+    model = build_model(cfg)
+    axes = model.axes_tree()
+    p_abs = model.abstract_params()
+    ns = lambda spec: NamedSharding(mesh, spec)  # noqa: E731
+    is_ax = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        isinstance(e, (str, type(None))) for e in x)
+    param_rules = rules.with_overrides(embed=()) if zero1 else rules
+    p_sh = jax.tree.map(
+        lambda ax, leaf: ns(shd.resolve_spec(ax, leaf.shape, mesh,
+                                             param_rules)),
+        axes, p_abs, is_leaf=is_ax)
+    shard_fn = shd.make_activation_shard_fn(mesh, rules)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw.init, p_abs)
+        m_sh = jax.tree.map(
+            lambda ax, leaf: ns(shd.resolve_spec(ax, leaf.shape, mesh,
+                                                 rules)),
+            axes, opt_abs.m, is_leaf=is_ax)
+        opt_sh = adamw.AdamWState(step=ns(P()), m=m_sh, v=m_sh)
+        batch_abs = model.input_specs(shape)
+        b_sh = {k: ns(shd.batch_spec(v.shape, mesh, rules))
+                for k, v in batch_abs.items()}
+        if microbatches > 1 and not zero1:
+            # ZeRO-2: accumulator constrained to the optimizer sharding.
+            # (Measured: with replicated ZeRO-1 params this forces a f32
+            # reduce-scatter per microbatch and loses badly — §Perf.)
+            def grad_shard_fn(tree):
+                return jax.tree.map(
+                    lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                    tree, m_sh)
+        else:
+            grad_shard_fn = lambda t: t  # noqa: E731
+        fn = make_train_step(model, adamw.AdamWConfig(),
+                             functools.partial(constant, peak_lr=1e-4),
+                             shard_fn=shard_fn, backend=backend,
+                             remat=remat, microbatches=microbatches,
+                             grad_shard_fn=grad_shard_fn)
+        return fn, (p_abs, opt_abs, batch_abs), (p_sh, opt_sh, b_sh), (0, 1)
+
+    if shape.kind == "prefill":
+        batch_abs = model.input_specs(shape)
+        b_sh = {k: ns(shd.batch_spec(v.shape, mesh, rules))
+                for k, v in batch_abs.items()}
+
+        def fn(params, batch):
+            return model.prefill(params, batch, shard_fn=shard_fn,
+                                 backend=backend)
+        return fn, (p_abs, batch_abs), (p_sh, b_sh), ()
+
+    # decode
+    cache_abs = model.cache_specs(shape)
+    c_sh = jax.tree.map(lambda s: ns(s),
+                        shd.cache_specs(cache_abs, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+    io = model.input_specs(shape)
+    tok_sh = ns(shd.batch_spec(io["tokens"].shape, mesh, rules))
+    pos_sh = ns(P())
+
+    def fn(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos,
+                                 shard_fn=shard_fn)
+    return (fn, (p_abs, cache_abs, io["tokens"], io["pos"]),
+            (p_sh, c_sh, tok_sh, pos_sh), (1,))
+
+
+def lower_compile(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                  unroll: bool = False, backend: str = "xla",
+                  remat: str = "full",
+                  zero1: bool = False,
+                  microbatches: int = 1) -> Dict[str, Any]:
+    """One lower+compile; returns analyses."""
+    scan_config.UNROLL = bool(unroll)
+    try:
+        fn, args_abs, in_sh, donate = build_cell(cfg, shape, mesh, rules,
+                                                 backend, remat, zero1,
+                                                 microbatches)
+        t0 = time.time()
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          donate_argnums=donate).lower(*args_abs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    finally:
+        scan_config.UNROLL = False
+
+    out: Dict[str, Any] = {"lower_s": t1 - t0, "compile_s": t2 - t1}
+    try:
+        ms = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": ms.argument_size_in_bytes,
+            "output_bytes": ms.output_size_in_bytes,
+            "temp_bytes": ms.temp_size_in_bytes,
+            "alias_bytes": ms.alias_size_in_bytes,
+        }
+        out["bytes_per_device"] = (ms.argument_size_in_bytes
+                                   + ms.temp_size_in_bytes
+                                   + ms.output_size_in_bytes
+                                   - ms.alias_size_in_bytes)
+    except Exception as e:  # pragma: no cover
+        out["memory_error"] = str(e)
+    try:
+        ca = compiled.cost_analysis()
+        out["flops_per_device"] = float(ca.get("flops", 0.0))
+        out["bytes_per_device_accessed"] = float(
+            ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        out["cost_error"] = str(e)
+    txt = compiled.as_text()
+    stats = hlo_analysis.parse_collectives(txt)
+    out["collective_bytes_per_chip"] = stats.total_bytes
+    out["collectives_by_kind"] = dict(stats.bytes_by_kind)
+    out["collective_counts"] = dict(stats.count_by_kind)
+    out["collective_schedule"] = hlo_analysis.collective_schedule(txt, 12)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             rules: Optional[shd.ShardingRules] = None,
+             calibrate: bool = True,
+             units_ab: Tuple[int, int] = (1, 2),
+             backend: str = "xla", remat: str = "full",
+             mesh_shape: Optional[Tuple[int, int]] = None,
+             flash_adjust: bool = False,
+             zero1: bool = False,
+             microbatches: int = 1) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if mesh_shape is not None:
+        mesh_name = "x".join(str(d) for d in mesh_shape)
+    else:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "backend": backend,
+                           "remat": remat, "flash_adjust": flash_adjust,
+                           "zero1": zero1, "microbatches": microbatches}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    rules = rules or shd.ShardingRules()
+    if mesh_shape is not None:
+        mesh = make_mesh(mesh_shape, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    try:
+        full = lower_compile(cfg, shape, mesh, rules, unroll=False,
+                             backend=backend, remat=remat, zero1=zero1,
+                             microbatches=microbatches)
+        rec["full"] = full
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        return rec
+
+    if calibrate:
+        try:
+            ua, ub = units_ab
+            cal_backend = "stub" if (flash_adjust
+                                     and shape.kind != "decode") \
+                else backend
+            cal_a = lower_compile(with_units(cfg, ua), shape, mesh, rules,
+                                  unroll=True, backend=cal_backend,
+                                  remat=remat, zero1=zero1,
+                                  microbatches=microbatches)
+            cal_b = lower_compile(with_units(cfg, ub), shape, mesh, rules,
+                                  unroll=True, backend=cal_backend,
+                                  remat=remat, zero1=zero1,
+                                  microbatches=microbatches)
+            uf = full_units(cfg)
+            ext = lambda key: roofline.extrapolate(  # noqa: E731
+                cal_a.get(key, 0.0), cal_b.get(key, 0.0), ua, ub, uf)
+            flops_dev = ext("flops_per_device")
+            bytes_dev = ext("bytes_per_device_accessed")
+            coll_chip = ext("collective_bytes_per_chip")
+            if flash_adjust and shape.kind != "decode":
+                # add the Pallas flash kernel's exact footprint in place
+                # of the stubbed attention (see roofline.py)
+                fc = roofline.flash_attention_cost(cfg, shape)
+                flops_dev += fc["flops"] / chips
+                bytes_dev += fc["bytes"] / chips
+                rec["flash_cost"] = fc
+            terms = roofline.make_terms(
+                arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+                hlo_flops_global=flops_dev * chips,
+                hlo_bytes_global=bytes_dev * chips,
+                coll_bytes_per_chip=coll_chip, cfg=cfg,
+                bytes_per_device=full.get("bytes_per_device"))
+            rec["roofline"] = terms.to_dict()
+            rec["calibration"] = {
+                "units": [ua, ub], "full_units": uf,
+                "flops_per_device": [cal_a.get("flops_per_device"),
+                                     cal_b.get("flops_per_device")],
+                "bytes_per_device": [
+                    cal_a.get("bytes_per_device_accessed"),
+                    cal_b.get("bytes_per_device_accessed")],
+                "coll_bytes": [cal_a.get("collective_bytes_per_chip"),
+                               cal_b.get("collective_bytes_per_chip")],
+            }
+        except Exception as e:
+            rec["calibration_error"] = f"{type(e).__name__}: {e}"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel activation override")
+    ap.add_argument("--rules-override", default=None,
+                    help='JSON dict, e.g. {"seq": ["model"]}')
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "chunked"],
+                    help="attention backend for train/prefill lowering")
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none", "moe"])
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override data x model, e.g. 32x8 (256 chips)")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1 params (replicated compute copy) instead "
+                         "of FSDP")
+    ap.add_argument("--flash-adjust", action="store_true",
+                    help="kernel-substitution accounting: calibrate with "
+                         "attention stubbed, add the Pallas flash "
+                         "kernel's analytic flops/bytes")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    rules = shd.ShardingRules()
+    if args.seq_shard:
+        rules = rules.with_overrides(seq=("model",))
+    if args.rules_override:
+        ov = {k: tuple(v) for k, v in
+              json.loads(args.rules_override).items()}
+        rules = rules.with_overrides(**ov)
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                mesh_shape = None
+                if args.mesh_shape:
+                    mesh_shape = tuple(
+                        int(x) for x in args.mesh_shape.split("x"))
+                rec = run_cell(arch, shape_name, multi_pod=mp,
+                               rules=rules,
+                               calibrate=not args.no_calibrate
+                               and not mp,
+                               backend=args.backend, remat=args.remat,
+                               mesh_shape=mesh_shape,
+                               flash_adjust=args.flash_adjust,
+                               zero1=args.zero1,
+                               microbatches=args.microbatch)
+                rec["wall_s"] = time.time() - t0
+                results.append(rec)
+                status = rec["status"]
+                extra = ""
+                if "roofline" in rec:
+                    r = rec["roofline"]
+                    extra = (" dom=%s mfu=%.3f" %
+                             (r["dominant"], r["mfu"]))
+                print(f"[{status:7s}] {arch} {shape_name} "
+                      f"{'2x16x16' if mp else '16x16'} "
+                      f"({rec['wall_s']:.0f}s){extra}", flush=True)
+                if status == "failed":
+                    print(rec["error"], flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and bytes but not collective volume, so we
+parse the compiled module text: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` (and their
+async ``-start`` forms) contributes its operand/output bytes with a
+per-primitive wire multiplier (ring algorithm accounting):
+
+    all-gather          output bytes          (each chip receives ~N)
+    all-reduce          2x operand bytes      (reduce-scatter + all-gather)
+    reduce-scatter      operand bytes
+    all-to-all          operand bytes
+    collective-permute  operand bytes
+
+Bytes are *per-shard* quantities as they appear in the partitioned module
+— i.e. per-chip wire traffic, which is what the collective roofline term
+divides by per-chip link bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"= *((?:\([^)]*\))|(?:\S+)) +"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+
+_MULTIPLIER = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def shape_bytes(token: str) -> int:
+    """bytes of one 'dtype[a,b,c]' token (0 if not a shape)."""
+    m = _SHAPE_RE.match(token)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    ops: List[Tuple[str, float]]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by: Dict[str, float] = {}
+    count_by: Dict[str, int] = {}
+    ops: List[Tuple[str, float]] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shapes, kind, is_start = m.group(1), m.group(2), m.group(3)
+        if is_start and "-done(" in line:
+            continue
+        # Output bytes: sum all shape tokens in the output type (handles
+        # tuple outputs of variadic/async collectives).
+        out_bytes = sum(shape_bytes(tok.strip().lstrip("("))
+                        for tok in re.findall(r"\w+\[[\d,]*\]",
+                                              out_shapes))
+        if kind == "all-gather":
+            vol = out_bytes
+        else:
+            # operand bytes: shapes inside the call parens
+            call = line[m.end():]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(call):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = call[:end]
+            op_bytes = sum(shape_bytes(tok) for tok in
+                           re.findall(r"\w+\[[\d,]*\]", operands))
+            vol = op_bytes
+        vol *= _MULTIPLIER[kind]
+        bytes_by[kind] = bytes_by.get(kind, 0.0) + vol
+        count_by[kind] = count_by.get(kind, 0) + 1
+        ops.append((kind, vol))
+    return CollectiveStats(bytes_by_kind=bytes_by, count_by_kind=count_by,
+                           ops=ops)
+
+
+def collective_schedule(hlo_text: str, limit: int = 20) -> List[str]:
+    """Human-readable first-N collectives in program order (recorded in
+    EXPERIMENTS.md §Dry-run)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m:
+            out.append(line.strip()[:160])
+            if len(out) >= limit:
+                break
+    return out

@@ -1,0 +1,200 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Terms (seconds), per (arch x shape x mesh) cell:
+
+    compute    = HLO_FLOPs   / (chips * 197e12)      # bf16 peak
+    memory     = HLO_bytes   / (chips * 819e9)       # HBM BW
+    collective = coll_bytes  / (chips * 50e9)        # ICI link BW
+
+HLO totals come from the two-point layer extrapolation (scan bodies are
+counted once by cost_analysis, so the dry-run compiles two small *unrolled*
+configs at L_a < L_b and extends linearly: f(L) = base + L * slope — exact
+because every per-layer quantity is linear in L).  Collective bytes per
+chip come from hlo_analysis on the partitioned module text.
+
+MODEL_FLOPS uses the 6*N*D (train) / 2*N*D (inference) convention with
+N = active parameters (MoE counts top-k routed + shared experts only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # global, extrapolated
+    hlo_bytes: float          # global, extrapolated
+    collective_bytes: float   # per-chip wire bytes, extrapolated
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bytes_per_device: Optional[float] = None  # from memory_analysis
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound is sum; perfectly-overlapped bound is
+        max.  We report max (the roofline) — the gap to sum is what
+        compute/comm overlap buys."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (catches remat/dispatch waste)."""
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline bound."""
+        return (self.model_flops / (self.chips * PEAK_FLOPS)
+                / max(self.step_time_s, 1e-12))
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "useful_ratio": self.useful_ratio, "mfu": self.mfu,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Active parameter count (MoE: top-k routed + shared + attn)."""
+    total = cfg.param_count()
+    if cfg.n_experts:
+        ef = cfg.moe_d_ff or cfg.d_ff
+        inactive = (cfg.n_experts - cfg.experts_per_token) * 3 \
+            * cfg.d_model * ef * cfg.n_layers
+        total -= inactive
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D for train, 2*N*D for prefill, 2*N per token for decode."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence (+ attention over the cache, which is
+    # memory- not compute-dominated; excluded from the FLOP convention)
+    return 2.0 * n * shape.global_batch
+
+
+def make_terms(*, arch: str, shape: ShapeConfig, mesh_name: str,
+               chips: int, hlo_flops_global: float,
+               hlo_bytes_global: float, coll_bytes_per_chip: float,
+               cfg: ModelConfig,
+               bytes_per_device: Optional[float] = None) -> RooflineTerms:
+    return RooflineTerms(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops_global, hlo_bytes=hlo_bytes_global,
+        collective_bytes=coll_bytes_per_chip,
+        model_flops=model_flops(cfg, shape),
+        compute_s=hlo_flops_global / (chips * PEAK_FLOPS),
+        memory_s=hlo_bytes_global / (chips * HBM_BW),
+        collective_s=coll_bytes_per_chip / ICI_BW,
+        bytes_per_device=bytes_per_device,
+    )
+
+
+def extrapolate(f_a: float, f_b: float, l_a: int, l_b: int,
+                l_full: int) -> float:
+    """Linear extension f(L) = base + L*slope from two measurements."""
+    slope = (f_b - f_a) / max(l_b - l_a, 1)
+    base = f_a - l_a * slope
+    return base + l_full * slope
+
+
+# ---------------------------------------------------------------------------
+# Kernel-substitution accounting (flash attention)
+# ---------------------------------------------------------------------------
+#
+# The XLA reference attention materialises S^2 score tensors, so the
+# HLO-derived memory term wildly overstates what the validated Pallas
+# flash kernel (kernels/flash_attention) does on TPU: its HBM traffic is
+# Q+K+V+O by construction (running stats live in VMEM).  The dry-run's
+# ``--flash-adjust`` mode therefore compiles the calibration points with
+# attention *stubbed out* (backend="stub") and adds the kernel's exact
+# analytic footprint below.  Forward/backward factors: flash backward
+# recomputes the forward (2x fwd matmul flops) and reads Q,K,V,O,dO /
+# writes dQ,dK,dV, so train ~= 3.5x fwd flops and ~3.5x fwd bytes.
+
+_TRAIN_FLOPS_FACTOR = 3.5
+_TRAIN_BYTES_FACTOR = 3.5
+
+
+def _one_attention_cost(batch: int, hq: int, hkv: int, seq: int, hd: int,
+                        *, causal: bool = True,
+                        window: Optional[int] = None,
+                        elem_bytes: int = 2) -> Dict[str, float]:
+    s_eff = min(window, seq) if window else (seq + 1) / 2 if causal else seq
+    flops = 4.0 * batch * hq * seq * s_eff * hd
+    bytes_ = elem_bytes * batch * seq * hd * (2 * hq + 2 * hkv)
+    return {"flops": flops, "bytes": bytes_}
+
+
+def flash_attention_cost(cfg: ModelConfig, shape: ShapeConfig
+                         ) -> Dict[str, float]:
+    """Global (flops, bytes) of ALL self-attention in one step, as the
+    Pallas flash kernel executes it.  Decode shapes never use this path
+    (decode attention is cache-bound, left in the HLO)."""
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    total = {"flops": 0.0, "bytes": 0.0}
+
+    def add(n_layers, seq, window=None, causal=True):
+        c = _one_attention_cost(b, cfg.n_heads, cfg.n_kv_heads, seq, hd,
+                                causal=causal, window=window)
+        total["flops"] += n_layers * c["flops"]
+        total["bytes"] += n_layers * c["bytes"]
+
+    if cfg.family == "ssm":
+        return total                       # attention-free
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // len(cfg.block_pattern)
+        n_attn = (n_groups * sum(1 for k in cfg.block_pattern
+                                 if k == "attn")
+                  + sum(1 for k in cfg.block_pattern[
+                      :cfg.n_layers % len(cfg.block_pattern)]
+                      if k == "attn"))
+        add(n_attn, s, window=cfg.local_window if s > cfg.local_window
+            else None)
+    elif cfg.family == "audio":
+        add(cfg.encoder_layers, cfg.encoder_seq, causal=False)
+        add(cfg.n_layers, s)               # decoder self-attn
+        # cross attention stays in the HLO (not stubbed)
+    else:
+        seq_total = s
+        add(cfg.n_layers, seq_total)
+
+    if shape.kind == "train":
+        total["flops"] *= _TRAIN_FLOPS_FACTOR
+        total["bytes"] *= _TRAIN_BYTES_FACTOR
+    return total

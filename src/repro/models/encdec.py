@@ -1,0 +1,242 @@
+"""Encoder-decoder backbone (whisper-large-v3).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings [B, S_enc, D].  The encoder is a
+bidirectional transformer over frames (+ sinusoidal positions); the
+decoder is a causal transformer with cross-attention whose K/V are
+computed once from the encoder output (cached for decode).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (ParamBuilder, Params, dense, dtype_of,
+                                 mlp, mlp_params, rmsnorm,
+                                 sinusoidal_positions, softmax_xent)
+
+Identity = lambda x, where="boundary": x  # noqa: E731
+
+
+def _remat(body, mode):
+    """Remat policy switch: False/"none" (save everything), True/"full"
+    (recompute everything — default), "dots" (save matmul outputs, skip
+    recompute of the expensive dots — a §Perf knob)."""
+    if mode in (False, "none"):
+        return body
+    if mode == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _scan(body, init, xs):
+    """lax.scan honouring the dry-run unroll knob (see scan_config)."""
+    from repro.models import scan_config
+    return jax.lax.scan(body, init, xs, unroll=scan_config.UNROLL)
+
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Tuple[Params, Params]:
+    b = ParamBuilder(rng, dtype_of(cfg.dtype))
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ne, nd = cfg.encoder_layers, cfg.n_layers
+
+    b.normal("embed", [cfg.vocab_size, d], ("vocab", "embed"),
+             fan_in=d, scale=float(d) ** 0.5)
+
+    # Encoder stack.
+    b.zeros("encoder/ln1", [ne, d], ("layers", "embed"))
+    attn.attn_params(b, "encoder/attn", ne, d, cfg.n_heads,
+                     cfg.n_kv_heads, hd, False)
+    b.zeros("encoder/ln2", [ne, d], ("layers", "embed"))
+    mlp_params(b, "encoder/mlp", ne, d, cfg.d_ff, cfg.mlp_type)
+    b.zeros("encoder/final_norm", [d], ("embed",))
+
+    # Decoder stack: self-attn + cross-attn + mlp.
+    b.zeros("decoder/ln1", [nd, d], ("layers", "embed"))
+    attn.attn_params(b, "decoder/self", nd, d, cfg.n_heads,
+                     cfg.n_kv_heads, hd, False)
+    b.zeros("decoder/lnx", [nd, d], ("layers", "embed"))
+    attn.attn_params(b, "decoder/cross", nd, d, cfg.n_heads,
+                     cfg.n_kv_heads, hd, False)
+    b.zeros("decoder/ln2", [nd, d], ("layers", "embed"))
+    mlp_params(b, "decoder/mlp", nd, d, cfg.d_ff, cfg.mlp_type)
+
+    b.zeros("final_norm", [d], ("embed",))
+    b.normal("lm_head", [d, cfg.vocab_size], ("embed", "vocab"), fan_in=d)
+    return b.params, b.axes
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray, *,
+           backend: str = "xla", shard_fn: Callable = Identity,
+           remat: bool = True) -> jnp.ndarray:
+    """frames [B, S_enc, D] (stub frontend output) -> [B, S_enc, D]."""
+    hd = cfg.resolved_head_dim
+    pos = sinusoidal_positions(frames.shape[1], cfg.d_model)
+    x = (frames.astype(jnp.float32) + pos).astype(frames.dtype)
+    x = shard_fn(x)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(carry, lp):
+        h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(
+            h, lp["attn"], n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            hd=hd, positions=positions, rope_theta=cfg.rope_theta,
+            qk_norm=False, use_rope=False)
+        ctx = attn.attention(q, k, v, causal=False, backend=backend)
+        carry = shard_fn(carry + attn.attn_out(ctx, lp["attn"]))
+        h = rmsnorm(carry, lp["ln2"], cfg.norm_eps)
+        carry = shard_fn(carry + mlp(h, lp["mlp"], cfg.mlp_type))
+        return carry, None
+
+    body = _remat(body, remat)
+    stacked = {k: v for k, v in params["encoder"].items()
+               if k != "final_norm"}          # final_norm is unstacked
+    x, _ = _scan(body, x, stacked)
+    return rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _decoder_body(carry, lp, cfg: ModelConfig, enc_kv, positions,
+                  backend: str, shard_fn: Callable,
+                  self_cache: Optional[Dict] = None,
+                  pos=None) -> Tuple[jnp.ndarray, Dict]:
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(
+        h, lp["self"], n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=hd,
+        positions=positions, rope_theta=cfg.rope_theta, qk_norm=False)
+    out_kv: Dict[str, Any] = {}
+    if self_cache is None:
+        ctx = attn.attention(q, k, v, causal=True, backend=backend)
+        out_kv["k"], out_kv["v"] = k, v
+    else:
+        ck, cv = attn.update_kv_cache(self_cache["k"], self_cache["v"],
+                                      k, v, pos)
+        ctx = attn.decode_attention(q, ck, cv, pos)
+        out_kv["k"], out_kv["v"] = ck, cv
+    carry = shard_fn(carry + attn.attn_out(ctx, lp["self"]))
+
+    # Cross attention over precomputed encoder K/V.
+    h = rmsnorm(carry, lp["lnx"], cfg.norm_eps)
+    bsz, s, _ = h.shape
+    qx = dense(h, lp["cross"]["wq"]).reshape(
+        bsz, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    ctx = attn.cross_attention(qx, enc_kv["k"], enc_kv["v"])
+    carry = shard_fn(carry + attn.attn_out(ctx, lp["cross"]))
+
+    h = rmsnorm(carry, lp["ln2"], cfg.norm_eps)
+    carry = shard_fn(carry + mlp(h, lp["mlp"], cfg.mlp_type))
+    return carry, out_kv
+
+
+def _cross_kv(lp_cross: Params, cfg: ModelConfig, enc_out: jnp.ndarray
+              ) -> Dict[str, jnp.ndarray]:
+    """Per-layer cross K/V from encoder output: [B, HKV, S_enc, hd]."""
+    hd = cfg.resolved_head_dim
+    bsz, s, _ = enc_out.shape
+    k = dense(enc_out, lp_cross["wk"]).reshape(
+        bsz, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = dense(enc_out, lp_cross["wv"]).reshape(
+        bsz, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return {"k": k, "v": v}
+
+
+def forward(params: Params, cfg: ModelConfig,
+            batch: Dict[str, jnp.ndarray], *, backend: str = "xla",
+            shard_fn: Callable = Identity, remat: bool = True,
+            collect_kv: bool = False
+            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Teacher-forced decoder logits.  batch: frames [B,S_enc,D],
+    tokens [B,S_dec], labels [B,S_dec]."""
+    enc_out = encode(params, cfg, batch["frames"], backend=backend,
+                     shard_fn=shard_fn, remat=remat)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = shard_fn(x)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        kv_x = _cross_kv(lp["cross"], cfg, enc_out)
+        carry, kv = _decoder_body(carry, lp, cfg, kv_x, positions,
+                                  backend, shard_fn)
+        ys = {}
+        if collect_kv:
+            ys = {"k": kv["k"], "v": kv["v"],
+                  "xk": kv_x["k"], "xv": kv_x["v"]}
+        return carry, ys
+
+    body_fn = _remat(body, remat)
+    x, ys = _scan(body_fn, x, params["decoder"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jax.lax.dot_general(x, params["lm_head"],
+                                 (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    extras: Dict[str, Any] = {}
+    if collect_kv:
+        extras["kv"] = ys
+    return logits, extras
+
+
+def loss_fn(params: Params, cfg: ModelConfig,
+            batch: Dict[str, jnp.ndarray], *, backend: str = "xla",
+            shard_fn: Callable = Identity, remat="full"):
+    logits, _ = forward(params, cfg, batch, backend=backend,
+                        shard_fn=shard_fn, remat=remat)
+    loss, denom = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss, "tokens": denom, "loss": loss}
+
+
+def init_cache(cfg: ModelConfig, bsz: int, max_len: int,
+               dtype=None) -> Dict[str, Any]:
+    dt = dtype or dtype_of(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    nd = cfg.n_layers
+    enc = cfg.encoder_seq
+    return {
+        "self": {"k": jnp.zeros((nd, bsz, cfg.n_kv_heads, max_len, hd),
+                                dt),
+                 "v": jnp.zeros((nd, bsz, cfg.n_kv_heads, max_len, hd),
+                                dt)},
+        "cross": {"k": jnp.zeros((nd, bsz, cfg.n_kv_heads, enc, hd), dt),
+                  "v": jnp.zeros((nd, bsz, cfg.n_kv_heads, enc, hd), dt)},
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig,
+            batch: Dict[str, jnp.ndarray], *, backend: str = "xla",
+            shard_fn: Callable = Identity
+            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    logits, extras = forward(params, cfg, batch, backend=backend,
+                             shard_fn=shard_fn, remat=False,
+                             collect_kv=True)
+    kv = extras["kv"]
+    return logits, {"self": {"k": kv["k"], "v": kv["v"]},
+                    "cross": {"k": kv["xk"], "v": kv["xv"]}}
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
+                tokens: jnp.ndarray, pos: jnp.ndarray, *,
+                shard_fn: Callable = Identity
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode token against self+cross caches (encoder already run)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(carry, inp):
+        lp, sc, xc = inp
+        carry, kv = _decoder_body(
+            carry, lp, cfg, xc, jnp.full((1,), pos), "xla", shard_fn,
+            self_cache=sc, pos=pos)
+        return carry, kv
+
+    x, new_self = _scan(
+        body, x, (params["decoder"], cache["self"], cache["cross"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jax.lax.dot_general(x, params["lm_head"],
+                                 (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,129 @@
+"""Model bundle: one uniform interface over all assigned architectures.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are pure
+functions — ``init``, ``loss_fn``, ``forward``, ``prefill``,
+``decode_step``, ``init_cache`` — plus ``input_specs`` /``cache_specs``
+(ShapeDtypeStruct stand-ins for the dry-run; no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+from repro.models.layers import dtype_of
+
+Identity = lambda x, where="boundary": x  # noqa: E731
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, rng: jax.Array):
+        """-> (params, logical_axes)"""
+        if self.cfg.family == "audio":
+            return encdec.init_params(self.cfg, rng)
+        return transformer.init_params(self.cfg, rng)
+
+    def axes_tree(self) -> Any:
+        """Logical-axes tree (cheap: tuples are static, but building them
+        requires running init abstractly)."""
+        out = {}
+
+        def capture(rng):
+            params, axes = (encdec.init_params(self.cfg, rng)
+                            if self.cfg.family == "audio"
+                            else transformer.init_params(self.cfg, rng))
+            out["axes"] = axes
+            return params
+
+        jax.eval_shape(capture, jax.random.key(0))
+        return out["axes"]
+
+    def abstract_params(self) -> Any:
+        """ShapeDtypeStruct tree of params (dry-run; no allocation)."""
+        return jax.eval_shape(lambda r: self.init(r)[0], jax.random.key(0))
+
+    # -- functional entry points -------------------------------------
+    def loss_fn(self, params, batch, *, backend="xla",
+                shard_fn: Callable = Identity, remat="full"):
+        if self.cfg.family == "audio":
+            return encdec.loss_fn(params, self.cfg, batch,
+                                  backend=backend, shard_fn=shard_fn,
+                                  remat=remat)
+        return transformer.loss_fn(params, self.cfg, batch,
+                                   backend=backend, shard_fn=shard_fn,
+                                   remat=remat)
+
+    def forward(self, params, batch, *, backend="xla",
+                shard_fn: Callable = Identity):
+        if self.cfg.family == "audio":
+            return encdec.forward(params, self.cfg, batch,
+                                  backend=backend, shard_fn=shard_fn)
+        return transformer.forward(params, self.cfg, batch,
+                                   backend=backend, shard_fn=shard_fn)
+
+    def prefill(self, params, batch, *, backend="xla",
+                shard_fn: Callable = Identity):
+        if self.cfg.family == "audio":
+            return encdec.prefill(params, self.cfg, batch,
+                                  backend=backend, shard_fn=shard_fn)
+        return transformer.prefill(params, self.cfg, batch,
+                                   backend=backend, shard_fn=shard_fn)
+
+    def decode_step(self, params, cache, tokens, pos, *,
+                    shard_fn: Callable = Identity):
+        if self.cfg.family == "audio":
+            return encdec.decode_step(params, self.cfg, cache, tokens,
+                                      pos, shard_fn=shard_fn)
+        return transformer.decode_step(params, self.cfg, cache, tokens,
+                                       pos, shard_fn=shard_fn)
+
+    def init_cache(self, bsz: int, max_len: int, dtype=None):
+        if self.cfg.family == "audio":
+            return encdec.init_cache(self.cfg, bsz, max_len, dtype)
+        return transformer.init_cache(self.cfg, bsz, max_len, dtype)
+
+    # -- dry-run stand-ins -------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStructs for the batch of a (train|prefill) step, or
+        for (tokens, pos) of a decode step."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = dtype_of(cfg.dtype)
+        i32 = jnp.int32
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                    "pos": jax.ShapeDtypeStruct((), i32)}
+        specs: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            s_text = s - cfg.num_image_tokens
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), i32)
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), dt)
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            return specs
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), dt)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+
+    def cache_specs(self, shape: ShapeConfig) -> Any:
+        """ShapeDtypeStruct tree of the decode cache for a shape cell."""
+        return jax.eval_shape(
+            functools.partial(self.init_cache, shape.global_batch,
+                              shape.seq_len))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch.
+
+Routing: softmax top-k.  Dispatch avoids the quadratic [T, E, C] one-hot
+einsum: token->slot assignment is computed with a sort (argsort by expert
+id + per-group positions), tokens are *gathered* into the per-expert
+capacity buffer [E, C, D], experts run as one batched matmul (EP shards the
+E dim over the model axis), and results *scatter-add* back weighted by the
+gate.  Slots beyond capacity C = ceil(k*T/E * capacity_factor) are dropped
+(standard capacity dropping).
+
+Shared experts (qwen2-moe) run densely as a fused SwiGLU over all tokens.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, Params, dense, mlp
+
+
+def moe_params(b: ParamBuilder, prefix: str, n_layers: int, d: int,
+               n_experts: int, moe_ff: int, n_shared: int,
+               shared_ff: int) -> None:
+    b.normal(f"{prefix}/router", [n_layers, d, n_experts],
+             ("layers", "embed", None), fan_in=d)
+    ax = ("layers", "experts", "embed", "ffn")
+    b.normal(f"{prefix}/w1", [n_layers, n_experts, d, moe_ff], ax, fan_in=d)
+    b.normal(f"{prefix}/w3", [n_layers, n_experts, d, moe_ff], ax, fan_in=d)
+    b.normal(f"{prefix}/w2", [n_layers, n_experts, moe_ff, d],
+             ("layers", "experts", "ffn", "embed"), fan_in=moe_ff)
+    if n_shared:
+        f = shared_ff * n_shared if shared_ff else 0
+        b.normal(f"{prefix}/shared_w1", [n_layers, d, f],
+                 ("layers", "embed", "ffn"), fan_in=d)
+        b.normal(f"{prefix}/shared_w3", [n_layers, d, f],
+                 ("layers", "embed", "ffn"), fan_in=d)
+        b.normal(f"{prefix}/shared_w2", [n_layers, f, d],
+                 ("layers", "ffn", "embed"), fan_in=f)
+
+
+def _capacity(n_tokens: int, n_experts: int, k: int, factor: float) -> int:
+    c = math.ceil(k * n_tokens / n_experts * factor)
+    return max(8, -(-c // 128) * 128 if c >= 128 else -(-c // 8) * 8)
+
+
+def moe_ffn(x: jnp.ndarray, p: Params, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25,
+            shard_fn=lambda x, where="boundary": x
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    bsz, seq, d = x.shape
+    t = bsz * seq
+    xt = x.reshape(t, d)
+
+    logits = dense(xt, p["router"]).astype(jnp.float32)      # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, top_k)               # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    density = jnp.mean(jax.nn.one_hot(expert[:, 0], n_experts), axis=0)
+    mean_prob = probs.mean(axis=0)
+    aux = n_experts * jnp.sum(density * mean_prob)
+
+    c = _capacity(t, n_experts, top_k, capacity_factor)
+    tk = t * top_k
+    flat_expert = expert.reshape(tk)                          # [T*k]
+    flat_gate = gate.reshape(tk)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+
+    # Sort-based slotting: position of each (token, k) entry within its
+    # expert's buffer.
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    group_start = jnp.searchsorted(sorted_expert,
+                                   jnp.arange(n_experts), side="left")
+    pos_in_expert = jnp.arange(tk) - group_start[sorted_expert]
+    keep = pos_in_expert < c
+    slot = sorted_expert * c + pos_in_expert                  # [T*k]
+
+    src_token = flat_token[order]
+    src_gate = flat_gate[order]
+
+    # Gather tokens into expert buffers: [E*C, D].
+    buf_token = jnp.full((n_experts * c,), t, jnp.int32)      # t = sentinel
+    buf_token = buf_token.at[jnp.where(keep, slot, n_experts * c)
+                             ].set(src_token.astype(jnp.int32),
+                                   mode="drop")
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    expert_in = x_pad[buf_token].reshape(n_experts, c, d)     # [E, C, D]
+    # Named for the "moe" remat policy: the dispatch gather is the most
+    # expensive thing to recompute in the backward pass (§Perf HC3).
+    expert_in = shard_fn(expert_in, "experts")
+    expert_in = jax.ad_checkpoint.checkpoint_name(expert_in, "moe_in")
+
+    # Batched expert SwiGLU: einsum over the expert dim (EP shards E).
+    h1 = jnp.einsum("ecd,edf->ecf", expert_in, p["w1"],
+                    preferred_element_type=jnp.float32)
+    h3 = jnp.einsum("ecd,edf->ecf", expert_in, p["w3"],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h1) * h3).astype(x.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"],
+                   preferred_element_type=jnp.float32)        # [E, C, D]
+    y = shard_fn(y, "experts")
+    y = jax.ad_checkpoint.checkpoint_name(y, "moe_out")
+    y = y.reshape(n_experts * c, d)
+
+    # Scatter-add back with gate weights.
+    out = jnp.zeros((t, d), jnp.float32)
+    w = jnp.where(keep, src_gate, 0.0)[:, None]
+    contrib = y[jnp.where(keep, slot, 0)] * w
+    out = out.at[src_token].add(contrib, mode="drop")
+
+    if "shared_w1" in p:
+        shared = mlp(xt, {"w1": p["shared_w1"], "w3": p["shared_w3"],
+                          "w2": p["shared_w2"]}, "swiglu")
+        out = out + shared.astype(jnp.float32)
+
+    return out.reshape(bsz, seq, d).astype(x.dtype), aux
+
+
+def moe_ffn_ref(x: jnp.ndarray, p: Params, *, n_experts: int,
+                top_k: int) -> jnp.ndarray:
+    """Oracle: dense evaluation of every expert on every token (no
+    capacity dropping) — tests compare against this with ample capacity."""
+    bsz, seq, d = x.shape
+    xt = x.reshape(bsz * seq, d)
+    logits = dense(xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    out = jnp.zeros_like(xt, dtype=jnp.float32)
+    for e in range(n_experts):
+        pe = {"w1": p["w1"][e], "w3": p["w3"][e], "w2": p["w2"][e]}
+        ye = mlp(xt, pe, "swiglu").astype(jnp.float32)
+        wsel = jnp.where(expert == e, gate, 0.0).sum(-1)[:, None]
+        out = out + wsel * ye
+    if "shared_w1" in p:
+        out = out + mlp(xt, {"w1": p["shared_w1"], "w3": p["shared_w3"],
+                             "w2": p["shared_w2"]},
+                        "swiglu").astype(jnp.float32)
+    return out.reshape(bsz, seq, d).astype(x.dtype)

@@ -1,0 +1,15 @@
+"""Scan configuration knob.
+
+``UNROLL = True`` makes every layer scan fully unroll.  The dry-run uses
+this for its small-L calibration compiles: XLA's ``cost_analysis`` counts a
+``while`` body once (trip counts are not multiplied in), so exact
+FLOP/byte/collective totals are obtained by compiling two small *unrolled*
+configurations and extrapolating linearly in the layer count
+(launch/roofline.py).  Training/serving leave this False (rolled scan =
+small HLO, fast compiles).
+"""
+UNROLL = False
+
+
+def scan_unroll():
+    return UNROLL

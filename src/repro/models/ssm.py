@@ -1,0 +1,202 @@
+"""Recurrent blocks: Mamba-1 selective SSM and the RG-LRU (recurrentgemma).
+
+Both recurrences have the form h_t = a_t * h_{t-1} + b_t and train/prefill
+with ``jax.lax.associative_scan`` (parallel in S); decode is the single
+fused update step.  The thesis' loop-order technique does not apply to the
+recurrence itself (bandwidth-bound scan, DESIGN.md §5) — it applies to the
+surrounding projections.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, Params, dense
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, axis: int = 1,
+                h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t along ``axis`` via associative scan.
+    a, b: same shape; h0 optional initial state (shape without the axis)."""
+    if h0 is not None:
+        # Fold h0 into the first step: b_0' = a_0 h0 + b_0.
+        b0 = jnp.take(b, jnp.array(0), axis=axis)
+        a0 = jnp.take(a, jnp.array(0), axis=axis)
+        b = jax.lax.dynamic_update_index_in_dim(
+            b, a0 * h0 + b0, 0, axis=axis)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=axis)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def mamba_params(b: ParamBuilder, prefix: str, n_layers: int, d: int,
+                 d_inner: int, state: int, conv: int, dt_rank: int) -> None:
+    b.normal(f"{prefix}/in_proj", [n_layers, d, 2 * d_inner],
+             ("layers", "embed", "inner"), fan_in=d)
+    b.normal(f"{prefix}/conv_w", [n_layers, d_inner, conv],
+             ("layers", "inner", None), fan_in=conv)
+    b.zeros(f"{prefix}/conv_b", [n_layers, d_inner], ("layers", "inner"))
+    b.normal(f"{prefix}/x_proj", [n_layers, d_inner, dt_rank + 2 * state],
+             ("layers", "inner", None), fan_in=d_inner)
+    b.normal(f"{prefix}/dt_proj", [n_layers, dt_rank, d_inner],
+             ("layers", None, "inner"), fan_in=dt_rank)
+    b.zeros(f"{prefix}/dt_bias", [n_layers, d_inner], ("layers", "inner"))
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, state + 1, dtype=jnp.float32), (n_layers, d_inner,
+                                                      state)))
+    b.const(f"{prefix}/A_log", a_init, ("layers", "inner", None))
+    b.ones(f"{prefix}/D", [n_layers, d_inner], ("layers", "inner"))
+    b.normal(f"{prefix}/out_proj", [n_layers, d_inner, d],
+             ("layers", "inner", "embed"), fan_in=d_inner)
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over seq.  x [B,S,C]; w [C,K]; optional
+    ``state`` [B,K-1,C] carries the last K-1 inputs (decode)."""
+    k = w.shape[-1]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(k):
+        out = out + xp[:, i:i + s, :].astype(jnp.float32) \
+            * w[:, i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_block(x: jnp.ndarray, p: Params, *, state: int, conv: int,
+                dt_rank: int,
+                cache: Optional[Dict[str, jnp.ndarray]] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """x [B,S,D] -> [B,S,D].  With ``cache`` (decode: S==1) the SSM and
+    conv states are carried and returned updated."""
+    bsz, seq, d = x.shape
+    d_inner = p["in_proj"].shape[-1] // 2
+
+    xz = dense(x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)                  # [B,S,di]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc = _causal_conv1d(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    xdbl = dense(xc, p["x_proj"])                       # [B,S,dr+2N]
+    dt, bmat, cmat = jnp.split(
+        xdbl.astype(jnp.float32), [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"].astype(jnp.float32))             # [B,S,di]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))        # [di,N]
+
+    da = jnp.exp(dt[..., None] * a)                     # [B,S,di,N]
+    dbx = (dt[..., None] * bmat[:, :, None, :]
+           * xc.astype(jnp.float32)[..., None])         # [B,S,di,N]
+
+    if cache is None:
+        h = linear_scan(da, dbx, axis=1)
+        # Final state (consumed by prefill; ignored by training).
+        new_cache = {"ssm": h[:, -1].astype(x.dtype),
+                     "conv": xin[:, -(conv - 1):, :]}
+    else:
+        h_prev = cache["ssm"].astype(jnp.float32)       # [B,di,N]
+        h = da[:, 0] * h_prev + dbx[:, 0]
+        new_conv = jnp.concatenate(
+            [conv_state[:, 1:], xin.astype(conv_state.dtype)], axis=1)
+        new_cache = {"ssm": h.astype(cache["ssm"].dtype),
+                     "conv": new_conv}
+        h = h[:, None]                                   # [B,1,di,N]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat)            # [B,S,di]
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(y.astype(x.dtype), p["out_proj"])
+    return out, new_cache
+
+
+def mamba_cache_init(bsz: int, d_inner: int, state: int, conv: int,
+                     dtype) -> Dict[str, jnp.ndarray]:
+    return {"ssm": jnp.zeros((bsz, d_inner, state), dtype),
+            "conv": jnp.zeros((bsz, conv - 1, d_inner), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_params(b: ParamBuilder, prefix: str, n_layers: int, d: int,
+                 width: int, conv: int = 4) -> None:
+    b.normal(f"{prefix}/in_x", [n_layers, d, width],
+             ("layers", "embed", "inner"), fan_in=d)
+    b.normal(f"{prefix}/in_gate", [n_layers, d, width],
+             ("layers", "embed", "inner"), fan_in=d)
+    b.normal(f"{prefix}/conv_w", [n_layers, width, conv],
+             ("layers", "inner", None), fan_in=conv)
+    b.zeros(f"{prefix}/conv_b", [n_layers, width], ("layers", "inner"))
+    b.normal(f"{prefix}/w_r", [n_layers, width, width],
+             ("layers", "inner", "inner2"), fan_in=width)
+    b.zeros(f"{prefix}/b_r", [n_layers, width], ("layers", "inner"))
+    b.normal(f"{prefix}/w_i", [n_layers, width, width],
+             ("layers", "inner", "inner2"), fan_in=width)
+    b.zeros(f"{prefix}/b_i", [n_layers, width], ("layers", "inner"))
+    b.const(f"{prefix}/lam", jnp.full((n_layers, width), 0.7),
+            ("layers", "inner"))
+    b.normal(f"{prefix}/out", [n_layers, width, d],
+             ("layers", "inner", "embed"), fan_in=width)
+
+
+def rglru_block(x: jnp.ndarray, p: Params, *,
+                cache: Optional[Dict[str, jnp.ndarray]] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Recurrentgemma recurrent sub-layer.  x [B,S,D] -> [B,S,D]."""
+    gate = jax.nn.gelu(dense(x, p["in_gate"]).astype(jnp.float32))
+    xb = dense(x, p["in_x"])
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc = _causal_conv1d(xb, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(dense(xc, p["w_r"]).astype(jnp.float32)
+                       + p["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(xc, p["w_i"]).astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b_term = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * gated_x
+
+    if cache is None:
+        h = linear_scan(a, b_term, axis=1)
+        new_cache = {"h": h[:, -1].astype(x.dtype),
+                     "conv": xb[:, -(p["conv_w"].shape[-1] - 1):, :]}
+    else:
+        h_prev = cache["h"].astype(jnp.float32)          # [B,W]
+        h = a[:, 0] * h_prev + b_term[:, 0]
+        new_conv = jnp.concatenate(
+            [conv_state[:, 1:], xb.astype(conv_state.dtype)], axis=1)
+        new_cache = {"h": h.astype(cache["h"].dtype), "conv": new_conv}
+        h = h[:, None]
+
+    y = (h * gate).astype(x.dtype)
+    return dense(y, p["out"]), new_cache
+
+
+def rglru_cache_init(bsz: int, width: int, conv: int, dtype
+                     ) -> Dict[str, jnp.ndarray]:
+    return {"h": jnp.zeros((bsz, width), dtype),
+            "conv": jnp.zeros((bsz, conv - 1, width), dtype)}

@@ -1,0 +1,5 @@
+from repro.optim import adamw, schedule, grad_compress
+from repro.optim.adamw import AdamWConfig, AdamWState
+
+__all__ = ["adamw", "schedule", "grad_compress", "AdamWConfig",
+           "AdamWState"]

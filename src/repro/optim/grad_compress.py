@@ -1,0 +1,83 @@
+"""Int8 gradient compression with error feedback (distributed-optimisation
+trick for bandwidth-bound data-parallel all-reduce).
+
+Per-leaf symmetric int8 quantisation with a float32 scale; the
+quantisation error is carried in an error-feedback buffer and added to the
+next step's gradient, so the scheme is unbiased over time (EF-SGD).  The
+compressed all-reduce is meant to run inside ``shard_map`` over the data
+axis: quantise -> psum int32 -> dequantise; on CPU tests it round-trips a
+single host.  The bandwidth saving shows up in the roofline's collective
+term (4 bytes -> 1 byte per element).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, error: Optional[Any] = None
+                  ) -> Tuple[Any, Any, Any]:
+    """Quantise a grad pytree (adding error feedback first).
+    Returns (q_tree, scale_tree, new_error_tree)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                             grads)
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error)
+    q_and_s = jax.tree.map(quantize, corrected)
+    q = jax.tree.map(lambda t: t[0], q_and_s,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], q_and_s,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(
+        lambda c, qq, ss: c - dequantize(qq, ss), corrected, q, s)
+    return q, s, new_err
+
+
+def decompress_tree(q: Any, s: Any) -> Any:
+    return jax.tree.map(dequantize, q, s)
+
+
+def allreduce_compressed(grads: Any, error: Any, axis_name: str) -> Tuple[Any, Any]:
+    """Inside shard_map: int8-quantised mean all-reduce over ``axis_name``
+    with error feedback.  Returns (mean_grads_f32, new_error).
+
+    Protocol: (1) pmax the per-leaf scales (a scalar collective), so all
+    shards quantise against the same global scale — summing raw int8
+    payloads is then exact up to rounding; (2) psum the int32 view
+    (wire format int8); (3) dequantise and divide by the shard count.
+    The rounding residue feeds back into the next step (EF)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                             grads)
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error)
+    n = jax.lax.psum(1, axis_name)
+
+    def one(c):
+        local_scale = jnp.maximum(jnp.max(jnp.abs(c)), 1e-12) / 127.0
+        scale = jax.lax.pmax(local_scale, axis_name)
+        q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int8)
+        new_e = c - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return total.astype(jnp.float32) * scale / n, new_e
+
+    out = jax.tree.map(one, corrected)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return mean, new_err

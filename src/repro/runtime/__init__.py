@@ -1,0 +1,3 @@
+from repro.runtime import ft, sharding, train_loop, serve_loop
+
+__all__ = ["ft", "sharding", "train_loop", "serve_loop"]

@@ -1,0 +1,83 @@
+"""Fault tolerance: straggler detection and restartable execution.
+
+At 1000+ nodes the two dominant failure modes are (a) hard node loss —
+handled by checkpoint/restart + elastic resume — and (b) stragglers
+(slow HBM, thermal throttle, network) that silently gate every synchronous
+step.  The :class:`StragglerMonitor` keeps an EWMA of step time and flags
+outliers; the configured action escalates from logging to the caller's
+hook (e.g. drain + re-shard without the slow pod).  This is the
+run-time-steadiness machinery of thesis §6.4 pointed at fault tolerance:
+the same "recent IPC predicts the run" property that justifies
+micro-profiling also makes cheap statistical straggler detection sound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Dict, List, Optional
+
+log = logging.getLogger("repro.ft")
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ewma: float
+    ratio: float
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 warmup_steps: int = 5,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]]
+                 = None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup_steps
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.events: List[StragglerEvent] = []
+        self._n = 0
+
+    def record(self, step: int, duration: float) -> Optional[StragglerEvent]:
+        self._n += 1
+        if self.ewma is None:
+            self.ewma = duration
+            return None
+        event = None
+        if self._n > self.warmup and duration > self.threshold * self.ewma:
+            event = StragglerEvent(step=step, duration=duration,
+                                   ewma=self.ewma,
+                                   ratio=duration / self.ewma)
+            self.events.append(event)
+            log.warning("straggler step %d: %.3fs vs ewma %.3fs (x%.1f)",
+                        step, duration, self.ewma, event.ratio)
+            if self.on_straggler:
+                self.on_straggler(event)
+            # Do not poison the EWMA with the outlier.
+            return event
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration
+        return event
+
+
+def run_with_restart(make_state: Callable[[], Dict],
+                     run: Callable[[Dict], None],
+                     max_restarts: int = 3,
+                     retriable: tuple = (RuntimeError,)) -> int:
+    """Launcher-level retry loop: (re)build state (which restores from the
+    latest checkpoint) and run; on a retriable failure, rebuild and
+    continue.  Returns the number of restarts used."""
+    restarts = 0
+    while True:
+        state = make_state()
+        try:
+            run(state)
+            return restarts
+        except retriable as e:  # noqa: PERF203
+            restarts += 1
+            log.warning("run failed (%s); restart %d/%d", e, restarts,
+                        max_restarts)
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,81 @@
+"""Serving driver: batched prefill + greedy decode with KV/state caches."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float
+    decode_s: float
+    tokens_generated: int
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.tokens_generated / max(self.decode_s, 1e-9)
+
+
+def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
+             max_new_tokens: int, temperature: float = 0.0,
+             rng: Optional[jax.Array] = None,
+             ) -> tuple[np.ndarray, ServeStats]:
+    """Greedy (or sampled) continuation of a batch of prompts.
+
+    batch: {"tokens": [B, S_prompt]} plus modality stubs if any.
+    Returns generated tokens [B, max_new_tokens].
+    """
+    cfg = model.cfg
+    bsz, prompt_len = batch["tokens"].shape
+    total = prompt_len + max_new_tokens
+    if cfg.family == "vlm":
+        total += cfg.num_image_tokens
+
+    t0 = time.time()
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    # Grow caches to full capacity.
+    full = model.init_cache(bsz, total)
+
+    def fit(dst, src):
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        sl = tuple(slice(0, s) for s in src.shape)
+        return dst.at[sl].set(src.astype(dst.dtype))
+
+    cache = jax.tree.map(fit, full, cache)
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+
+    step_jit = jax.jit(model.decode_step)
+
+    def pick(lg, key):
+        if temperature <= 0.0:
+            return jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, lg[:, -1] / temperature, -1
+                                      ).astype(jnp.int32)
+
+    rng = rng if rng is not None else jax.random.key(0)
+    rng, sub = jax.random.split(rng)
+    tok = pick(logits, sub)
+    out: List[np.ndarray] = [np.asarray(tok)]
+    pos0 = prompt_len + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
+
+    t1 = time.time()
+    for i in range(max_new_tokens - 1):
+        lg, cache = step_jit(params, cache, tok[:, None],
+                             jnp.int32(pos0 + i))
+        rng, sub = jax.random.split(rng)
+        tok = pick(lg, sub)
+        out.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    decode_s = time.time() - t1
+    return np.stack(out, axis=1), ServeStats(
+        prefill_s=prefill_s, decode_s=decode_s,
+        tokens_generated=bsz * max_new_tokens)

@@ -1,0 +1,209 @@
+"""Logical-axis sharding rules: FSDP x TP x DP(+EP/SP) with divisibility
+fallbacks.
+
+Models annotate parameters with *logical* axis names (ParamBuilder);
+this module maps them to mesh axes:
+
+    vocab   -> model            (embedding/LM-head TP)
+    embed   -> (pod, data)      (FSDP / ZeRO: params + optimizer state
+                                 sharded over the data axes; XLA inserts
+                                 per-layer all-gathers under scan)
+    heads   -> model            (attention TP)
+    kv_heads-> model            (falls back towards None if indivisible,
+                                 e.g. MQA kv=1)
+    ffn     -> model            (MLP TP)
+    experts -> model            (expert parallelism)
+    inner   -> model            (mamba/rg-lru inner width)
+    layers  -> None             (scan axis)
+
+A mesh axis is used at most once per leaf; any dimension that does not
+divide evenly drops its assignment (never a compile error — the dry-run
+proves whatever this module emits actually lowers).  The rules table is a
+plain dict, which is exactly the knob the §Perf hillclimb turns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Tuple[str, ...]
+
+# Default logical->mesh rules.  Order within a value tuple = the mesh axes
+# composing the sharding of that dimension.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "vocab": ("model",),
+    "embed": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),
+    "inner2": (),
+    "layers": (),
+    "batch": ("pod", "data"),
+    "capacity": (),
+    "seq": (),
+    "act_embed": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, MeshAxes] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    def with_overrides(self, **kw: MeshAxes) -> "ShardingRules":
+        r = dict(self.rules)
+        r.update(kw)
+        return ShardingRules(rules=r)
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Mesh, rules: ShardingRules) -> P:
+    """Logical axes + concrete shape -> PartitionSpec.
+
+    Per dimension: look up the rule, keep only mesh axes that exist in
+    this mesh and are unused so far, then greedily keep the longest prefix
+    whose size product divides the dimension."""
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for ax, dim in zip(axes, shape):
+        assign: Tuple[str, ...] = ()
+        if ax is not None:
+            want = [a for a in rules.rules.get(ax, ())
+                    if a in sizes and a not in used]
+            # longest prefix that divides
+            best: Tuple[str, ...] = ()
+            prod = 1
+            for a in want:
+                prod *= sizes[a]
+                if dim % prod == 0:
+                    best = best + (a,)
+                else:
+                    break
+            assign = best
+        used.update(assign)
+        if len(assign) == 0:
+            out.append(None)
+        elif len(assign) == 1:
+            out.append(assign[0])
+        else:
+            out.append(tuple(assign))
+    return P(*out)
+
+
+def tree_specs(axes_tree: Any, abstract_tree: Any, mesh: Mesh,
+               rules: ShardingRules) -> Any:
+    """Map matching (axes, ShapeDtypeStruct) trees -> PartitionSpecs."""
+    return jax.tree.map(
+        lambda ax, leaf: resolve_spec(ax, leaf.shape, mesh, rules),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(axes_tree: Any, abstract_tree: Any, mesh: Mesh,
+                   rules: ShardingRules) -> Any:
+    specs = tree_specs(axes_tree, abstract_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(shape: Sequence[int], mesh: Mesh,
+               rules: ShardingRules) -> P:
+    """Data batches: dim 0 over the batch rule; rest replicated."""
+    axes: list = ["batch"] + [None] * (len(shape) - 1)
+    return resolve_spec(axes, shape, mesh, rules)
+
+
+def batch_specs(batch_tree: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    return jax.tree.map(
+        lambda leaf: batch_spec(leaf.shape, mesh, rules), batch_tree)
+
+
+_CACHE_AXES: Dict[Tuple[str, int], Tuple[Optional[str], ...]] = {
+    # kv caches
+    ("k", 5): ("layers", "batch", "kv_heads", "seq", None),
+    ("v", 5): ("layers", "batch", "kv_heads", "seq", None),
+    ("k", 4): ("batch", "kv_heads", "seq", None),
+    ("v", 4): ("batch", "kv_heads", "seq", None),
+    # mamba / rglru states
+    ("ssm", 4): ("layers", "batch", "inner", None),
+    ("ssm", 3): ("batch", "inner", None),
+    ("conv", 4): ("layers", "batch", None, "inner"),
+    ("conv", 3): ("batch", None, "inner"),
+    ("h", 3): ("layers", "batch", "inner"),
+    ("h", 2): ("batch", "inner"),
+}
+
+
+def cache_specs(cache_tree: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    """PartitionSpecs for a decode cache tree (pattern-matched on leaf
+    names — the cache layout is owned by the models)."""
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)
+    paths, treedef = flat[0], flat[1]
+    leaves = []
+    for path, leaf in paths:
+        name = str(getattr(path[-1], "key", path[-1]))
+        axes = _CACHE_AXES.get((name, len(leaf.shape)))
+        if axes is None:
+            axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        leaves.append(resolve_spec(axes, leaf.shape, mesh, rules))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def make_activation_shard_fn(mesh: Mesh, rules: ShardingRules):
+    """Constraint applied to activations.
+
+    ``where="boundary"`` (default) — the residual stream between layers:
+    [batch, seq, embed] -> (batch rule, seq rule, act_embed rule).  With
+    ``rules.with_overrides(seq=("model",))`` this is Megatron-style
+    sequence parallelism.
+
+    ``where="inner"`` — layer-input tensors feeding the TP matmuls: seq
+    explicitly *replicated* so GSPMD keeps the weights TP-sharded and
+    gathers the (much smaller) activations instead.  Without this
+    constraint GSPMD resolves the seq@model / ffn@model conflict by
+    all-gathering the weights every layer — measured as the dominant
+    collective term in §Perf before this fix."""
+
+    def shard_fn(x, where: str = "boundary"):
+        if x.ndim != 3:
+            return x
+        if where == "experts":
+            # MoE buffers [E, C, D]: experts rarely divide the model
+            # axis (e.g. 60 on 16), so shard the capacity dim instead.
+            spec = resolve_spec((None, "capacity", None), x.shape, mesh,
+                                rules)
+        elif where == "inner":
+            spec = resolve_spec(("batch", None, None), x.shape, mesh,
+                                rules)
+        else:
+            spec = resolve_spec(("batch", "seq", "act_embed"), x.shape,
+                                mesh, rules)
+        if all(s is None for s in spec):
+            # an all-None constraint would pin the tensor *replicated*,
+            # overriding (usually better) GSPMD propagation — skip it
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return shard_fn
+
+
+def mesh_contains(mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names

@@ -1,0 +1,207 @@
+"""Training driver: jitted step, checkpoint/restart, straggler monitor.
+
+The loop is a pure function of (checkpoint, data-pipeline state): a crash
+at any point resumes bit-exact from the last committed checkpoint (the
+pipeline is stateless-shardable, so elastic restarts on a different mesh
+or host count replay the identical global batches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, DataPipeline
+from repro.models.model_zoo import Model
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, AdamWState
+from repro.optim.schedule import warmup_cosine
+from repro.runtime import sharding as shd
+from repro.runtime.ft import StragglerMonitor
+
+log = logging.getLogger("repro.train")
+
+Identity = lambda x, where="boundary": x  # noqa: E731
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    warmup_steps: int = 10
+    backend: str = "xla"
+    seed: int = 0
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    lr_fn: Callable, *, backend: str = "xla",
+                    shard_fn: Callable = Identity,
+                    remat="full", microbatches: int = 1,
+                    grad_shard_fn: Callable = Identity) -> Callable:
+    """(params, opt_state, batch) -> (params', opt_state', metrics).
+
+    ``microbatches > 1`` splits the batch and accumulates gradients over a
+    scan — the live-activation set shrinks by the microbatch factor (the
+    HBM-fit lever at large global batch).  ``grad_shard_fn`` constrains
+    the accumulator's sharding (pass the optimizer-state shardings for
+    ZeRO-2 behaviour: XLA reduce-scatters each microbatch's gradients and
+    the accumulator lives fully sharded)."""
+
+    def grad_of(params, batch):
+        def lossf(p):
+            return model.loss_fn(p, batch, backend=backend,
+                                 shard_fn=shard_fn, remat=remat)
+        return jax.value_and_grad(lossf, has_aux=True)(params)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grad_of(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (_, m), g = grad_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return grad_shard_fn(acc), m
+
+            zero = grad_shard_fn(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            from repro.models import scan_config
+            gsum, ms = jax.lax.scan(body, zero, mbs,
+                                    unroll=scan_config.UNROLL)
+            grads = jax.tree.map(
+                lambda g, p: (g / microbatches).astype(p.dtype), gsum,
+                params)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+        lr = lr_fn(opt_state.step)
+        params2, opt2, om = adamw.apply(opt_cfg, params, grads, opt_state,
+                                        lr)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params2, opt2, metrics
+
+    return train_step
+
+
+class Trainer:
+    """End-to-end trainer; meshless (CPU examples/tests) or meshed."""
+
+    def __init__(self, model: Model, cfg: TrainConfig,
+                 data_cfg: DataConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 rules: Optional[shd.ShardingRules] = None):
+        self.model = model
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.mesh = mesh
+        self.rules = rules or shd.ShardingRules()
+        self.monitor = StragglerMonitor()
+        self.ckpt = (Checkpointer(cfg.ckpt_dir)
+                     if cfg.ckpt_dir else None)
+        self.history: List[Dict[str, float]] = []
+
+        lr_fn = functools.partial(
+            warmup_cosine, peak_lr=cfg.opt.lr,
+            warmup_steps=cfg.warmup_steps, total_steps=cfg.steps)
+        shard_fn = Identity
+        if mesh is not None:
+            shard_fn = shd.make_activation_shard_fn(mesh, self.rules)
+        self._step_fn = make_train_step(model, cfg.opt, lr_fn,
+                                        backend=cfg.backend,
+                                        shard_fn=shard_fn)
+
+    # -- state ---------------------------------------------------------
+    def init_state(self):
+        params, _ = self.model.init(jax.random.key(self.cfg.seed))
+        opt_state = adamw.init(params)
+        return params, opt_state
+
+    def _jitted(self, params, opt_state):
+        if self.mesh is None:
+            return jax.jit(self._step_fn, donate_argnums=(0, 1))
+        axes = self.model.axes_tree()
+        p_abs = jax.eval_shape(lambda: params)
+        p_sh = shd.tree_shardings(axes, p_abs, self.mesh, self.rules)
+        m_sh = jax.tree.map(
+            lambda ax, leaf: jax.sharding.NamedSharding(
+                self.mesh, shd.resolve_spec(ax, leaf.shape, self.mesh,
+                                            self.rules)),
+            axes, jax.eval_shape(lambda: opt_state.m),
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        opt_sh = adamw.AdamWState(
+            step=jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec()),
+            m=m_sh, v=m_sh)
+        return jax.jit(self._step_fn,
+                       in_shardings=(p_sh, opt_sh, None),
+                       donate_argnums=(0, 1))
+
+    # -- run -----------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        steps = steps or self.cfg.steps
+        params, opt_state = self.init_state()
+        start_step = 0
+        if self.ckpt is not None:
+            restored = self.ckpt.restore_latest(
+                like={"params": params, "opt": opt_state})
+            if restored is not None:
+                start_step, tree, extra = restored
+                params = jax.tree.map(jnp.asarray, tree["params"])
+                opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+                opt_state = AdamWState(*opt_state) if isinstance(
+                    opt_state, (tuple, list)) else opt_state
+                log.info("restored step %d", start_step)
+
+        pipe = DataPipeline(self.data_cfg, state=None)
+        # fast-forward pipeline to the restored step
+        for _ in range(start_step):
+            pipe.next()
+
+        step_fn = self._jitted(params, opt_state)
+        t_total = time.time()
+        try:
+            for step in range(start_step, steps):
+                batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+                t0 = time.time()
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                self.monitor.record(step, dt)
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec["step"] = step
+                rec["dt"] = dt
+                self.history.append(rec)
+                if step % self.cfg.log_every == 0:
+                    log.info("step %d loss %.4f dt %.3fs", step,
+                             rec["loss"], dt)
+                if (self.ckpt is not None and (step + 1)
+                        % self.cfg.ckpt_every == 0):
+                    self.ckpt.save(step + 1,
+                                   {"params": params, "opt": opt_state},
+                                   extra={"data_step": step + 1},
+                                   blocking=False)
+        finally:
+            pipe.close()
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        return {"params": params, "opt_state": opt_state,
+                "history": self.history,
+                "wall_time": time.time() - t_total,
+                "stragglers": self.monitor.events}

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests run against the source tree (PYTHONPATH=src also works).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device.
+# Multi-device tests spawn subprocesses that set the flag themselves.

@@ -1,0 +1,158 @@
+"""Invariants of the analytic cache model + agreement with the exact
+trace simulator (thesis §2.3.1 validation)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import loopnest as ln
+from repro.core import tracesim
+from repro.core.cost_model import CacheLevel, MachineModel
+from repro.core.loopnest import ConvLayer
+
+SMALL = MachineModel(levels=(CacheLevel("L1", 2048, 32, 3),
+                             CacheLevel("L2", 8192, 32, 10,
+                                        associativity=8)))
+
+layer_st = st.builds(
+    ConvLayer,
+    oc=st.integers(2, 12), ic=st.integers(2, 12),
+    h=st.integers(4, 14), w=st.integers(4, 14),
+    kh=st.sampled_from([1, 3]), kw=st.sampled_from([1, 3]))
+
+perm_st = st.permutations(range(6)).map(tuple)
+
+
+@given(layer_st, perm_st)
+@settings(max_examples=60, deadline=None)
+def test_misses_at_least_compulsory(layer, perm):
+    """Fetches can never undercut one fetch per distinct block."""
+    res = cm.simulate(layer, perm, SMALL)
+    for level in SMALL.levels:
+        blk = level.block_bytes
+        compulsory = sum(
+            ln.footprint_blocks(layer, a, ln.inner_set(perm, 0), blk)
+            for a in ln.ARRAY_DIMS)
+        # out may be counted once per spill, never below its blocks
+        assert res.misses[level.name] >= 0.95 * compulsory
+
+
+@given(layer_st, perm_st)
+@settings(max_examples=40, deadline=None)
+def test_l2_not_more_than_l1(layer, perm):
+    res = cm.simulate(layer, perm, SMALL)
+    assert res.misses["L2"] <= res.misses["L1"] * 1.0001
+
+
+@given(layer_st)
+@settings(max_examples=30, deadline=None)
+def test_full_footprint_perm_invariant(layer):
+    """The total distinct-block footprint is permutation independent."""
+    blk = 32
+    perms = [(0, 1, 2, 3, 4, 5), (5, 4, 3, 2, 1, 0), (2, 0, 3, 1, 4, 5)]
+    totals = []
+    for p in perms:
+        inner = ln.inner_set(p, 0)
+        totals.append(tuple(
+            ln.footprint_blocks(layer, a, inner, blk)
+            for a in ln.ARRAY_DIMS))
+    assert totals[0] == totals[1] == totals[2]
+
+
+@given(layer_st, perm_st)
+@settings(max_examples=30, deadline=None)
+def test_bigger_cache_never_hurts(layer, perm):
+    small = cm.simulate(layer, perm, SMALL)
+    big = cm.simulate(layer, perm, MachineModel())
+    assert big.misses["L1"] <= small.misses["L1"] * 1.0001
+
+
+def test_partial_sums_reduce_accesses():
+    layer = ConvLayer(8, 8, 10, 10, 3, 3)
+    perm = (0, 2, 3, 1, 4, 5)
+    with_ps = cm.simulate(layer, perm, SMALL, partial_sums=True)
+    without = cm.simulate(layer, perm, SMALL, partial_sums=False)
+    assert with_ps.accesses < without.accesses
+
+
+def test_threads_speed_up_good_perms():
+    layer = ConvLayer(32, 8, 10, 10, 3, 3)
+    perm = (0, 2, 3, 1, 4, 5)     # oc outermost: parallel, atomic-free
+    t1 = cm.simulate(layer, perm, SMALL, threads=1).cycles
+    t8 = cm.simulate(layer, perm, SMALL, threads=8).cycles
+    assert t8 < t1 / 4
+
+
+def test_kernel_outermost_parallelises_badly():
+    layer = ConvLayer(32, 8, 10, 10, 3, 3)
+    good = cm.simulate(layer, (0, 2, 3, 1, 4, 5), SMALL, threads=8)
+    bad = cm.simulate(layer, (4, 0, 2, 3, 1, 5), SMALL, threads=8)
+    # ky trips = 3 < 8 threads: limited speedup (thesis Fig 4.9)
+    assert bad.cycles > good.cycles
+
+
+def test_trace_sim_rank_agreement():
+    layer = ConvLayer(12, 6, 10, 10, 3, 3)
+    rng = np.random.default_rng(0)
+    import itertools
+    perms = list(itertools.permutations(range(6)))
+    sample = [perms[i] for i in rng.choice(720, 25, replace=False)]
+    a = np.array([cm.simulate(layer, p, SMALL).cycles for p in sample])
+    e = np.array([tracesim.simulate_trace(layer, p, SMALL).cycles
+                  for p in sample])
+    ra = np.argsort(np.argsort(a)).astype(float)
+    re = np.argsort(np.argsort(e)).astype(float)
+    rho = np.corrcoef(ra, re)[0, 1]
+    assert rho > 0.7, rho
+
+
+def test_trace_generator_exact_counts():
+    layer = ConvLayer(2, 3, 4, 4, 3, 3)
+    trace, iters = tracesim.generate_trace(layer, (0, 1, 2, 3, 4, 5),
+                                           partial_sums=False)
+    assert iters == layer.iterations
+    assert len(trace) == 3 * iters
+
+
+def test_tpu_cost_model_vmem_penalty():
+    layer = ConvLayer(512, 512, 256, 256, 3, 3)
+    ok = cm.conv_schedule_cost(layer, ("oc", "y", "x", "ic"),
+                               {"oc": 128, "ic": 128, "y": 8, "x": 16})
+    assert ok.vmem_peak <= cm.TPUSpec().vmem_bytes
+    # absurd block = everything resident -> VMEM blowout penalty
+    bad = cm.conv_schedule_cost(layer, ("oc", "y", "x", "ic"),
+                                {"oc": 512, "ic": 512, "y": 256,
+                                 "x": 256})
+    assert bad.vmem_peak > cm.TPUSpec().vmem_bytes
+    assert ok.time_s < bad.time_s
+
+
+def test_tpu_reduction_outer_costs_more_hbm():
+    """Isolate the partial-sums effect (thesis §3.3): with full spatial /
+    oc blocks and a 1x1 kernel, wgt+img traffic is order-invariant and
+    the only difference is the out flush/refetch of reduction-outer
+    orders."""
+    layer = ConvLayer(64, 64, 32, 32, 1, 1)
+    blocks = {"oc": 64, "ic": 16, "y": 32, "x": 32}
+    inner = cm.conv_schedule_cost(layer, ("oc", "y", "x", "ic"), blocks)
+    outer = cm.conv_schedule_cost(layer, ("ic", "oc", "y", "x"), blocks)
+    assert outer.hbm_bytes > inner.hbm_bytes  # out flush/refetch penalty
+
+
+def test_reuse_analysis_fig_3_3():
+    """Thesis Fig 3.3: the best permutation has a smaller block working
+    set and shorter reuse distance than the worst."""
+    layer = ConvLayer(16, 8, 12, 12, 3, 3)
+    import itertools
+    perms = list(itertools.permutations(range(6)))
+    cyc = [cm.simulate(layer, p, SMALL).cycles for p in perms]
+    best = perms[int(np.argmin(cyc))]
+    worst = perms[int(np.argmax(cyc))]
+    tb, _ = tracesim.generate_trace(layer, best, max_iters=50_000)
+    tw, _ = tracesim.generate_trace(layer, worst, max_iters=50_000)
+    rb = tracesim.reuse_analysis(tb)
+    rw = tracesim.reuse_analysis(tw)
+    assert rb["mean_reuse_distance"] < rw["mean_reuse_distance"]
+    assert rb["working_set_bytes"] <= rw["working_set_bytes"]

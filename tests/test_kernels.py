@@ -1,0 +1,157 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret
+mode; shapes x dtypes x schedule parameters)."""
+import itertools
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import conv2d, conv2d_ref
+from repro.kernels.flash_attention import flash_attention, mha_ref
+from repro.kernels.matmul import matmul, matmul_ref
+from repro.kernels.sparse_conv import (analyze_weights, sparse_conv2d,
+                                       sparse_conv_ref)
+
+RNG = np.random.default_rng(42)
+
+
+def arr(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- conv2d
+
+@pytest.mark.parametrize("order", list(
+    itertools.permutations(("oc", "ic", "y", "x"))))
+def test_conv2d_all_grid_orders(order):
+    img, wgt = arr((1, 8, 10, 10)), arr((8, 8, 3, 3))
+    out = conv2d(img, wgt, block={"oc": 4, "ic": 4, "y": 4, "x": 4},
+                 grid_order=order)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(conv2d_ref(img, wgt)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 4, 8, 8, 8, 1, 1),    # 1x1 kernel
+    (2, 8, 12, 8, 16, 3, 3),  # rectangular
+    (1, 16, 6, 6, 4, 5, 5),   # big kernel
+])
+def test_conv2d_shapes(shape):
+    n, ic, h, w, oc, kh, kw = shape
+    img = arr((n, ic, h + kh - 1, w + kw - 1))
+    wgt = arr((oc, ic, kh, kw))
+    out = conv2d(img, wgt)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(conv2d_ref(img, wgt)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d_dtypes(dtype):
+    img = arr((1, 8, 10, 10)).astype(dtype)
+    wgt = arr((8, 8, 3, 3)).astype(dtype)
+    out = conv2d(img, wgt, block={"oc": 8, "ic": 8, "y": 8, "x": 8})
+    ref = conv2d_ref(img, wgt)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize("order", list(
+    itertools.permutations(("m", "n", "k"))))
+def test_matmul_orders(order):
+    a, b = arr((32, 48)), arr((48, 24))
+    out = matmul(a, b, block={"m": 8, "n": 8, "k": 16}, grid_order=order)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("resident", [False, True])
+@pytest.mark.parametrize("mnk", [(16, 16, 16), (64, 32, 128),
+                                 (8, 128, 32)])
+def test_matmul_shapes_resident(mnk, resident):
+    m, n, k = mnk
+    a, b = arr((m, k)), arr((k, n))
+    out = matmul(a, b, block={"m": min(8, m), "n": min(8, n),
+                              "k": min(16, k)}, resident_rhs=resident)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    a, b = arr((32, 32)).astype(dtype), arr((32, 32)).astype(dtype)
+    out = matmul(a, b, block={"m": 16, "n": 16, "k": 16})
+    tol = 1e-5 if dtype == jnp.float32 else 0.1
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(matmul_ref(a, b), np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 8), (False, 8)])
+def test_flash_masks(causal, window):
+    q, k, v = arr((1, 2, 32, 16)), arr((1, 2, 32, 16)), arr((1, 2, 32, 16))
+    out = flash_attention(q, k, v, block_q=8, block_kv=8, causal=causal,
+                          window=window)
+    ref = mha_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_gqa(hq, hkv):
+    q, k, v = arr((2, hq, 24, 8)), arr((2, hkv, 24, 8)), arr((2, hkv, 24, 8))
+    out = flash_attention(q, k, v, block_q=8, block_kv=12)
+    ref = mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flash_bf16():
+    q = arr((1, 2, 16, 16)).astype(jnp.bfloat16)
+    k = arr((1, 2, 16, 16)).astype(jnp.bfloat16)
+    v = arr((1, 2, 16, 16)).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=8, block_kv=8)
+    ref = mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0.1, atol=0.1)
+
+
+# ------------------------------------------------------------ sparse conv
+
+@pytest.mark.parametrize("density", [0.0, 0.3, 0.7, 1.0])
+def test_sparse_conv_densities(density):
+    oc, ic = 8, 16
+    block = {"oc": 4, "ic": 4}
+    w = RNG.normal(size=(oc, ic, 3, 3)).astype(np.float32)
+    zero = RNG.random((oc // 4, ic // 4)) >= density
+    for o in range(zero.shape[0]):
+        for i in range(zero.shape[1]):
+            if zero[o, i]:
+                w[o * 4:(o + 1) * 4, i * 4:(i + 1) * 4] = 0.0
+    img = arr((1, ic, 8, 8))
+    wj = jnp.asarray(w)
+    sp = analyze_weights(w, block)
+    out = sparse_conv2d(img, wj, block=block, sparsity=sp)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(sparse_conv_ref(img, wj)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_structure_stats():
+    w = np.zeros((8, 8, 1, 1), np.float32)
+    w[:4, :4] = 1.0   # one dense quadrant
+    sp = analyze_weights(w, {"oc": 4, "ic": 4})
+    assert sp.density == 0.25
+    assert sp.imbalance == 2.0   # one oc block has all the work

@@ -1,0 +1,61 @@
+"""Properties of the permutation indexing (thesis §4.2)."""
+import itertools
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import permutations as pm
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 6])
+def test_sjt_visits_all_once(n):
+    ps = pm.sjt_permutations(n)
+    assert len(ps) == math.factorial(n)
+    assert len(set(ps)) == math.factorial(n)
+
+
+@pytest.mark.parametrize("n", [3, 4, 6])
+def test_sjt_adjacent_transpositions(n):
+    ps = pm.sjt_permutations(n)
+    for a, b in zip(ps, ps[1:]):
+        diff = [i for i in range(n) if a[i] != b[i]]
+        assert len(diff) == 2 and diff[1] == diff[0] + 1
+        assert a[diff[0]] == b[diff[1]] and a[diff[1]] == b[diff[0]]
+
+
+@given(st.permutations(range(6)))
+@settings(max_examples=60, deadline=None)
+def test_hamiltonian_index_roundtrip(perm):
+    idx = pm.hamiltonian_index(tuple(perm))
+    assert pm.sjt_permutations(6)[idx] == tuple(perm)
+
+
+@given(st.permutations(range(6)))
+@settings(max_examples=60, deadline=None)
+def test_lex_index_matches_itertools(perm):
+    all_lex = list(itertools.permutations(range(6)))
+    assert all_lex[pm.lex_index(tuple(perm))] == tuple(perm)
+
+
+@given(st.permutations(range(5)))
+@settings(max_examples=40, deadline=None)
+def test_neighbors_symmetric(perm):
+    p = tuple(perm)
+    for q in pm.permutohedron_neighbors(p):
+        assert p in pm.permutohedron_neighbors(q)
+
+
+def test_permutohedron_graph_size():
+    g = pm.permutohedron_graph(4)
+    assert len(g) == 24
+    assert sum(len(v) for v in g.values()) == 24 * 3  # degree n-1
+
+
+@given(st.permutations(range(6)))
+@settings(max_examples=30, deadline=None)
+def test_perm_inverse(perm):
+    p = tuple(perm)
+    inv = pm.perm_inverse(p)
+    assert pm.perm_apply(p, pm.perm_apply(inv, list(range(6)))) == \
+        tuple(range(6))

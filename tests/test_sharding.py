@@ -1,0 +1,77 @@
+"""Sharding-rule resolution (single-device: specs only, no mesh exec)."""
+import numpy as np
+import pytest
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import sharding as shd
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis names + shape only (resolve_spec needs just
+    these)."""
+    def __init__(self, names, shape):
+        self.axis_names = tuple(names)
+        self.devices = np.empty(tuple(shape), dtype=object)
+
+
+MESH = FakeMesh(("data", "model"), (16, 16))
+MESH3 = FakeMesh(("pod", "data", "model"), (2, 16, 16))
+RULES = shd.ShardingRules()
+
+
+def test_basic_tp_fsdp():
+    spec = shd.resolve_spec(("layers", "embed", "ffn"),
+                            (64, 5120, 25600), MESH, RULES)
+    assert spec == P(None, "data", "model")
+
+
+def test_multipod_embed_gets_both():
+    spec = shd.resolve_spec(("layers", "embed", "ffn"),
+                            (64, 5120, 25600), MESH3, RULES)
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_indivisible_drops():
+    # kv_heads=1 (MQA) cannot shard over model=16
+    spec = shd.resolve_spec(("layers", "embed", "kv_heads"),
+                            (38, 4096, 1 * 128), MESH, RULES)
+    assert spec[2] == "model"  # 128 divides
+    spec = shd.resolve_spec(("layers", "embed", "kv_heads"),
+                            (38, 4096, 8), MESH, RULES)
+    assert spec[2] is None     # 8 does not divide 16
+
+
+def test_no_double_axis_use():
+    # two dims both wanting "model": second must drop
+    spec = shd.resolve_spec(("heads", "ffn"), (512, 512), MESH, RULES)
+    assert spec == P("model", None)
+
+
+def test_partial_prefix_for_multiaxis_rule():
+    # embed -> (pod, data): with dim divisible by pod but not pod*data
+    spec = shd.resolve_spec(("embed",), (4,), MESH3, RULES)
+    assert spec == P(("pod",))
+
+
+def test_batch_spec_decode_batch1():
+    spec = shd.batch_spec((1, 1), MESH, RULES)
+    assert spec == P(None, None)   # batch=1 cannot shard
+    spec = shd.batch_spec((256, 4096), MESH, RULES)
+    assert spec == P("data", None)
+
+
+def test_cache_specs_pattern_match():
+    cache = {"layers": {
+        "k": jax.ShapeDtypeStruct((64, 128, 8, 32768, 128), "bfloat16"),
+        "v": jax.ShapeDtypeStruct((64, 128, 8, 32768, 128), "bfloat16")}}
+    specs = shd.cache_specs(cache, MESH, RULES)
+    assert specs["layers"]["k"] == P(None, "data", None, None, None)
+    # kv=8 indivisible by 16 -> dropped; batch sharded over data
+
+
+def test_seq_override_rule():
+    rules = RULES.with_overrides(seq=("model",))
+    spec = shd.resolve_spec(("batch", "seq", "act_embed"),
+                            (256, 4096, 5120), MESH, rules)
+    assert spec == P("data", "model", None)

@@ -1,0 +1,153 @@
+"""End-to-end behaviour tests for the whole system."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.serve_loop import generate
+from repro.runtime.train_loop import TrainConfig, Trainer
+
+
+def test_all_ten_archs_registered():
+    archs = list_archs()
+    assert len(archs) == 10
+    for a in ["falcon-mamba-7b", "qwen2-moe-a2.7b",
+              "llama4-scout-17b-a16e", "recurrentgemma-9b", "qwen3-32b",
+              "minitron-4b", "nemotron-4-15b", "phi3-mini-3.8b",
+              "paligemma-3b", "whisper-large-v3"]:
+        assert a in archs
+
+
+def test_shape_applicability_rules():
+    # long_500k only for subquadratic archs
+    ssm = get_config("falcon-mamba-7b")
+    dense = get_config("qwen3-32b")
+    assert shape_applicable(ssm, SHAPES["long_500k"])[0]
+    assert shape_applicable(
+        get_config("recurrentgemma-9b"), SHAPES["long_500k"])[0]
+    ok, reason = shape_applicable(dense, SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in reason
+    # everything runs train/prefill/decode
+    for a in list_archs():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), SHAPES[s])[0]
+
+
+def test_train_loss_decreases_and_restarts():
+    cfg = get_config("minitron-4b-smoke")
+    model = build_model(cfg)
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(steps=8, ckpt_every=4, log_every=100,
+                           ckpt_dir=d, opt=AdamWConfig(lr=2e-3),
+                           warmup_steps=2)
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=4)
+        out = Trainer(model, tcfg, dcfg).run()
+        losses = [h["loss"] for h in out["history"]]
+        assert losses[-1] < losses[0]
+        # resume continues from step 8
+        tcfg2 = TrainConfig(steps=10, ckpt_every=4, log_every=100,
+                            ckpt_dir=d, opt=AdamWConfig(lr=2e-3),
+                            warmup_steps=2)
+        out2 = Trainer(model, tcfg2, dcfg).run()
+        assert out2["history"][0]["step"] == 8
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b-smoke",
+                                  "falcon-mamba-7b-smoke",
+                                  "recurrentgemma-9b-smoke"])
+def test_generate_end_to_end(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0,
+                                          cfg.vocab_size)}
+    out, stats = generate(model, params, batch, max_new_tokens=6)
+    assert out.shape == (2, 6)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    assert stats.decode_tok_s > 0
+
+
+def test_greedy_generation_deterministic():
+    cfg = get_config("phi3-mini-3.8b-smoke")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (1, 8), 0,
+                                          cfg.vocab_size)}
+    a, _ = generate(model, params, batch, max_new_tokens=5)
+    b, _ = generate(model, params, batch, max_new_tokens=5)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_input_specs_cover_all_cells():
+    """Every applicable (arch x shape) cell must provide lowering
+    stand-ins: input specs (+ cache specs for decode)."""
+    for arch in list_archs():
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        for sname, shape in SHAPES.items():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = model.input_specs(shape)
+            assert "tokens" in specs
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+            if shape.is_decode:
+                cache = model.cache_specs(shape)
+                assert len(jax.tree.leaves(cache)) > 0
+
+
+def test_hlo_collective_parsing():
+    from repro.launch import hlo_analysis
+    hlo = """
+  %ar = bf16[2048,1024]{1,0} all-reduce(bf16[2048,1024]{1,0} %x), replica_groups={}
+  %ag = bf16[4096,1024]{1,0} all-gather(bf16[256,1024]{1,0} %y), dimensions={0}
+  %rs = f32[256]{0} reduce-scatter(f32[4096]{0} %z), dimensions={0}
+  %cp = f32[128]{0} collective-permute(f32[128]{0} %w), source_target_pairs={{0,1}}
+"""
+    stats = hlo_analysis.parse_collectives(hlo)
+    assert stats.count_by_kind == {"all-reduce": 1, "all-gather": 1,
+                                   "reduce-scatter": 1,
+                                   "collective-permute": 1}
+    assert stats.bytes_by_kind["all-reduce"] == 2 * 2048 * 1024 * 2
+    assert stats.bytes_by_kind["all-gather"] == 4096 * 1024 * 2
+    assert stats.bytes_by_kind["reduce-scatter"] == 4096 * 4
+    assert stats.bytes_by_kind["collective-permute"] == 128 * 4
+
+
+def test_roofline_terms_math():
+    from repro.launch import roofline
+    cfg = get_config("qwen3-32b")
+    t = roofline.make_terms(
+        arch="qwen3-32b", shape=SHAPES["train_4k"], mesh_name="16x16",
+        chips=256, hlo_flops_global=2e17, hlo_bytes_global=1e15,
+        coll_bytes_per_chip=5e9, cfg=cfg)
+    assert t.compute_s == pytest.approx(2e17 / (256 * 197e12))
+    assert t.memory_s == pytest.approx(1e15 / (256 * 819e9))
+    assert t.collective_s == pytest.approx(0.1)
+    assert t.dominant in ("compute", "memory", "collective")
+    # extrapolation is exact for linear data
+    assert roofline.extrapolate(10.0, 14.0, 1, 2, 64) == \
+        pytest.approx(6.0 + 64 * 4.0)
+
+
+def test_model_flops_conventions():
+    from repro.launch import roofline
+    dense = get_config("qwen3-32b")
+    moe = get_config("qwen2-moe-a2.7b")
+    f_train = roofline.model_flops(dense, SHAPES["train_4k"])
+    f_prefill = roofline.model_flops(dense, SHAPES["prefill_32k"])
+    assert f_train == pytest.approx(
+        6 * dense.param_count() * 4096 * 256, rel=1e-6)
+    assert f_prefill == pytest.approx(
+        2 * dense.param_count() * 32768 * 32, rel=1e-6)
+    # MoE active < total
+    assert roofline.active_params(moe) < moe.param_count()

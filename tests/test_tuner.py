@@ -1,0 +1,124 @@
+"""Tuner + adaptive-selection behaviour (thesis Ch. 4-6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import tuner
+from repro.core.adaptive import AdaptiveSelector, steadiness
+from repro.core.loopnest import ConvLayer
+from repro.core.sparsity import choose_algorithm, crossover_density
+
+LAYERS = [ConvLayer(16, 8, 12, 12, 3, 3), ConvLayer(8, 16, 10, 10, 1, 1),
+          ConvLayer(24, 4, 8, 8, 3, 3)]
+SWEEPS = [tuner.sweep_layer(l) for l in LAYERS]
+
+
+def test_speedup_matrix_in_unit_interval():
+    s = tuner.speedup_matrix(SWEEPS)
+    assert s.shape == (3, 720)
+    assert (s > 0).all() and (s <= 1.0 + 1e-9).all()
+    assert np.allclose(s.max(axis=1), 1.0)     # each layer has an optimum
+
+
+def test_static_candidates_consistency():
+    cands = tuner.static_candidates(SWEEPS)
+    s = tuner.speedup_matrix(SWEEPS)
+    avg = s.mean(axis=0)
+    # top_average really is the argmax of average speedup
+    assert np.isclose(cands["top_average"].avg_speedup, avg.max())
+    assert cands["top_worst_case"].worst_speedup >= \
+        cands["top_average"].worst_speedup - 1e-12
+
+
+def test_pair_beats_or_ties_single():
+    single = tuner.static_candidates(SWEEPS)["top_average"].avg_speedup
+    pair = tuner.top_pairs(SWEEPS, n_best=1)[0][2]
+    assert pair >= single - 1e-12
+
+
+@given(st.floats(0.5, 0.95), st.sampled_from([0.683, 0.954]))
+@settings(max_examples=10, deadline=None)
+def test_sample_size_monotone_in_confidence(thr, conf):
+    k_low = tuner.sample_size_for_confidence(SWEEPS, thr, 0.5)
+    k = tuner.sample_size_for_confidence(SWEEPS, thr, conf)
+    assert k >= k_low
+
+
+def test_neighbor_search_never_worse_than_start():
+    layer = LAYERS[0]
+    score = lambda p: cm.simulate(layer, p).cycles  # noqa: E731
+    start = (5, 4, 3, 2, 1, 0)
+    p, s, evals = tuner.neighbor_swap_search(score, start)
+    assert s <= score(start)
+    assert evals < 720  # cheaper than exhaustive
+
+
+def test_bfs_budget_respected():
+    layer = LAYERS[0]
+    score = lambda p: cm.simulate(layer, p).cycles  # noqa: E731
+    p, s, evals = tuner.bfs_search(score, (0, 1, 2, 3, 4, 5), budget=30)
+    assert evals <= 31
+
+
+def test_tune_conv_returns_feasible():
+    scheds = tuner.tune_conv(ConvLayer(64, 32, 16, 16, 3, 3), top_k=3)
+    assert len(scheds) == 3
+    for sched, cost in scheds:
+        assert cost.vmem_peak <= cm.TPUSpec().vmem_bytes
+        blocks = sched.block_dict()
+        assert 64 % blocks["oc"] == 0 and 32 % blocks["ic"] == 0
+
+
+def test_tune_matmul_resident_tradeoff():
+    # small weights -> resident should be competitive
+    ranked = tuner.tune_matmul(4096, 256, 256, top_k=10)
+    assert any(s.resident_rhs for s, _ in ranked)
+
+
+# ---------------------------------------------------------- adaptive
+
+def test_adaptive_commits_to_argmin():
+    sel = AdaptiveSelector(probes_per_candidate=2)
+    sel.register("k", ["a", "b", "c"])
+    times = {"a": 0.03, "b": 0.01, "c": 0.02}
+    for _ in range(30):
+        if sel.committed("k"):
+            break
+        c = sel.propose("k")
+        sel.observe("k", times[c])
+    assert sel.committed("k") == "b"
+
+
+def test_adaptive_keeps_probing_when_unsteady():
+    sel = AdaptiveSelector(probes_per_candidate=3, max_extra_probes=3,
+                           steadiness_threshold=0.05)
+    sel.register("k", ["a", "b"])
+    import itertools
+    # candidate "b" alternates between two step times (CV > threshold)
+    noisy = itertools.cycle([0.010, 0.050, 0.010, 0.080])
+    n_obs = 0
+    for _ in range(20):
+        if sel.committed("k"):
+            break
+        sel.propose("k")
+        sel.observe("k", next(noisy))
+        n_obs += 1
+    assert n_obs > 6   # did not commit at the minimum probe count
+
+
+def test_steadiness_metric():
+    assert steadiness([1.0, 1.0, 1.0]) == 0.0
+    assert steadiness([1.0, 2.0, 1.0, 2.0]) > 0.3
+
+
+# ---------------------------------------------------------- sparsity
+
+def test_sparsity_policy_monotone_in_density():
+    layer = ConvLayer(64, 64, 16, 16, 3, 3)
+    lo = choose_algorithm(layer, {"oc": 32, "ic": 32}, density=0.05)
+    hi = choose_algorithm(layer, {"oc": 32, "ic": 32}, density=1.0)
+    assert lo.sparse_time_s < hi.sparse_time_s
+    assert hi.algorithm == "dense"
+    x = crossover_density(layer, {"oc": 32, "ic": 32})
+    assert 0.0 < x <= 1.0
