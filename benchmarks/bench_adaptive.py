@@ -8,7 +8,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, is_quick
 from repro.core.adaptive import AdaptiveSelector, microprofile, steadiness
 from repro.core.schedule import ConvSchedule
 
@@ -26,7 +26,8 @@ def run() -> None:
     def run_sched(s):
         jax.block_until_ready(s.run(img, wgt))
 
-    prof = microprofile([good, bad], run_sched, repeats=5)
+    prof = microprofile([good, bad], run_sched,
+                        repeats=2 if is_quick() else 5)
     emit("adaptive.microprofile.good", prof["medians"][0] * 1e6,
          f"cv={prof['steadiness'][0]:.3f}")
     emit("adaptive.microprofile.bad", prof["medians"][1] * 1e6,
@@ -39,7 +40,8 @@ def run() -> None:
     sel.register("conv", [good, bad])
     import time
     steps = 0
-    while sel.committed("conv") is None and steps < 40:
+    max_steps = 12 if is_quick() else 40
+    while sel.committed("conv") is None and steps < max_steps:
         s = sel.propose("conv")
         t0 = time.perf_counter()
         run_sched(s)

@@ -6,14 +6,14 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, quick_subset
 from repro.configs.squeezenet_layers import synthetic_design_space
 from repro.core import tuner
 from repro.core.loopnest import LOOPS
 
 
 def run() -> None:
-    layers = synthetic_design_space()
+    layers = quick_subset(synthetic_design_space(), 12)
     t0 = time.perf_counter()
     sweeps = [tuner.sweep_layer(l) for l in layers]
     per_sim_us = (time.perf_counter() - t0) / (len(layers) * 720) * 1e6

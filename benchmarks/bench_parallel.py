@@ -8,14 +8,14 @@ import time
 import numpy as np
 from scipy import stats
 
-from benchmarks.common import emit
+from benchmarks.common import emit, quick_subset
 from repro.configs.squeezenet_layers import synthetic_design_space_mt
 from repro.core import tuner
 from repro.core.loopnest import LOOPS
 
 
 def run() -> None:
-    layers = synthetic_design_space_mt()
+    layers = quick_subset(synthetic_design_space_mt(), 8)
     avg = {}
     t0 = time.perf_counter()
     for threads in (1, 2, 4, 8):

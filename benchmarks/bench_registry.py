@@ -1,0 +1,73 @@
+"""Registry warm-vs-cold tuning cost (the caching step of the ROADMAP
+north star: a fleet serving millions of requests must not pay the sweep
+twice).
+
+Rows: cold sweep time, warm cached_tune time and speedup per Table 4.1
+layer (must be >= 100x — also asserted by tests/test_registry.py), warm
+evaluation count (must be 0), and parallel-vs-serial warm determinism.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import tempfile
+import time
+
+from benchmarks.common import emit, is_quick
+from repro.configs.squeezenet_layers import TABLE_4_1
+from repro.core import cost_model as cm
+from repro.core import tuner
+from repro.core.registry import TuningRegistry
+
+
+def run() -> None:
+    names = list(TABLE_4_1)[:2] if is_quick() else list(TABLE_4_1)
+    tmp = tempfile.mkdtemp(prefix="bench_registry_")
+    registry = TuningRegistry(os.path.join(tmp, "reg.jsonl"))
+
+    worst_speedup = float("inf")
+    for name in names:
+        layer = TABLE_4_1[name]
+        t0 = time.perf_counter()
+        cold = tuner.cached_tune_conv(layer, registry=registry, top_k=1)
+        t_cold = time.perf_counter() - t0
+
+        cm.reset_eval_counts()
+        warm_ts = []
+        for _ in range(5 if is_quick() else 20):
+            t0 = time.perf_counter()
+            warm = tuner.cached_tune_conv(layer, registry=registry,
+                                          top_k=1)
+            warm_ts.append(time.perf_counter() - t0)
+        t_warm = statistics.median(warm_ts)
+        speedup = t_cold / t_warm
+        worst_speedup = min(worst_speedup, speedup)
+        assert cm.total_evals() == 0, "warm hit ran the sweep"
+        assert warm[0][0] == cold[0][0], "warm schedule != cold schedule"
+        emit(f"registry.{name}.cold", t_cold * 1e6, "")
+        emit(f"registry.{name}.warm", t_warm * 1e6,
+             f"speedup={speedup:.0f}x;evals=0")
+
+    assert worst_speedup >= 100, \
+        f"warm cache speedup {worst_speedup:.0f}x < 100x"
+    emit("registry.warm_speedup.min", 0.0, f"{worst_speedup:.0f}x")
+
+    # parallel warm must byte-match serial warm
+    layers = [TABLE_4_1[n] for n in names]
+    pa = TuningRegistry(os.path.join(tmp, "serial.jsonl"))
+    pb = TuningRegistry(os.path.join(tmp, "parallel.jsonl"))
+    t0 = time.perf_counter()
+    tuner.warm_registry(layers, pa, workers=1)
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tuner.warm_registry(layers, pb, workers=4)
+    t_par = time.perf_counter() - t0
+    with open(pa.path, "rb") as a, open(pb.path, "rb") as b:
+        identical = a.read() == b.read()
+    assert identical, "parallel warm diverged from serial"
+    emit("registry.parallel_warm", t_par * 1e6,
+         f"serial_us={t_serial * 1e6:.0f};identical={identical}")
+
+
+if __name__ == "__main__":
+    run()

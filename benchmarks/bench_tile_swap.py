@@ -14,7 +14,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, quick_subset
 from repro.core import cost_model as cm
 
 
@@ -24,6 +24,7 @@ def run() -> None:
               ((1024, 4096), (2048, 5632), (3072, 8192), (4096, 12288),
                (5120, 25600), (6144, 24576))]
     shapes += [(2048, f, d) for d, f in ((2048, 5632), (4096, 12288))]
+    shapes = list(quick_subset(shapes, 3))
 
     configs = []
     for bm, bn, bk in itertools.product((128, 256), (128, 256),

@@ -10,7 +10,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, quick_subset
 from repro.configs.squeezenet_layers import (synthetic_design_space,
                                              synthetic_design_space_mt)
 from repro.core import tuner
@@ -18,7 +18,7 @@ from repro.core.loopnest import LOOPS
 
 
 def run() -> None:
-    layers = synthetic_design_space()
+    layers = quick_subset(synthetic_design_space(), 12)
     t0 = time.perf_counter()
     sweeps = [tuner.sweep_layer(l) for l in layers]
     per_sim_us = (time.perf_counter() - t0) / (len(layers) * 720) * 1e6
@@ -29,7 +29,7 @@ def run() -> None:
              f"perm={loops};avg={c.avg_speedup:.4f};"
              f"worst={c.worst_speedup:.4f}")
 
-    layers_mt = synthetic_design_space_mt()
+    layers_mt = quick_subset(synthetic_design_space_mt(), 8)
     t0 = time.perf_counter()
     sweeps_mt = [tuner.sweep_layer(l, threads=8) for l in layers_mt]
     per_sim_mt = (time.perf_counter() - t0) / (len(layers_mt) * 720) * 1e6

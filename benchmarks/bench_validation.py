@@ -14,7 +14,7 @@ import time
 import numpy as np
 from scipy import stats
 
-from benchmarks.common import emit
+from benchmarks.common import emit, is_quick, quick_subset
 from repro.core import cost_model as cm
 from repro.core import tracesim, tuner
 from repro.core.cost_model import CacheLevel, MachineModel
@@ -25,10 +25,10 @@ def run() -> None:
     machine = MachineModel(levels=(
         CacheLevel("L1", 2 * 1024, 32, 3),
         CacheLevel("L2", 8 * 1024, 32, 10, associativity=8)))
-    layers = [ConvLayer(16, 8, 12, 12, 3, 3),
-              ConvLayer(8, 32, 10, 10, 1, 1)]
+    layers = list(quick_subset([ConvLayer(16, 8, 12, 12, 3, 3),
+                                ConvLayer(8, 32, 10, 10, 1, 1)], 1))
     random.seed(0)
-    sample = random.sample(range(720), 48)
+    sample = random.sample(range(720), 12 if is_quick() else 48)
 
     for li, layer in enumerate(layers):
         t0 = time.perf_counter()

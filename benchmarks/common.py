@@ -1,8 +1,23 @@
-"""Shared benchmark helpers: CSV emission + timing."""
+"""Shared benchmark helpers: CSV emission + timing + quick mode."""
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable
+from typing import Callable, Sequence, TypeVar
+
+T = TypeVar("T")
+
+
+def is_quick() -> bool:
+    """CI smoke mode (``python -m benchmarks.run --quick`` or
+    ``REPRO_BENCH_QUICK=1``): tiny shapes / truncated design spaces so
+    every bench still exercises its code path in seconds."""
+    return os.environ.get("REPRO_BENCH_QUICK", "") == "1"
+
+
+def quick_subset(items: Sequence[T], n: int) -> Sequence[T]:
+    """First ``n`` items in quick mode, everything otherwise."""
+    return items[:n] if is_quick() else items
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

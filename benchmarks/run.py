@@ -12,47 +12,65 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §6):
     bench_adaptive         Fig 6.5           micro-profiling steadiness
     bench_validation       Fig 2.3/6.1       fast-vs-exact simulator
     bench_roofline         (TPU adaptation)  dry-run roofline summary
+    bench_registry         (persistence)     warm-vs-cold cached tuning
+
+``--quick`` (or env REPRO_BENCH_QUICK=1) shrinks every bench to smoke
+size — tiny shapes, truncated design spaces — and any bench failure makes
+the process exit nonzero, so CI can gate on it.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import os
 import sys
 import time
 import traceback
 
-from benchmarks import (bench_adaptive, bench_cache_hierarchy,
-                        bench_combinations, bench_loop_orders,
-                        bench_parallel, bench_roofline, bench_sparsity,
-                        bench_tile_swap, bench_top_candidates,
-                        bench_validation)
-
-ALL = {
-    "loop_orders": bench_loop_orders,
-    "top_candidates": bench_top_candidates,
-    "cache_hierarchy": bench_cache_hierarchy,
-    "parallel": bench_parallel,
-    "combinations": bench_combinations,
-    "sparsity": bench_sparsity,
-    "tile_swap": bench_tile_swap,
-    "adaptive": bench_adaptive,
-    "validation": bench_validation,
-    "roofline": bench_roofline,
-}
+MODULES = [
+    "loop_orders", "top_candidates", "cache_hierarchy", "parallel",
+    "combinations", "sparsity", "tile_swap", "adaptive", "validation",
+    "roofline", "registry",
+]
 
 
-def main() -> None:
-    which = sys.argv[1:] or list(ALL)
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.run")
+    ap.add_argument("benches", nargs="*", default=[],
+                    help=f"subset to run (default: all of {MODULES})")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: tiny shapes, truncated spaces")
+    args = ap.parse_args(argv)
+    unknown = [b for b in args.benches if b not in MODULES]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; choose from {MODULES}")
+
+    if args.quick:
+        # Set before bench modules import/run so common.is_quick() and
+        # any subprocesses they spawn agree.
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
+    which = args.benches or MODULES
+    failures = []
     print("name,us_per_call,derived")
     for name in which:
-        mod = ALL[name]
         t0 = time.time()
         try:
+            # import inside the guard: a missing optional dep (e.g.
+            # scipy) fails that bench alone, not the whole runner
+            mod = importlib.import_module(f"benchmarks.bench_{name}")
             mod.run()
-            print(f"# {name} done in {time.time() - t0:.1f}s",
-                  flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
+            failures.append(name)
             print(f"# {name} FAILED", flush=True)
             traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} bench(es) failed: "
+              + ", ".join(failures), flush=True)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -2,14 +2,22 @@
 Table 4.1 layers, 720-permutation sweeps, static candidates, top pairs,
 random-sampling bounds, and locality-aware neighbour-swap search.
 
+Sweeps go through the persistent tuning registry
+(~/.cache/repro/tuning.jsonl or $REPRO_TUNE_REGISTRY): the first run
+computes them, every later run — or `python -m repro.tune warm` — makes
+this script start from cache.
+
 Run:  PYTHONPATH=src python examples/tune_conv.py
 """
+import time
+
 import numpy as np
 
 from repro.configs.squeezenet_layers import TABLE_4_1
 from repro.core import cost_model as cm
 from repro.core import tuner
 from repro.core.loopnest import LOOPS
+from repro.core.registry import TuningRegistry
 
 
 def pname(p):
@@ -18,7 +26,13 @@ def pname(p):
 
 def main():
     layers = dict(TABLE_4_1)
-    sweeps = [tuner.sweep_layer(l) for l in layers.values()]
+    registry = TuningRegistry.default()
+    t0 = time.perf_counter()
+    sweeps = [tuner.cached_sweep_layer(l, registry=registry)
+              for l in layers.values()]
+    print(f"== {len(sweeps)} sweeps in "
+          f"{(time.perf_counter() - t0) * 1e3:.0f}ms "
+          f"(registry: {len(registry)} records at {registry.path}) ==")
 
     print("== per-layer best permutations (Fig 4.3) ==")
     for (name, layer), sweep in zip(layers.items(), sweeps):

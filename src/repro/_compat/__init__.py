@@ -1,0 +1,9 @@
+"""Compatibility shims for optional third-party packages.
+
+The only resident so far is :mod:`repro._compat.hypothesis_fallback`, a
+minimal deterministic stand-in for the slice of the ``hypothesis`` API
+this repo's tests use, installed by ``tests/conftest.py`` only when the
+real package is absent (e.g. a hermetic container where ``pip install``
+is unavailable).  With ``hypothesis`` installed — as CI does via
+``pip install -e .`` — the shim never loads.
+"""

@@ -1,0 +1,125 @@
+"""A tiny, deterministic subset of the `hypothesis` API.
+
+Implements exactly what this repo's tests consume — ``given``,
+``settings(max_examples=, deadline=)`` and the strategies ``integers``,
+``floats``, ``booleans``, ``sampled_from``, ``permutations``, ``builds``
+(plus ``.map``) — with draws from a per-test seeded ``random.Random``, so
+runs are reproducible.  It does no shrinking and no example database; it
+exists so the suite still *runs* in environments where the real package
+cannot be installed.  :func:`install` registers it as ``hypothesis`` in
+``sys.modules``; call sites then import it exactly like the real thing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "Strategy":
+        def draw(rng: random.Random):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict")
+        return Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements: Sequence) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def permutations(values: Sequence) -> Strategy:
+    values = list(values)
+    return Strategy(lambda rng: rng.sample(values, len(values)))
+
+
+def just(value: Any) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def builds(target: Callable, *args: Strategy, **kwargs: Strategy,
+           ) -> Strategy:
+    def draw(rng: random.Random):
+        a = [s.draw(rng) for s in args]
+        kw = {k: s.draw(rng) for k, s in kwargs.items()}
+        return target(*a, **kw)
+    return Strategy(draw)
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored) -> Callable:
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strategies: Strategy) -> Callable:
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            conf = (getattr(wrapper, "_fallback_settings", None)
+                    or getattr(fn, "_fallback_settings", None)
+                    or {"max_examples": DEFAULT_MAX_EXAMPLES})
+            # Per-test deterministic stream: same examples every run.
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(conf["max_examples"]):
+                drawn = [s.draw(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        if hasattr(fn, "_fallback_settings"):
+            wrapper._fallback_settings = fn._fallback_settings
+        # Hide the example parameters from pytest's fixture resolution.
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+ `.strategies`) if absent."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from",
+                 "permutations", "builds", "just"):
+        setattr(st, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -8,8 +8,12 @@
 - adaptive:     run-time micro-profiling selection (§6.4)
 - schedule:     Schedule objects consumed by the Pallas kernels
 - sparsity:     dense-vs-sparse algorithm policy (§3.6, §6.2)
+- registry:     persistent tuning registry (offline results that survive
+                the process; see also ``python -m repro.tune``)
 """
 from repro.core.loopnest import ConvLayer
+from repro.core.registry import TuningRegistry
 from repro.core.schedule import ConvSchedule, MatmulSchedule
 
-__all__ = ["ConvLayer", "ConvSchedule", "MatmulSchedule"]
+__all__ = ["ConvLayer", "ConvSchedule", "MatmulSchedule",
+           "TuningRegistry"]

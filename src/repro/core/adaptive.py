@@ -21,6 +21,8 @@ from typing import Callable, Dict, Generic, List, Optional, Sequence, TypeVar
 
 import numpy as np
 
+from repro.core import registry as reg
+
 S = TypeVar("S")  # schedule type
 
 
@@ -63,6 +65,7 @@ class _Slot(Generic[S]):
     samples: Dict[int, List[float]]
     committed: Optional[S] = None
     next_candidate: int = 0
+    registry_key: Optional[reg.RegistryKey] = None
 
 
 class AdaptiveSelector(Generic[S]):
@@ -79,28 +82,37 @@ class AdaptiveSelector(Generic[S]):
     — unless the steadiness check fails (CV above threshold), in which case
     it keeps probing up to ``max_extra_probes`` more rounds (the thesis'
     caveat: micro-profiling is only valid because the metric is steady).
+
+    With a ``registry`` attached (and a per-slot ``registry_key``), each
+    commit is written back to the persistent tuning registry: the measured
+    winner and its median step time refine the offline prediction, so the
+    next process starts from what this run learned.
     """
 
     def __init__(self, probes_per_candidate: int = 3,
                  steadiness_threshold: float = 0.2,
-                 max_extra_probes: int = 2):
+                 max_extra_probes: int = 2,
+                 registry: Optional[reg.TuningRegistry] = None):
         self.probes = probes_per_candidate
         self.threshold = steadiness_threshold
         self.max_extra = max_extra_probes
+        self.registry = registry
         self._slots: Dict[str, _Slot] = {}
 
-    def register(self, key: str, candidates: Sequence[S]) -> None:
+    def register(self, key: str, candidates: Sequence[S],
+                 registry_key: Optional[reg.RegistryKey] = None) -> None:
         if key not in self._slots:
             self._slots[key] = _Slot(list(candidates),
                                      {i: [] for i in
-                                      range(len(candidates))})
+                                      range(len(candidates))},
+                                     registry_key=registry_key)
 
     def propose(self, key: str) -> S:
         slot = self._slots[key]
         if slot.committed is not None:
             return slot.committed
         if len(slot.candidates) == 1:
-            slot.committed = slot.candidates[0]
+            self._commit(slot, 0, None)
             return slot.committed
         idx = slot.next_candidate
         return slot.candidates[idx]
@@ -122,7 +134,17 @@ class AdaptiveSelector(Generic[S]):
             return  # unsteady: keep probing
         medians = [float(np.median(v[1:] if len(v) > 2 else v))
                    for i, v in sorted(slot.samples.items())]
-        slot.committed = slot.candidates[int(np.argmin(medians))]
+        best = int(np.argmin(medians))
+        self._commit(slot, best, medians[best])
+
+    def _commit(self, slot: _Slot, index: int,
+                median_s: Optional[float]) -> None:
+        slot.committed = slot.candidates[index]
+        if (self.registry is not None and slot.registry_key is not None
+                and median_s is not None):
+            self.registry.record_measurement(
+                slot.registry_key, reg.schedule_to_dict(slot.committed),
+                median_s)
 
     def committed(self, key: str) -> Optional[S]:
         slot = self._slots.get(key)

@@ -28,6 +28,25 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core import loopnest as ln
 from repro.core.loopnest import ConvLayer, LOOPS
 
+# Bump whenever a change below alters predicted costs: the tuning registry
+# keys cached results on this string, so stale predictions self-invalidate.
+COST_MODEL_VERSION = "1"
+
+# Evaluation counters — how many cost-model queries ran in this process.
+# The registry's warm-cache guarantee ("a hit performs zero sweep
+# evaluations") is asserted against these in tests and bench_registry.
+EVAL_COUNTS: Dict[str, int] = {"simulate": 0, "conv_schedule_cost": 0,
+                               "matmul_schedule_cost": 0}
+
+
+def reset_eval_counts() -> None:
+    for k in EVAL_COUNTS:
+        EVAL_COUNTS[k] = 0
+
+
+def total_evals() -> int:
+    return sum(EVAL_COUNTS.values())
+
 
 # ---------------------------------------------------------------------------
 # Paper-faithful cache hierarchy model
@@ -150,6 +169,7 @@ def simulate(layer: ConvLayer, perm: Sequence[int],
     outermost loop does not index ``out`` pay an atomic-update cost per
     output write.
     """
+    EVAL_COUNTS["simulate"] += 1
     trips = layer.trips()
     per_iter = ln.accesses_per_iteration(partial_sums)
     iters = layer.iterations
@@ -280,6 +300,7 @@ def conv_schedule_cost(layer: ConvLayer,
     refetched per reduction step (the model's penalty for reduction-outer
     orders).
     """
+    EVAL_COUNTS["conv_schedule_cost"] += 1
     trips = {"oc": _ceil_div(layer.oc, block["oc"]),
              "ic": _ceil_div(layer.ic, block["ic"]),
              "y": _ceil_div(layer.h, block["y"]),
@@ -362,6 +383,7 @@ def matmul_schedule_cost(m: int, n: int, k: int,
     "tiles-for-L2" trade (thesis §6.3): VMEM spent caching weights vs
     streaming larger activation blocks.
     """
+    EVAL_COUNTS["matmul_schedule_cost"] += 1
     trips = {"m": _ceil_div(m, bm), "n": _ceil_div(n, bn),
              "k": _ceil_div(k, bk)}
     grid_steps = math.prod(trips.values())

@@ -1,0 +1,395 @@
+"""Persistent tuning registry — offline results that survive the process.
+
+The thesis' methodology is *explore cheap offline, validate accurately,
+adapt at run time*; this module is the missing persistence layer between
+those phases.  Following MITuna's design (tuned kernel configs keyed by
+problem + architecture in a database), every tuning result is stored under
+a four-part key::
+
+    (kind, problem signature, machine fingerprint, cost-model version)
+
+* ``kind``        — what was tuned ("conv_schedule", "matmul_schedule",
+                    "conv_sweep", or a runtime-measurement kind).
+* ``problem``     — the layer / matmul shape, canonicalised to a dict.
+* ``machine``     — fingerprint of the :class:`MachineModel` /
+                    :class:`TPUSpec` (or the live JAX runtime) the result
+                    is valid for; a different machine invalidates it.
+* ``cost_model``  — :data:`repro.core.cost_model.COST_MODEL_VERSION`;
+                    bumping the model orphans stale predictions.
+
+Storage is JSON-lines: one canonical (sorted-keys, compact) JSON object
+per line.  Writers append a single line under ``O_APPEND`` — concurrent
+writers from several processes interleave whole lines, never bytes — and
+readers replay the log last-write-wins.  :meth:`TuningRegistry.compact`
+rewrites the file sorted by key, which makes registry *contents a pure
+function of the record set*: a parallel sweep compacts to byte-identical
+bytes as the serial sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+_ENV_PATH = "REPRO_TUNE_REGISTRY"
+_DEFAULT_PATH = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro", "tuning.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# Canonical JSON + fingerprints
+# ---------------------------------------------------------------------------
+
+def canonical_json(obj: Any) -> str:
+    """Deterministic serialisation: sorted keys, no whitespace."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def fingerprint(obj: Any) -> str:
+    """Stable 12-hex digest of a dataclass / dict / tuple describing the
+    machine (``MachineModel``, ``TPUSpec``, ...)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        payload = {"__class__": type(obj).__name__,
+                   **dataclasses.asdict(obj)}
+    else:
+        payload = obj
+    digest = hashlib.sha256(canonical_json(payload).encode("utf-8"))
+    return digest.hexdigest()[:12]
+
+
+def runtime_fingerprint() -> str:
+    """Fingerprint of the live JAX runtime (for measured results)."""
+    try:
+        import jax
+        info = {"platform": jax.default_backend(),
+                "device_count": jax.device_count()}
+    except Exception:  # pragma: no cover - jax always present in this repo
+        info = {"platform": "unknown", "device_count": 0}
+    return fingerprint(info)
+
+
+# ---------------------------------------------------------------------------
+# Keys and records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RegistryKey:
+    kind: str
+    problem: Tuple[Tuple[str, Any], ...]   # hashable canonical form
+    machine: str                           # fingerprint
+    cost_model: str                        # cost-model version string
+
+    @staticmethod
+    def make(kind: str, problem: Dict[str, Any], machine: str,
+             cost_model: str) -> "RegistryKey":
+        return RegistryKey(kind, tuple(sorted(problem.items())), machine,
+                           cost_model)
+
+    def problem_dict(self) -> Dict[str, Any]:
+        return dict(self.problem)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "problem": self.problem_dict(),
+                "machine": self.machine, "cost_model": self.cost_model}
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "RegistryKey":
+        return RegistryKey.make(d["kind"], d["problem"], d["machine"],
+                                d["cost_model"])
+
+    def canonical(self) -> str:
+        return canonical_json(self.to_dict())
+
+
+@dataclasses.dataclass
+class TuningRecord:
+    """One tuning result: the winning configuration(s) plus costs.
+
+    ``value`` is kind-specific (serialised schedules + predicted costs, or
+    raw sweep arrays); ``measured`` is filled in by the adaptive runtime's
+    write-back and refines the offline prediction.  Records deliberately
+    carry no wall-clock timestamps so that registry bytes are a pure
+    function of the tuning inputs (serial == parallel, re-run == re-run).
+    """
+    key: RegistryKey
+    value: Dict[str, Any]
+    measured: Optional[Dict[str, Any]] = None
+    source: str = "offline"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"schema": SCHEMA_VERSION, "key": self.key.to_dict(),
+                "value": self.value, "measured": self.measured,
+                "source": self.source}
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "TuningRecord":
+        return TuningRecord(key=RegistryKey.from_dict(d["key"]),
+                            value=d["value"],
+                            measured=d.get("measured"),
+                            source=d.get("source", "offline"))
+
+
+# ---------------------------------------------------------------------------
+# Schedule (de)serialisation helpers
+# ---------------------------------------------------------------------------
+
+def schedule_to_dict(sched: Any) -> Dict[str, Any]:
+    from repro.core.schedule import ConvSchedule, MatmulSchedule
+    if isinstance(sched, ConvSchedule):
+        return {"type": "conv", "grid_order": list(sched.grid_order),
+                "block": sched.block_dict()}
+    if isinstance(sched, MatmulSchedule):
+        return {"type": "matmul", "grid_order": list(sched.grid_order),
+                "block": sched.block_dict(),
+                "resident_rhs": bool(sched.resident_rhs)}
+    return {"type": "opaque", "repr": repr(sched)}
+
+
+def schedule_from_dict(d: Dict[str, Any]) -> Any:
+    from repro.core.schedule import ConvSchedule, MatmulSchedule
+    if d["type"] == "conv":
+        return ConvSchedule.make(d["grid_order"], d["block"])
+    if d["type"] == "matmul":
+        return MatmulSchedule.make(d["grid_order"], d["block"],
+                                   d.get("resident_rhs", False))
+    raise ValueError(f"cannot rebuild schedule of type {d['type']!r}")
+
+
+def cost_to_dict(cost: Any) -> Dict[str, Any]:
+    return dataclasses.asdict(cost)
+
+
+def cost_from_dict(d: Dict[str, Any]) -> Any:
+    from repro.core.cost_model import KernelCost
+    return KernelCost(**d)
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+
+class TuningRegistry:
+    """Versioned on-disk store of tuning results (JSON-lines).
+
+    ``path=None`` keeps the registry purely in memory (useful for tests
+    and one-shot scripts).  All mutation goes through :meth:`put` /
+    :meth:`record_measurement` / :meth:`invalidate`; with a path set, each
+    ``put`` appends one line (crash-safe, concurrent-writer-safe) and
+    :meth:`compact` canonicalises the file.
+    """
+
+    def __init__(self, path: Optional[str] = None, autoload: bool = True):
+        self.path = path
+        self._records: Dict[str, TuningRecord] = {}
+        self._lock = threading.Lock()
+        if path and autoload:
+            self.load()
+
+    # -- construction ---------------------------------------------------
+    @staticmethod
+    def default_path() -> str:
+        return os.environ.get(_ENV_PATH, _DEFAULT_PATH)
+
+    @classmethod
+    def default(cls) -> "TuningRegistry":
+        """Process-wide default registry (env ``REPRO_TUNE_REGISTRY`` or
+        ``~/.cache/repro/tuning.jsonl``)."""
+        global _DEFAULT_REGISTRY
+        path = cls.default_path()
+        if _DEFAULT_REGISTRY is None or _DEFAULT_REGISTRY.path != path:
+            _DEFAULT_REGISTRY = cls(path)
+        return _DEFAULT_REGISTRY
+
+    # -- persistence ----------------------------------------------------
+    def load(self) -> int:
+        """Replay the JSONL log (last write per key wins).  Unknown or
+        future-schema lines are skipped, not fatal."""
+        if not self.path or not os.path.exists(self.path):
+            return 0
+        n = 0
+        with self._lock:
+            with open(self.path, "r", encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        d = json.loads(line)
+                        if d.get("schema", 0) > SCHEMA_VERSION:
+                            continue
+                        rec = TuningRecord.from_dict(d)
+                    except (ValueError, KeyError, TypeError):
+                        continue
+                    self._records[rec.key.canonical()] = rec
+                    n += 1
+        return n
+
+    def _append_line(self, rec: TuningRecord) -> None:
+        if not self.path:
+            return
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                    exist_ok=True)
+        line = canonical_json(rec.to_dict()) + "\n"
+        # One O_APPEND write per record: whole lines interleave across
+        # concurrent writers, bytes never do.
+        fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND,
+                     0o644)
+        try:
+            os.write(fd, line.encode("utf-8"))
+        finally:
+            os.close(fd)
+
+    def compact(self) -> None:
+        """Rewrite the log as one canonical line per key, sorted by key.
+
+        After compaction the file bytes depend only on the record set —
+        the property the parallel-sweep determinism guarantee rests on.
+        Atomic (write temp + rename).
+        """
+        if not self.path:
+            return
+        with self._lock:
+            items = sorted(self._records.items())
+            dirname = os.path.dirname(os.path.abspath(self.path)) or "."
+            os.makedirs(dirname, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w", encoding="utf-8") as f:
+                    for _, rec in items:
+                        f.write(canonical_json(rec.to_dict()) + "\n")
+                os.replace(tmp, self.path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+
+    def export_json(self, path: str) -> int:
+        """Dump the current state as a single pretty JSON array."""
+        recs = [rec.to_dict() for _, rec in sorted(self._records.items())]
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(recs, f, indent=2, sort_keys=True)
+            f.write("\n")
+        return len(recs)
+
+    # -- access ---------------------------------------------------------
+    def get(self, key: RegistryKey) -> Optional[TuningRecord]:
+        return self._records.get(key.canonical())
+
+    def put(self, record: TuningRecord, persist: bool = True) -> None:
+        with self._lock:
+            self._records[record.key.canonical()] = record
+        if persist:
+            self._append_line(record)
+
+    def record_measurement(self, key: RegistryKey,
+                           best: Dict[str, Any],
+                           time_s: float,
+                           persist: bool = True) -> TuningRecord:
+        """Adaptive write-back: attach a run-time measurement to ``key``.
+
+        Creates the record if offline tuning never saw this problem (a
+        purely run-time discovery is still worth persisting)."""
+        rec = self.get(key)
+        if rec is None:
+            rec = TuningRecord(key=key, value={"schedules": [best]},
+                               source="adaptive")
+        rec.measured = {"best": best, "time_s": float(time_s)}
+        self.put(rec, persist=persist)
+        return rec
+
+    def invalidate(self, kind: Optional[str] = None,
+                   machine: Optional[str] = None,
+                   cost_model: Optional[str] = None,
+                   persist: bool = True) -> int:
+        """Drop records matching all given filters (None = wildcard).
+        ``invalidate()`` with no filters clears everything."""
+        with self._lock:
+            doomed = [ck for ck, rec in self._records.items()
+                      if (kind is None or rec.key.kind == kind)
+                      and (machine is None or rec.key.machine == machine)
+                      and (cost_model is None
+                           or rec.key.cost_model == cost_model)]
+            for ck in doomed:
+                del self._records[ck]
+        if doomed and persist:
+            self.compact()
+        return len(doomed)
+
+    def keys(self) -> List[RegistryKey]:
+        return [rec.key for _, rec in sorted(self._records.items())]
+
+    def records(self) -> Iterator[TuningRecord]:
+        for _, rec in sorted(self._records.items()):
+            yield rec
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __contains__(self, key: RegistryKey) -> bool:
+        return key.canonical() in self._records
+
+    def stats(self) -> Dict[str, Any]:
+        by_kind: Dict[str, int] = {}
+        measured = 0
+        for rec in self._records.values():
+            by_kind[rec.key.kind] = by_kind.get(rec.key.kind, 0) + 1
+            measured += rec.measured is not None
+        return {"records": len(self._records), "by_kind": by_kind,
+                "measured": measured, "path": self.path}
+
+
+_DEFAULT_REGISTRY: Optional[TuningRegistry] = None
+
+
+# ---------------------------------------------------------------------------
+# Key builders for the repo's problem kinds
+# ---------------------------------------------------------------------------
+
+def conv_problem(layer: Any, elem_bytes: int = 2) -> Dict[str, Any]:
+    return {"oc": layer.oc, "ic": layer.ic, "h": layer.h, "w": layer.w,
+            "kh": layer.kh, "kw": layer.kw, "elem_bytes": elem_bytes}
+
+
+def conv_layer_from_problem(problem: Dict[str, Any]) -> Any:
+    from repro.core.loopnest import ConvLayer
+    return ConvLayer(problem["oc"], problem["ic"], problem["h"],
+                     problem["w"], problem["kh"], problem["kw"])
+
+
+def conv_schedule_key(layer: Any, spec: Any, elem_bytes: int = 2,
+                      ) -> RegistryKey:
+    from repro.core.cost_model import COST_MODEL_VERSION
+    return RegistryKey.make("conv_schedule", conv_problem(layer, elem_bytes),
+                            fingerprint(spec), COST_MODEL_VERSION)
+
+
+def matmul_schedule_key(m: int, n: int, k: int, spec: Any,
+                        elem_bytes: int = 2) -> RegistryKey:
+    from repro.core.cost_model import COST_MODEL_VERSION
+    problem = {"m": m, "n": n, "k": k, "elem_bytes": elem_bytes}
+    return RegistryKey.make("matmul_schedule", problem, fingerprint(spec),
+                            COST_MODEL_VERSION)
+
+
+def conv_sweep_key(layer: Any, machine: Any, threads: int = 1,
+                   ) -> RegistryKey:
+    from repro.core.cost_model import COST_MODEL_VERSION
+    problem = conv_problem(layer, layer.elem_bytes)
+    problem["threads"] = threads
+    return RegistryKey.make("conv_sweep", problem, fingerprint(machine),
+                            COST_MODEL_VERSION)
+
+
+__all__ = [
+    "SCHEMA_VERSION", "RegistryKey", "TuningRecord", "TuningRegistry",
+    "canonical_json", "fingerprint", "runtime_fingerprint",
+    "schedule_to_dict", "schedule_from_dict", "cost_to_dict",
+    "cost_from_dict", "conv_problem", "conv_layer_from_problem",
+    "conv_schedule_key", "matmul_schedule_key", "conv_sweep_key",
+]

@@ -27,6 +27,10 @@ class ConvSchedule:
         return ConvSchedule(tuple(grid_order),
                             tuple(sorted(block.items())))
 
+    def to_dict(self) -> Dict:
+        from repro.core import registry
+        return registry.schedule_to_dict(self)
+
     def run(self, img: jnp.ndarray, wgt: jnp.ndarray, *,
             interpret: bool = True) -> jnp.ndarray:
         from repro.kernels.conv2d import conv2d
@@ -48,6 +52,10 @@ class MatmulSchedule:
              resident_rhs: bool = False) -> "MatmulSchedule":
         return MatmulSchedule(tuple(grid_order),
                               tuple(sorted(block.items())), resident_rhs)
+
+    def to_dict(self) -> Dict:
+        from repro.core import registry
+        return registry.schedule_to_dict(self)
 
     def run(self, a: jnp.ndarray, b: jnp.ndarray, *,
             interpret: bool = True) -> jnp.ndarray:

@@ -14,6 +14,7 @@ resident-weights, ranked by the TPU cost model; the adaptive runtime
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import itertools
 import math
@@ -23,6 +24,7 @@ import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core import permutations as perms
+from repro.core import registry as reg
 from repro.core.loopnest import ConvLayer
 from repro.core.schedule import ConvSchedule, MatmulSchedule
 
@@ -292,3 +294,209 @@ def tune_matmul(m: int, n: int, k: int,
         if len(out) >= top_k:
             break
     return out
+
+
+# ---------------------------------------------------------------------------
+# Cached tuning — the registry front door
+# ---------------------------------------------------------------------------
+#
+# ``cached_tune_*`` check the persistent registry before sweeping and
+# record the ranked result after, so a process (or fleet of processes)
+# never pays for the same (problem, machine, cost-model) twice.  A warm
+# hit performs ZERO cost-model evaluations — it deserialises the stored
+# schedules and costs directly (asserted by tests/test_registry.py against
+# cm.EVAL_COUNTS).
+
+def _ranked_to_value(ranked) -> Dict:
+    return {"schedules": [reg.schedule_to_dict(s) for s, _ in ranked],
+            "costs": [reg.cost_to_dict(c) for _, c in ranked]}
+
+
+def _has_ranked(value: Dict, top_k: int) -> bool:
+    """A record satisfies a top_k request only if it carries that many
+    ranked (schedule, cost) pairs.  Records created purely by adaptive
+    write-back hold a winner but no cost list — those must re-tune."""
+    return (len(value.get("schedules", ())) >= top_k
+            and len(value.get("costs", ())) >= top_k)
+
+
+def _value_to_ranked(value: Dict, top_k: Optional[int] = None):
+    pairs = zip(value["schedules"][:top_k], value["costs"][:top_k])
+    return [(reg.schedule_from_dict(s), reg.cost_from_dict(c))
+            for s, c in pairs]
+
+
+def cached_tune_conv(layer: ConvLayer, spec: cm.TPUSpec = cm.TPUSpec(),
+                     elem_bytes: int = 2, top_k: int = 5,
+                     registry: Optional[reg.TuningRegistry] = None,
+                     refresh: bool = False,
+                     ) -> List[Tuple[ConvSchedule, cm.KernelCost]]:
+    """:func:`tune_conv` with persistent memoisation."""
+    registry = registry if registry is not None else \
+        reg.TuningRegistry.default()
+    key = reg.conv_schedule_key(layer, spec, elem_bytes)
+    prev = registry.get(key)
+    rec = None if refresh else prev
+    if rec is not None and _has_ranked(rec.value, top_k):
+        return _value_to_ranked(rec.value, top_k)
+    ranked = tune_conv(layer, spec, elem_bytes, top_k=max(top_k, 5))
+    registry.put(reg.TuningRecord(key=key, value=_ranked_to_value(ranked),
+                                  measured=prev.measured if prev else None,
+                                  source="offline"))
+    return ranked[:top_k]
+
+
+def cached_tune_matmul(m: int, n: int, k: int,
+                       spec: cm.TPUSpec = cm.TPUSpec(),
+                       elem_bytes: int = 2, top_k: int = 5,
+                       registry: Optional[reg.TuningRegistry] = None,
+                       refresh: bool = False,
+                       ) -> List[Tuple[MatmulSchedule, cm.KernelCost]]:
+    """:func:`tune_matmul` with persistent memoisation."""
+    registry = registry if registry is not None else \
+        reg.TuningRegistry.default()
+    key = reg.matmul_schedule_key(m, n, k, spec, elem_bytes)
+    prev = registry.get(key)
+    rec = None if refresh else prev
+    if rec is not None and _has_ranked(rec.value, top_k):
+        return _value_to_ranked(rec.value, top_k)
+    ranked = tune_matmul(m, n, k, spec, elem_bytes, top_k=max(top_k, 5))
+    registry.put(reg.TuningRecord(key=key, value=_ranked_to_value(ranked),
+                                  measured=prev.measured if prev else None,
+                                  source="offline"))
+    return ranked[:top_k]
+
+
+def cached_sweep_layer(layer: ConvLayer,
+                       machine: cm.MachineModel = cm.MachineModel(),
+                       threads: int = 1,
+                       registry: Optional[reg.TuningRegistry] = None,
+                       refresh: bool = False) -> SweepResult:
+    """:func:`sweep_layer` (the 720-permutation signature) memoised."""
+    registry = registry if registry is not None else \
+        reg.TuningRegistry.default()
+    key = reg.conv_sweep_key(layer, machine, threads)
+    rec = None if refresh else registry.get(key)
+    if rec is not None:
+        v = rec.value
+        return SweepResult(layer=layer,
+                           cycles=np.asarray(v["cycles"]),
+                           l1_misses=np.asarray(v["l1_misses"]),
+                           l2_misses=np.asarray(v["l2_misses"]))
+    sweep = sweep_layer(layer, machine, threads)
+    registry.put(reg.TuningRecord(
+        key=key,
+        value={"cycles": sweep.cycles.tolist(),
+               "l1_misses": sweep.l1_misses.tolist(),
+               "l2_misses": sweep.l2_misses.tolist()},
+        source="offline"))
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# Parallel sweeps with deterministic merge
+# ---------------------------------------------------------------------------
+#
+# The worker payloads are module-level functions over picklable dataclasses
+# so a ProcessPoolExecutor can run them; results come back via
+# ``executor.map`` in *input* order, and registry records are written in
+# that order and then compacted — so the registry file is byte-identical
+# whatever the worker count or completion order.
+
+def _sweep_worker(args) -> Dict:
+    layer, machine, threads = args
+    s = sweep_layer(layer, machine, threads)
+    return {"cycles": s.cycles.tolist(), "l1_misses": s.l1_misses.tolist(),
+            "l2_misses": s.l2_misses.tolist()}
+
+
+def _conv_tune_worker(args) -> Dict:
+    layer, spec, elem_bytes, top_k = args
+    return _ranked_to_value(tune_conv(layer, spec, elem_bytes,
+                                      top_k=top_k))
+
+
+def _map_parallel(fn, jobs: Sequence, workers: Optional[int]) -> List:
+    """Map ``fn`` over ``jobs`` preserving order.  ``workers`` None/0/1 =>
+    serial; otherwise a process pool (the cost model is pure Python, so
+    threads gain nothing under the GIL), degrading gracefully to threads
+    then serial where the platform forbids subprocesses.
+
+    Uses a forkserver/spawn start method, never plain fork: the parent
+    has usually initialised JAX by the time a sweep runs, and forking a
+    multithreaded JAX process can deadlock."""
+    if not workers or workers <= 1 or len(jobs) <= 1:
+        return [fn(j) for j in jobs]
+    import multiprocessing as mp
+    methods = mp.get_all_start_methods()
+    method = "forkserver" if "forkserver" in methods else "spawn"
+    try:
+        ctx = mp.get_context(method)
+        with concurrent.futures.ProcessPoolExecutor(
+                workers, mp_context=ctx) as ex:
+            return list(ex.map(fn, jobs))
+    except (OSError, PermissionError, concurrent.futures.process
+            .BrokenProcessPool):
+        try:
+            with concurrent.futures.ThreadPoolExecutor(workers) as ex:
+                return list(ex.map(fn, jobs))
+        except OSError:
+            return [fn(j) for j in jobs]
+
+
+def parallel_sweep(layers: Sequence[ConvLayer],
+                   machine: cm.MachineModel = cm.MachineModel(),
+                   threads: int = 1,
+                   workers: Optional[int] = None) -> List[SweepResult]:
+    """Sweep many layers across a worker pool; result order == input
+    order, values bit-identical to the serial sweep."""
+    raw = _map_parallel(_sweep_worker,
+                        [(l, machine, threads) for l in layers], workers)
+    return [SweepResult(layer=l, cycles=np.asarray(v["cycles"]),
+                        l1_misses=np.asarray(v["l1_misses"]),
+                        l2_misses=np.asarray(v["l2_misses"]))
+            for l, v in zip(layers, raw)]
+
+
+def warm_registry(layers: Sequence[ConvLayer],
+                  registry: reg.TuningRegistry,
+                  machine: cm.MachineModel = cm.MachineModel(),
+                  spec: cm.TPUSpec = cm.TPUSpec(),
+                  threads: int = 1, elem_bytes: int = 2, top_k: int = 5,
+                  kinds: Sequence[str] = ("conv_sweep", "conv_schedule"),
+                  workers: Optional[int] = None,
+                  refresh: bool = False) -> Dict[str, int]:
+    """Tune every layer (sweeps and/or TPU schedules) into ``registry``.
+
+    Only missing keys are computed (unless ``refresh``); computation fans
+    out over ``workers`` processes; the merge is deterministic: records
+    land in input order and the file is compacted (sorted by key), so a
+    parallel warm is byte-identical to a serial one.
+    """
+    done = {"conv_sweep": 0, "conv_schedule": 0, "skipped": 0}
+    if "conv_sweep" in kinds:
+        keys = [reg.conv_sweep_key(l, machine, threads) for l in layers]
+        todo = [(l, k) for l, k in zip(layers, keys)
+                if refresh or k not in registry]
+        done["skipped"] += len(layers) - len(todo)
+        raw = _map_parallel(_sweep_worker,
+                            [(l, machine, threads) for l, _ in todo],
+                            workers)
+        for (_, k), v in zip(todo, raw):
+            registry.put(reg.TuningRecord(key=k, value=v,
+                                          source="offline"))
+            done["conv_sweep"] += 1
+    if "conv_schedule" in kinds:
+        keys = [reg.conv_schedule_key(l, spec, elem_bytes) for l in layers]
+        todo = [(l, k) for l, k in zip(layers, keys)
+                if refresh or k not in registry]
+        done["skipped"] += len(layers) - len(todo)
+        raw = _map_parallel(_conv_tune_worker,
+                            [(l, spec, elem_bytes, top_k)
+                             for l, _ in todo], workers)
+        for (_, k), v in zip(todo, raw):
+            registry.put(reg.TuningRecord(key=k, value=v,
+                                          source="offline"))
+            done["conv_schedule"] += 1
+    registry.compact()
+    return done

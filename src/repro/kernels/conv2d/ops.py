@@ -3,12 +3,14 @@
 `conv2d` picks a schedule (grid order + block shapes) — explicitly, from a
 :class:`repro.core.schedule.Schedule`, or by asking the TPU cost model for
 the best one — and dispatches to the Pallas kernel (interpret=True on CPU,
-compiled on TPU).
+compiled on TPU).  `conv2d_tuned` consults the persistent tuning registry
+(tuning once per problem shape per machine, ever) instead of re-tuning or
+falling back to static defaults on every call.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,4 +60,36 @@ def conv2d(img: jnp.ndarray, wgt: jnp.ndarray, *,
     return _conv2d_jit(img, wgt, block_tuple, tuple(grid_order), interpret)
 
 
-__all__ = ["conv2d", "conv2d_ref", "default_block"]
+@functools.lru_cache(maxsize=512)
+def _tuned_schedule(shape_key: Tuple[int, ...], elem_bytes: int,
+                    registry_path: str):
+    """Registry lookup, memoised in-process so the JSON layer is touched
+    once per shape: a warm registry makes this a dict probe.  Keyed on
+    the active registry path so repointing REPRO_TUNE_REGISTRY misses."""
+    from repro.core import tuner
+    from repro.core.loopnest import ConvLayer
+    oc, ic, h, w, kh, kw = shape_key
+    layer = ConvLayer(oc, ic, h, w, kh, kw)
+    ranked = tuner.cached_tune_conv(layer, elem_bytes=elem_bytes, top_k=1)
+    return ranked[0][0]
+
+
+def conv2d_tuned(img: jnp.ndarray, wgt: jnp.ndarray, *,
+                 interpret: bool = True) -> jnp.ndarray:
+    """`conv2d` with the schedule picked by the tuning registry.
+
+    First call on a new problem shape pays one cost-model sweep and
+    persists the winner; every later call (in this or any future process)
+    reuses it.
+    """
+    from repro.core.registry import TuningRegistry
+    n, ic, h2, w2 = img.shape
+    oc, _, kh, kw = wgt.shape
+    h, w = h2 - kh + 1, w2 - kw + 1
+    sched = _tuned_schedule((oc, ic, h, w, kh, kw), img.dtype.itemsize,
+                            TuningRegistry.default_path())
+    return conv2d(img, wgt, block=sched.block_dict(),
+                  grid_order=sched.grid_order, interpret=interpret)
+
+
+__all__ = ["conv2d", "conv2d_tuned", "conv2d_ref", "default_block"]

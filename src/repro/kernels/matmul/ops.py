@@ -1,8 +1,12 @@
-"""Jit'd public wrapper for the tiled matmul kernel."""
+"""Jit'd public wrapper for the tiled matmul kernel.
+
+`matmul_tuned` consults the persistent tuning registry for the best
+(grid order x blocks x resident-RHS) schedule instead of static defaults.
+"""
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,4 +50,28 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *,
                        interpret)
 
 
-__all__ = ["matmul", "matmul_ref", "default_block"]
+@functools.lru_cache(maxsize=512)
+def _tuned_schedule(mnk: Tuple[int, int, int], elem_bytes: int,
+                    registry_path: str):
+    from repro.core import tuner
+    m, n, k = mnk
+    ranked = tuner.cached_tune_matmul(m, n, k, elem_bytes=elem_bytes,
+                                      top_k=1)
+    return ranked[0][0]
+
+
+def matmul_tuned(a: jnp.ndarray, b: jnp.ndarray, *,
+                 interpret: bool = True) -> jnp.ndarray:
+    """`matmul` with the schedule picked by the tuning registry; tunes at
+    most once per (m, n, k, dtype) per machine — ever."""
+    from repro.core.registry import TuningRegistry
+    m, k = a.shape
+    _, n = b.shape
+    sched = _tuned_schedule((m, n, k), a.dtype.itemsize,
+                            TuningRegistry.default_path())
+    return matmul(a, b, block=sched.block_dict(),
+                  grid_order=sched.grid_order,
+                  resident_rhs=sched.resident_rhs, interpret=interpret)
+
+
+__all__ = ["matmul", "matmul_tuned", "matmul_ref", "default_block"]

@@ -13,11 +13,15 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--registry", default=None,
+                    help="tuning-registry path: measured decode "
+                         "throughput is written back")
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config
+    from repro.core.registry import TuningRegistry
     from repro.models import build_model
     from repro.runtime.serve_loop import generate
 
@@ -35,9 +39,11 @@ def main() -> None:
         batch["image_embeds"] = jax.random.normal(
             jax.random.key(2),
             (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    registry = TuningRegistry(args.registry) if args.registry else None
     out, stats = generate(model, params, batch,
                           max_new_tokens=args.new_tokens,
-                          temperature=args.temperature)
+                          temperature=args.temperature,
+                          registry=registry)
     print(f"generated {out.shape}; prefill {stats.prefill_s*1e3:.1f}ms; "
           f"decode {stats.decode_tok_s:.0f} tok/s")
 

@@ -25,6 +25,9 @@ def main() -> None:
                     help="host placeholder devices (0 = real devices)")
     ap.add_argument("--mesh", default=None, help="e.g. 2x2 (data x model)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--registry", default=None,
+                    help="tuning-registry path: measured step times are "
+                         "written back for later runs/inspection")
     args = ap.parse_args()
 
     if args.devices:
@@ -50,7 +53,8 @@ def main() -> None:
 
     tcfg = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
                        ckpt_dir=args.ckpt_dir,
-                       opt=AdamWConfig(lr=args.lr), seed=args.seed)
+                       opt=AdamWConfig(lr=args.lr), seed=args.seed,
+                       registry_path=args.registry)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       global_batch=args.batch)
     out = Trainer(model, tcfg, dcfg, mesh=mesh).run()

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import registry as reg
 from repro.models.model_zoo import Model
 
 
@@ -26,11 +27,14 @@ class ServeStats:
 def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
              max_new_tokens: int, temperature: float = 0.0,
              rng: Optional[jax.Array] = None,
+             registry: Optional[reg.TuningRegistry] = None,
              ) -> tuple[np.ndarray, ServeStats]:
     """Greedy (or sampled) continuation of a batch of prompts.
 
     batch: {"tokens": [B, S_prompt]} plus modality stubs if any.
-    Returns generated tokens [B, max_new_tokens].
+    Returns generated tokens [B, max_new_tokens].  With ``registry``
+    given, the measured prefill/decode throughput is persisted so repeat
+    deployments of the same (arch, batch, lengths) know what to expect.
     """
     cfg = model.cfg
     bsz, prompt_len = batch["tokens"].shape
@@ -76,6 +80,17 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
         out.append(np.asarray(tok))
     jax.block_until_ready(tok)
     decode_s = time.time() - t1
-    return np.stack(out, axis=1), ServeStats(
-        prefill_s=prefill_s, decode_s=decode_s,
-        tokens_generated=bsz * max_new_tokens)
+    stats = ServeStats(prefill_s=prefill_s, decode_s=decode_s,
+                       tokens_generated=bsz * max_new_tokens)
+    if registry is not None:
+        key = reg.RegistryKey.make(
+            "serve_decode",
+            {"arch": cfg.name, "batch": int(bsz),
+             "prompt_len": int(prompt_len),
+             "new_tokens": int(max_new_tokens)},
+            reg.runtime_fingerprint(), "measured")
+        registry.record_measurement(
+            key, {"type": "serve_decode", "arch": cfg.name,
+                  "decode_tok_s": stats.decode_tok_s},
+            decode_s / max(max_new_tokens, 1))
+    return np.stack(out, axis=1), stats

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
+from repro.core import registry as reg
 from repro.data import DataConfig, DataPipeline
 from repro.models.model_zoo import Model
 from repro.optim import adamw
@@ -41,6 +42,9 @@ class TrainConfig:
     warmup_steps: int = 10
     backend: str = "xla"
     seed: int = 0
+    # Persistent tuning registry: measured step times are written back
+    # under this path so later runs (and the offline tuner) see them.
+    registry_path: Optional[str] = None
 
 
 def make_train_step(model: Model, opt_cfg: AdamWConfig,
@@ -113,6 +117,8 @@ class Trainer:
         self.monitor = StragglerMonitor()
         self.ckpt = (Checkpointer(cfg.ckpt_dir)
                      if cfg.ckpt_dir else None)
+        self.registry = (reg.TuningRegistry(cfg.registry_path)
+                         if cfg.registry_path else None)
         self.history: List[Dict[str, float]] = []
 
         lr_fn = functools.partial(
@@ -201,7 +207,26 @@ class Trainer:
             pipe.close()
             if self.ckpt is not None:
                 self.ckpt.wait()
+            self._write_back_step_time()
         return {"params": params, "opt_state": opt_state,
                 "history": self.history,
                 "wall_time": time.time() - t_total,
                 "stragglers": self.monitor.events}
+
+    def _write_back_step_time(self) -> None:
+        """Persist the measured steady-state step time to the tuning
+        registry (the run-time half of explore/validate/adapt: later
+        runs and the offline tuner see what this run actually cost)."""
+        if self.registry is None or len(self.history) < 2:
+            return
+        dts = [r["dt"] for r in self.history[1:]]  # drop compile step
+        key = reg.RegistryKey.make(
+            "train_step",
+            {"arch": self.model.cfg.name,
+             "global_batch": self.data_cfg.global_batch,
+             "seq_len": self.data_cfg.seq_len,
+             "backend": self.cfg.backend},
+            reg.runtime_fingerprint(), "measured")
+        self.registry.record_measurement(
+            key, {"type": "train_step", "arch": self.model.cfg.name},
+            float(np.median(dts)))

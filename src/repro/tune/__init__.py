@@ -1,0 +1,15 @@
+"""`python -m repro.tune` — manage the persistent tuning registry.
+
+Subcommands::
+
+    warm        tune a layer config set (parallel sweep) into the registry
+    inspect     print the registry contents as a table
+    stats       one-line summary (records by kind, measured count)
+    export      dump the registry as a JSON array
+    invalidate  drop records by kind / machine / cost-model version
+
+See :mod:`repro.core.registry` for the storage format.
+"""
+from repro.tune.cli import main
+
+__all__ = ["main"]

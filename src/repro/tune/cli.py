@@ -1,0 +1,172 @@
+"""Implementation of the ``python -m repro.tune`` registry CLI."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.core import cost_model as cm
+from repro.core import registry as reg
+from repro.core import tuner
+
+CONFIG_SETS = {
+    "squeezenet_layers": "TABLE_4_1 (thesis Table 4.1: SqueezeNet + "
+                         "TinyDarknet layers)",
+    "synthetic": "Table 4.2 synthetic design space (216 layers)",
+    "synthetic_mt": "Table 4.3 multi-thread design space (36 layers)",
+}
+
+
+def _load_layers(name: str):
+    from repro.configs import squeezenet_layers as sq
+    if name == "squeezenet_layers":
+        return list(sq.TABLE_4_1.values())
+    if name == "synthetic":
+        return sq.synthetic_design_space()
+    if name == "synthetic_mt":
+        return sq.synthetic_design_space_mt()
+    raise SystemExit(
+        f"unknown --config {name!r}; choose from {sorted(CONFIG_SETS)}")
+
+
+def _registry(args) -> reg.TuningRegistry:
+    if args.registry:
+        return reg.TuningRegistry(args.registry)
+    return reg.TuningRegistry.default()
+
+
+def _fmt_problem(p: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(p.items()))
+
+
+def cmd_warm(args) -> int:
+    registry = _registry(args)
+    layers = _load_layers(args.config)
+    kinds = tuple(k.strip() for k in args.kinds.split(",") if k.strip())
+    done = tuner.warm_registry(
+        layers, registry, threads=args.threads, top_k=args.top_k,
+        elem_bytes=args.elem_bytes, kinds=kinds, workers=args.workers,
+        refresh=args.refresh)
+    print(f"warmed {args.config}: "
+          + ", ".join(f"{k}={v}" for k, v in done.items())
+          + f"; registry now has {len(registry)} records"
+          + (f" at {registry.path}" if registry.path else " (in memory)"))
+    return 0
+
+
+def cmd_inspect(args) -> int:
+    registry = _registry(args)
+    rows = 0
+    for rec in registry.records():
+        if args.kind and rec.key.kind != args.kind:
+            continue
+        meas = ""
+        if rec.measured is not None:
+            meas = f" measured={rec.measured.get('time_s', float('nan')):.3e}s"
+        pred = ""
+        costs = rec.value.get("costs")
+        if costs:
+            c = reg.cost_from_dict(costs[0])
+            pred = f" predicted={c.time_s:.3e}s"
+        print(f"{rec.key.kind:16s} {_fmt_problem(rec.key.problem_dict()):48s}"
+              f" machine={rec.key.machine} cm={rec.key.cost_model}"
+              f" src={rec.source}{pred}{meas}")
+        rows += 1
+    print(f"-- {rows} records"
+          + (f" ({registry.path})" if registry.path else ""))
+    return 0
+
+
+def cmd_stats(args) -> int:
+    registry = _registry(args)
+    print(json.dumps(registry.stats(), indent=2, sort_keys=True))
+    return 0
+
+
+def cmd_export(args) -> int:
+    registry = _registry(args)
+    if args.out == "-":
+        recs = [r.to_dict() for r in registry.records()]
+        json.dump(recs, sys.stdout, indent=2, sort_keys=True)
+        print()
+        n = len(recs)
+    else:
+        n = registry.export_json(args.out)
+        print(f"exported {n} records to {args.out}")
+    return 0
+
+
+def cmd_invalidate(args) -> int:
+    registry = _registry(args)
+    if not (args.all or args.kind or args.machine or args.cost_model):
+        raise SystemExit("refusing to invalidate without a filter; "
+                         "pass --all to clear everything")
+    n = registry.invalidate(kind=args.kind, machine=args.machine,
+                            cost_model=args.cost_model)
+    print(f"invalidated {n} records; {len(registry)} remain")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description=__doc__.splitlines()[0] if __doc__ else None)
+    ap.add_argument("--registry", default=None,
+                    help="registry path (default: $REPRO_TUNE_REGISTRY or "
+                         f"{reg.TuningRegistry.default_path()})")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    w = sub.add_parser("warm", help="tune a layer set into the registry")
+    w.add_argument("--config", default="squeezenet_layers",
+                   help="layer set: " + ", ".join(sorted(CONFIG_SETS)))
+    w.add_argument("--kinds", default="conv_sweep,conv_schedule",
+                   help="comma list of conv_sweep,conv_schedule")
+    w.add_argument("--workers", type=int, default=None,
+                   help="parallel sweep worker processes (default serial)")
+    w.add_argument("--threads", type=int, default=1,
+                   help="modelled thread count for the cache sweeps")
+    w.add_argument("--top-k", type=int, default=5)
+    w.add_argument("--elem-bytes", type=int, default=2,
+                   help="element size the conv_schedule keys are tuned "
+                        "for: 2 = bf16 (default), 4 = f32 — must match "
+                        "the dtype callers will use (conv2d_tuned keys "
+                        "on the input dtype's itemsize)")
+    w.add_argument("--refresh", action="store_true",
+                   help="recompute even on cache hits")
+    w.set_defaults(fn=cmd_warm)
+
+    i = sub.add_parser("inspect", help="print registry contents")
+    i.add_argument("--kind", default=None)
+    i.set_defaults(fn=cmd_inspect)
+
+    s = sub.add_parser("stats", help="summary counts")
+    s.set_defaults(fn=cmd_stats)
+
+    e = sub.add_parser("export", help="dump as a JSON array")
+    e.add_argument("--out", default="-", help="output path ('-' = stdout)")
+    e.set_defaults(fn=cmd_export)
+
+    v = sub.add_parser("invalidate", help="drop records by filter")
+    v.add_argument("--kind", default=None)
+    v.add_argument("--machine", default=None,
+                   help="machine fingerprint (12 hex)")
+    v.add_argument("--cost-model", default=None,
+                   help=f"cost-model version (current: "
+                        f"{cm.COST_MODEL_VERSION})")
+    v.add_argument("--all", action="store_true")
+    v.set_defaults(fn=cmd_invalidate)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    args = build_parser().parse_args(argv)
+    try:
+        code = args.fn(args)
+    except BrokenPipeError:
+        # stdout went away (e.g. `... | head`); suppress the interpreter's
+        # flush-on-exit complaint and leave quietly.
+        import os
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        code = 0
+    sys.exit(code)

@@ -5,5 +5,14 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+# `hypothesis` is a declared test dependency (pyproject.toml), but hermetic
+# containers can't always pip install; fall back to the in-repo
+# deterministic shim so the suite still runs there.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro._compat import hypothesis_fallback
+    hypothesis_fallback.install()
+
 # NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device.
 # Multi-device tests spawn subprocesses that set the flag themselves.

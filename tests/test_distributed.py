@@ -30,8 +30,8 @@ from repro.runtime import sharding as shd
 from repro.runtime.train_loop import make_train_step
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 rules = shd.ShardingRules()
 cfg = get_config("phi3-mini-3.8b-smoke")
 m = build_model(cfg)
@@ -68,8 +68,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.optim import grad_compress
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("data",))
 g = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16) / 100.0
 err = jnp.zeros((8, 16), jnp.float32)
 
@@ -120,10 +120,9 @@ import tempfile, os, jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save, restore
 
-mesh_a = jax.make_mesh((2, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
-mesh_b = jax.make_mesh((4, 1), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh_a = make_mesh((2, 2), ("data", "model"))
+mesh_b = make_mesh((4, 1), ("data", "model"))
 x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
 xa = jax.device_put(x, NamedSharding(mesh_a, P("data", "model")))
 d = tempfile.mkdtemp()

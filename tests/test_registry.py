@@ -1,0 +1,341 @@
+"""Persistent tuning registry: round-trip, warm-hit, invalidation,
+concurrency, adaptive write-back, parallel-sweep determinism."""
+import json
+import os
+import statistics
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import registry as reg
+from repro.core import tuner
+from repro.core.adaptive import AdaptiveSelector
+from repro.core.loopnest import ConvLayer
+from repro.core.schedule import ConvSchedule, MatmulSchedule
+
+LAYER = ConvLayer(64, 32, 16, 16, 3, 3)
+
+
+def make_registry(tmp_path, name="reg.jsonl"):
+    return reg.TuningRegistry(str(tmp_path / name))
+
+
+# ------------------------------------------------------------- round trip
+
+def test_record_roundtrip_persistence(tmp_path):
+    r = make_registry(tmp_path)
+    key = reg.conv_schedule_key(LAYER, cm.TPUSpec())
+    sched = ConvSchedule.make(("oc", "y", "x", "ic"),
+                              {"oc": 32, "ic": 16, "y": 8, "x": 16})
+    cost = cm.conv_schedule_cost(LAYER, sched.grid_order,
+                                 sched.block_dict())
+    r.put(reg.TuningRecord(key=key, value={
+        "schedules": [reg.schedule_to_dict(sched)],
+        "costs": [reg.cost_to_dict(cost)]}))
+
+    # a brand-new object re-reading the same file sees the same record
+    r2 = reg.TuningRegistry(r.path)
+    rec = r2.get(key)
+    assert rec is not None
+    assert reg.schedule_from_dict(rec.value["schedules"][0]) == sched
+    got = reg.cost_from_dict(rec.value["costs"][0])
+    assert got == cost and got.time_s == cost.time_s
+
+
+def test_matmul_schedule_roundtrip(tmp_path):
+    r = make_registry(tmp_path)
+    ranked = tuner.cached_tune_matmul(256, 128, 64, registry=r, top_k=3)
+    again = tuner.cached_tune_matmul(256, 128, 64, registry=r, top_k=3)
+    assert [s for s, _ in ranked] == [s for s, _ in again]
+    assert all(isinstance(s, MatmulSchedule) for s, _ in again)
+
+
+def test_sweep_roundtrip_bitexact(tmp_path):
+    r = make_registry(tmp_path)
+    cold = tuner.cached_sweep_layer(LAYER, registry=r)
+    warm = tuner.cached_sweep_layer(LAYER,
+                                    registry=reg.TuningRegistry(r.path))
+    np.testing.assert_array_equal(cold.cycles, warm.cycles)
+    np.testing.assert_array_equal(cold.l1_misses, warm.l1_misses)
+    np.testing.assert_array_equal(cold.l2_misses, warm.l2_misses)
+
+
+def test_corrupt_lines_are_skipped(tmp_path):
+    r = make_registry(tmp_path)
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
+    with open(r.path, "a") as f:
+        f.write("this is not json\n")
+        f.write('{"schema": 999, "future": true}\n')
+    r2 = reg.TuningRegistry(r.path)
+    assert len(r2) == 1
+
+
+# ------------------------------------------------------------- warm hits
+
+def test_warm_hit_zero_evaluations_and_identical_schedule(tmp_path):
+    r = make_registry(tmp_path)
+    cold = tuner.cached_tune_conv(LAYER, registry=r, top_k=3)
+    cm.reset_eval_counts()
+    warm = tuner.cached_tune_conv(LAYER, registry=r, top_k=3)
+    assert cm.total_evals() == 0, "warm hit must not invoke the sweep"
+    assert [s for s, _ in warm] == [s for s, _ in cold]
+    assert [c.time_s for _, c in warm] == [c.time_s for _, c in cold]
+
+
+def test_warm_hit_speedup_at_least_100x(tmp_path):
+    r = make_registry(tmp_path)
+    t0 = time.perf_counter()
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
+    t_cold = time.perf_counter() - t0
+    warm_times = []
+    for _ in range(20):
+        t0 = time.perf_counter()
+        tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
+        warm_times.append(time.perf_counter() - t0)
+    t_warm = statistics.median(warm_times)
+    assert t_cold / t_warm >= 100, (t_cold, t_warm)
+
+
+def test_warm_hit_survives_process_restart_simulation(tmp_path):
+    r = make_registry(tmp_path)
+    cold = tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
+    cm.reset_eval_counts()
+    fresh = reg.TuningRegistry(r.path)   # "new process"
+    warm = tuner.cached_tune_conv(LAYER, registry=fresh, top_k=1)
+    assert cm.total_evals() == 0
+    assert warm[0][0] == cold[0][0]
+
+
+def test_top_k_larger_than_cached_resweeps(tmp_path):
+    r = make_registry(tmp_path)
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=2)  # stores >= 5
+    cm.reset_eval_counts()
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=5)
+    assert cm.total_evals() == 0          # 5 were stored
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=9)
+    assert cm.total_evals() > 0           # 9 were not
+
+
+# ---------------------------------------------------------- invalidation
+
+def test_machine_change_misses(tmp_path):
+    r = make_registry(tmp_path)
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
+    cm.reset_eval_counts()
+    other = cm.TPUSpec(vmem_bytes=32 * 1024 * 1024)
+    tuner.cached_tune_conv(LAYER, spec=other, registry=r, top_k=1)
+    assert cm.total_evals() > 0, "different machine must re-tune"
+    assert len(r) == 2
+
+
+def test_cost_model_version_invalidates(tmp_path, monkeypatch):
+    r = make_registry(tmp_path)
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
+    monkeypatch.setattr(cm, "COST_MODEL_VERSION", "999-test")
+    cm.reset_eval_counts()
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
+    assert cm.total_evals() > 0, "bumped cost model must re-tune"
+
+
+def test_invalidate_filters(tmp_path):
+    r = make_registry(tmp_path)
+    tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
+    tuner.cached_tune_matmul(128, 128, 128, registry=r, top_k=1)
+    assert len(r) == 2
+    n = r.invalidate(kind="conv_schedule")
+    assert n == 1 and len(r) == 1
+    # invalidation is persistent, not just in-memory
+    assert len(reg.TuningRegistry(r.path)) == 1
+    assert r.invalidate() == 1
+    assert len(reg.TuningRegistry(r.path)) == 0
+
+
+# ----------------------------------------------------------- concurrency
+
+def test_concurrent_writers_lose_no_records(tmp_path):
+    path = str(tmp_path / "conc.jsonl")
+    n_threads, per_thread = 8, 20
+
+    def writer(tid):
+        r = reg.TuningRegistry(path, autoload=False)
+        for i in range(per_thread):
+            key = reg.RegistryKey.make(
+                "conv_schedule", {"tid": tid, "i": i}, "feedfeedfeed",
+                cm.COST_MODEL_VERSION)
+            r.put(reg.TuningRecord(key=key, value={"schedules": [],
+                                                   "costs": []}))
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    merged = reg.TuningRegistry(path)
+    assert len(merged) == n_threads * per_thread
+    # every line on disk is valid standalone JSON (no torn writes)
+    with open(path) as f:
+        for line in f:
+            json.loads(line)
+
+
+# ------------------------------------------------------ adaptive write-back
+
+def test_adaptive_commit_writes_back(tmp_path):
+    r = make_registry(tmp_path)
+    key = reg.conv_schedule_key(LAYER, cm.TPUSpec())
+    fast = ConvSchedule.make(("oc", "y", "x", "ic"),
+                             {"oc": 32, "ic": 16, "y": 8, "x": 16})
+    slow = ConvSchedule.make(("ic", "oc", "y", "x"),
+                             {"oc": 4, "ic": 4, "y": 4, "x": 4})
+    sel = AdaptiveSelector(probes_per_candidate=2, registry=r)
+    sel.register("conv", [slow, fast], registry_key=key)
+    times = {slow: 0.05, fast: 0.01}
+    for _ in range(20):
+        if sel.committed("conv"):
+            break
+        cand = sel.propose("conv")
+        sel.observe("conv", times[cand])
+    assert sel.committed("conv") == fast
+
+    rec = reg.TuningRegistry(r.path).get(key)
+    assert rec is not None and rec.measured is not None
+    assert reg.schedule_from_dict(rec.measured["best"]) == fast
+    assert rec.measured["time_s"] == pytest.approx(0.01)
+
+
+def test_adaptive_only_record_retunes_and_keeps_measurement(tmp_path):
+    # A record created purely by adaptive write-back has a winner but no
+    # ranked cost list; cached_tune must treat it as a miss (not crash)
+    # and keep the measurement when it fills in the offline ranking.
+    r = make_registry(tmp_path)
+    key = reg.conv_schedule_key(LAYER, cm.TPUSpec())
+    winner = ConvSchedule.make(("oc", "y", "x", "ic"),
+                               {"oc": 32, "ic": 16, "y": 8, "x": 16})
+    r.record_measurement(key, reg.schedule_to_dict(winner), 1.25e-3)
+    ranked = tuner.cached_tune_conv(LAYER, registry=r, top_k=2)
+    assert len(ranked) == 2
+    rec = r.get(key)
+    assert len(rec.value["costs"]) >= 2
+    assert rec.measured["time_s"] == pytest.approx(1.25e-3)
+
+
+def test_measurement_refines_offline_record(tmp_path):
+    r = make_registry(tmp_path)
+    ranked = tuner.cached_tune_conv(LAYER, registry=r, top_k=2)
+    key = reg.conv_schedule_key(LAYER, cm.TPUSpec())
+    r.record_measurement(key, reg.schedule_to_dict(ranked[1][0]), 3.5e-4)
+    rec = reg.TuningRegistry(r.path).get(key)
+    # offline schedules retained, measurement attached
+    assert len(rec.value["schedules"]) >= 2
+    assert rec.measured["time_s"] == pytest.approx(3.5e-4)
+    assert rec.source == "offline"
+
+
+# ------------------------------------------- parallel sweep determinism
+
+def test_parallel_warm_byte_identical_to_serial(tmp_path):
+    from repro.configs.squeezenet_layers import TABLE_4_1
+    layers = list(TABLE_4_1.values())[:4]
+    serial = make_registry(tmp_path, "serial.jsonl")
+    par = make_registry(tmp_path, "parallel.jsonl")
+    tuner.warm_registry(layers, serial, workers=1)
+    tuner.warm_registry(layers, par, workers=4)
+    with open(serial.path, "rb") as a, open(par.path, "rb") as b:
+        assert a.read() == b.read()
+
+
+def test_parallel_sweep_matches_serial_values():
+    layers = [ConvLayer(16, 8, 12, 12, 3, 3),
+              ConvLayer(8, 16, 10, 10, 1, 1)]
+    serial = [tuner.sweep_layer(l) for l in layers]
+    par = tuner.parallel_sweep(layers, workers=2)
+    for s, p in zip(serial, par):
+        np.testing.assert_array_equal(s.cycles, p.cycles)
+
+
+def test_warm_registry_skips_existing(tmp_path):
+    from repro.configs.squeezenet_layers import TABLE_4_1
+    layers = list(TABLE_4_1.values())[:2]
+    r = make_registry(tmp_path)
+    done1 = tuner.warm_registry(layers, r, workers=1)
+    assert done1["conv_sweep"] == 2 and done1["conv_schedule"] == 2
+    cm.reset_eval_counts()
+    done2 = tuner.warm_registry(layers, r, workers=1)
+    assert done2["skipped"] == 4 and cm.total_evals() == 0
+
+
+# ------------------------------------------------------------- kernels
+
+def test_conv2d_tuned_matches_reference(tmp_path, monkeypatch):
+    import jax.numpy as jnp
+    from repro.kernels.conv2d import conv2d_ref, ops as conv_ops
+    monkeypatch.setenv("REPRO_TUNE_REGISTRY",
+                       str(tmp_path / "kreg.jsonl"))
+    conv_ops._tuned_schedule.cache_clear()
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.normal(size=(1, 8, 14, 14)).astype(np.float32))
+    wgt = jnp.asarray(rng.normal(size=(16, 8, 3, 3)).astype(np.float32))
+    out = conv_ops.conv2d_tuned(img, wgt)
+    ref = conv2d_ref(img, wgt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # second call: pure cache (no sweep)
+    cm.reset_eval_counts()
+    conv_ops.conv2d_tuned(img, wgt)
+    assert cm.total_evals() == 0
+
+
+def test_matmul_tuned_matches_reference(tmp_path, monkeypatch):
+    import jax.numpy as jnp
+    from repro.kernels.matmul import matmul_ref, ops as mm_ops
+    monkeypatch.setenv("REPRO_TUNE_REGISTRY",
+                       str(tmp_path / "kreg.jsonl"))
+    mm_ops._tuned_schedule.cache_clear()
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32))
+    out = mm_ops.matmul_tuned(a, b)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- CLI
+
+def test_cli_warm_inspect_export_invalidate(tmp_path, capsys):
+    from repro.tune.cli import main
+    path = str(tmp_path / "cli.jsonl")
+    with pytest.raises(SystemExit) as e:
+        main(["--registry", path, "warm", "--config",
+              "squeezenet_layers", "--kinds", "conv_schedule"])
+    assert e.value.code == 0
+    assert len(reg.TuningRegistry(path)) == 8  # Table 4.1 layer count
+
+    with pytest.raises(SystemExit) as e:
+        main(["--registry", path, "inspect"])
+    assert e.value.code == 0
+    assert "conv_schedule" in capsys.readouterr().out
+
+    out_json = str(tmp_path / "export.json")
+    with pytest.raises(SystemExit) as e:
+        main(["--registry", path, "export", "--out", out_json])
+    assert e.value.code == 0
+    with open(out_json) as f:
+        assert len(json.load(f)) == 8
+
+    with pytest.raises(SystemExit) as e:
+        main(["--registry", path, "invalidate", "--kind",
+              "conv_schedule"])
+    assert e.value.code == 0
+    assert len(reg.TuningRegistry(path)) == 0
+
+
+def test_default_registry_env_override(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_REGISTRY", str(tmp_path / "env.jsonl"))
+    r = reg.TuningRegistry.default()
+    assert r.path == str(tmp_path / "env.jsonl")

@@ -49,9 +49,11 @@ def test_no_double_axis_use():
 
 
 def test_partial_prefix_for_multiaxis_rule():
-    # embed -> (pod, data): with dim divisible by pod but not pod*data
+    # embed -> (pod, data): with dim divisible by pod but not pod*data.
+    # jax >= 0.5 normalises P(("pod",)) == P("pod"); older jax does not,
+    # so accept either normal form.
     spec = shd.resolve_spec(("embed",), (4,), MESH3, RULES)
-    assert spec == P(("pod",))
+    assert spec in (P(("pod",)), P("pod"))
 
 
 def test_batch_spec_decode_batch1():
