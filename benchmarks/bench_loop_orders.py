@@ -2,15 +2,23 @@
 layers (SqueezeNet + TinyDarknet) under the fast cache model; compares the
 three permutation indexings (lex / revlex / Hamiltonian) by signature
 smoothness, plus the Fig 3.3 reuse contrast (best vs worst loop order's
-block working set / reuse distance) on the first layer."""
+block working set / reuse distance) on the first layer.
+
+Also the headline batch-engine benchmark: one ``simulate_batch`` call
+scoring all 720 permutations vs the PR-1 per-permutation Python loop, on
+the full SqueezeNet layer set — must be >= 10x faster cold with identical
+per-layer argmin permutations (CI gates the recorded speedup at >= 5x via
+BENCH_sweep.json; the equivalence tests assert bit-level agreement).
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from benchmarks.common import emit, is_quick
+from benchmarks.common import emit, is_quick, record_metric
 from repro.configs.squeezenet_layers import TABLE_4_1
+from repro.core import cost_model as cm
 from repro.core import tracesim, tuner
 
 
@@ -19,13 +27,45 @@ def smoothness(sig: np.ndarray) -> float:
     return float(np.mean(np.abs(np.diff(sig))) / np.mean(sig))
 
 
+def scalar_sweep_cycles(layer) -> np.ndarray:
+    """The PR-1 cold sweep: 720 per-permutation Python ``simulate`` calls
+    (kept as the batch engine's baseline and correctness oracle)."""
+    return np.array([cm.simulate(layer, p).cycles
+                     for p in tuner.ALL_PERMS])
+
+
 def run() -> None:
     names = list(TABLE_4_1)[:2] if is_quick() else list(TABLE_4_1)
-    for name in names:
-        layer = TABLE_4_1[name]
+
+    # -- batch engine vs the serial scalar loop (cold, whole layer set) --
+    layers = [TABLE_4_1[n] for n in names]
+    t0 = time.perf_counter()
+    scalar_cycles = [scalar_sweep_cycles(l) for l in layers]
+    t_scalar = time.perf_counter() - t0
+    sweeps = []
+    batch_dts = []
+    for layer in layers:
         t0 = time.perf_counter()
-        sweep = tuner.sweep_layer(layer)
-        dt_us = (time.perf_counter() - t0) / 720 * 1e6
+        sweeps.append(tuner.sweep_layer(layer))
+        batch_dts.append(time.perf_counter() - t0)
+    t_batch = sum(batch_dts)
+    for sc, sw in zip(scalar_cycles, sweeps):
+        assert int(np.argmin(sc)) == int(np.argmin(sw.cycles)), \
+            "batch argmin diverged from scalar"
+    speedup = t_scalar / max(t_batch, 1e-12)
+    evals = len(layers) * len(tuner.ALL_PERMS)
+    emit("loop_orders.batch_vs_scalar", t_batch / evals * 1e6,
+         f"speedup={speedup:.0f}x;layers={len(layers)}")
+    record_metric("sweep.cold_wall_time_s", t_batch)
+    record_metric("sweep.scalar_wall_time_s", t_scalar)
+    record_metric("sweep.evals_per_sec", evals / max(t_batch, 1e-12))
+    record_metric("sweep.batch_vs_scalar_speedup", speedup)
+    if not is_quick():
+        assert speedup >= 10, \
+            f"batch sweep speedup {speedup:.1f}x < 10x over scalar loop"
+
+    for name, layer, sweep, dt in zip(names, layers, sweeps, batch_dts):
+        dt_us = dt / 720 * 1e6
         cyc = sweep.cycles
         ratio = float(cyc.max() / cyc.min())
         emit(f"loop_orders.{name}.sweep", dt_us,

@@ -3,8 +3,10 @@ north star: a fleet serving millions of requests must not pay the sweep
 twice).
 
 Rows: cold sweep time, warm cached_tune time and speedup per Table 4.1
-layer (must be >= 100x — also asserted by tests/test_registry.py), warm
-evaluation count (must be 0), and parallel-vs-serial warm determinism.
+layer (must be >= 10x — the batch engine collapsed the cold path itself
+to ~1 ms, so the margin is structurally smaller than the >= 100x of the
+scalar era; also asserted by tests/test_registry.py), warm evaluation
+count (must be 0), and repeated-warm determinism.
 """
 from __future__ import annotations
 
@@ -13,7 +15,7 @@ import statistics
 import tempfile
 import time
 
-from benchmarks.common import emit, is_quick
+from benchmarks.common import emit, is_quick, record_metric
 from repro.configs.squeezenet_layers import TABLE_4_1
 from repro.core import cost_model as cm
 from repro.core import tuner
@@ -48,25 +50,29 @@ def run() -> None:
         emit(f"registry.{name}.warm", t_warm * 1e6,
              f"speedup={speedup:.0f}x;evals=0")
 
-    assert worst_speedup >= 100, \
-        f"warm cache speedup {worst_speedup:.0f}x < 100x"
+    assert worst_speedup >= 10, \
+        f"warm cache speedup {worst_speedup:.0f}x < 10x"
     emit("registry.warm_speedup.min", 0.0, f"{worst_speedup:.0f}x")
+    record_metric("registry.warm_vs_cold_ratio", worst_speedup)
 
-    # parallel warm must byte-match serial warm
+    # repeated warms must be byte-identical (the old parallel-vs-serial
+    # guarantee, now held trivially: warming is one in-process batch
+    # computation per layer; the pool survives only in tuner.exact_sweep)
     layers = [TABLE_4_1[n] for n in names]
-    pa = TuningRegistry(os.path.join(tmp, "serial.jsonl"))
-    pb = TuningRegistry(os.path.join(tmp, "parallel.jsonl"))
+    pa = TuningRegistry(os.path.join(tmp, "first.jsonl"))
+    pb = TuningRegistry(os.path.join(tmp, "second.jsonl"))
     t0 = time.perf_counter()
     tuner.warm_registry(layers, pa, workers=1)
-    t_serial = time.perf_counter() - t0
+    t_first = time.perf_counter() - t0
     t0 = time.perf_counter()
     tuner.warm_registry(layers, pb, workers=4)
-    t_par = time.perf_counter() - t0
+    t_second = time.perf_counter() - t0
     with open(pa.path, "rb") as a, open(pb.path, "rb") as b:
         identical = a.read() == b.read()
-    assert identical, "parallel warm diverged from serial"
-    emit("registry.parallel_warm", t_par * 1e6,
-         f"serial_us={t_serial * 1e6:.0f};identical={identical}")
+    assert identical, "repeated warm diverged"
+    emit("registry.repeat_warm", t_second * 1e6,
+         f"first_us={t_first * 1e6:.0f};identical={identical}")
+    record_metric("registry.warm_wall_time_s", t_first)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,25 @@
-"""Shared benchmark helpers: CSV emission + timing + quick mode."""
+"""Shared benchmark helpers: CSV emission + timing + quick mode + the
+machine-readable metric sink behind BENCH_sweep.json."""
 from __future__ import annotations
 
 import os
 import time
-from typing import Callable, Sequence, TypeVar
+from typing import Callable, Dict, Sequence, TypeVar
 
 T = TypeVar("T")
+
+# Machine-readable metrics: benches record headline numbers here and
+# benchmarks/run.py dumps them to BENCH_sweep.json so the perf trajectory
+# is tracked (and CI-gated) across PRs.
+_METRICS: Dict[str, float] = {}
+
+
+def record_metric(name: str, value: float) -> None:
+    _METRICS[name] = float(value)
+
+
+def metrics() -> Dict[str, float]:
+    return dict(_METRICS)
 
 
 def is_quick() -> bool:

@@ -17,11 +17,19 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §6):
 ``--quick`` (or env REPRO_BENCH_QUICK=1) shrinks every bench to smoke
 size — tiny shapes, truncated design spaces — and any bench failure makes
 the process exit nonzero, so CI can gate on it.
+
+Headline numbers each bench records (sweep wall-time, evals/sec,
+warm-vs-cold ratio, batch-vs-scalar speedup) are written to
+``BENCH_sweep.json`` (``--bench-json`` to relocate, empty string to
+disable) so the perf trajectory is machine-readable across PRs; CI
+uploads it as an artifact and fails if the batch-engine speedup regresses
+below 5x.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import os
 import sys
 import time
@@ -40,6 +48,9 @@ def main(argv=None) -> int:
                     help=f"subset to run (default: all of {MODULES})")
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: tiny shapes, truncated spaces")
+    ap.add_argument("--bench-json", default="BENCH_sweep.json",
+                    help="where to write the machine-readable metric "
+                         "summary ('' disables)")
     args = ap.parse_args(argv)
     unknown = [b for b in args.benches if b not in MODULES]
     if unknown:
@@ -65,6 +76,15 @@ def main(argv=None) -> int:
             failures.append(name)
             print(f"# {name} FAILED", flush=True)
             traceback.print_exc()
+    if args.bench_json:
+        from benchmarks.common import metrics
+        payload = {"quick": bool(args.quick), "benches": which,
+                   "failures": failures, "metrics": metrics()}
+        with open(args.bench_json, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# metrics written to {args.bench_json}", flush=True)
+
     if failures:
         print(f"# {len(failures)} bench(es) failed: "
               + ", ".join(failures), flush=True)

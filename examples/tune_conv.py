@@ -57,10 +57,13 @@ def main():
 
     print("== neighbour-swap search vs exhaustive (§7.2) ==")
     layer = layers["initial-conf"]
-    score = lambda p: cm.simulate(layer, p).cycles  # noqa: E731
-    exhaustive = min(score(p) for p in tuner.ALL_PERMS)
-    p, s, evals = tuner.neighbor_swap_search(score, (0, 1, 2, 3, 4, 5))
-    p2, s2, evals2 = tuner.bfs_search(score, (0, 1, 2, 3, 4, 5), budget=80)
+    score_batch = tuner.batch_perm_scorer(layer)
+    exhaustive = float(cm.simulate_batch(layer, tuner.ALL_PERMS)
+                       .cycles.min())
+    p, s, evals = tuner.neighbor_swap_search(None, (0, 1, 2, 3, 4, 5),
+                                             score_batch=score_batch)
+    p2, s2, evals2 = tuner.bfs_search(None, (0, 1, 2, 3, 4, 5), budget=80,
+                                      score_batch=score_batch)
     print(f"  greedy:   {pname(p):22s} {s/exhaustive:.3f}x-opt "
           f"in {evals} evals (vs 720)")
     print(f"  best-first: {pname(p2):20s} {s2/exhaustive:.3f}x-opt "

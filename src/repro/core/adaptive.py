@@ -107,6 +107,41 @@ class AdaptiveSelector(Generic[S]):
                                       range(len(candidates))},
                                      registry_key=registry_key)
 
+    def register_conv(self, key: str, layer, spec=None,
+                      elem_bytes: int = 2, top_k: int = 3) -> None:
+        """Register a conv slot straight from the batch tuner: the top-K
+        schedules of one ``conv_schedule_cost_batch`` enumeration (via the
+        persistent registry when warm), with the registry key wired so a
+        commit writes the measured winner back."""
+        from repro.core import cost_model as cm
+        from repro.core import tuner
+        spec = spec if spec is not None else cm.TPUSpec()
+        if self.registry is not None:
+            ranked = tuner.cached_tune_conv(layer, spec, elem_bytes, top_k,
+                                            registry=self.registry)
+        else:
+            ranked = tuner.tune_conv(layer, spec, elem_bytes, top_k=top_k)
+        self.register(key, [s for s, _ in ranked],
+                      registry_key=reg.conv_schedule_key(layer, spec,
+                                                         elem_bytes))
+
+    def register_matmul(self, key: str, m: int, n: int, k: int, spec=None,
+                        elem_bytes: int = 2, top_k: int = 3) -> None:
+        """Matmul analogue of :meth:`register_conv` (one
+        ``matmul_schedule_cost_batch`` enumeration behind the registry)."""
+        from repro.core import cost_model as cm
+        from repro.core import tuner
+        spec = spec if spec is not None else cm.TPUSpec()
+        if self.registry is not None:
+            ranked = tuner.cached_tune_matmul(m, n, k, spec, elem_bytes,
+                                              top_k, registry=self.registry)
+        else:
+            ranked = tuner.tune_matmul(m, n, k, spec, elem_bytes,
+                                       top_k=top_k)
+        self.register(key, [s for s, _ in ranked],
+                      registry_key=reg.matmul_schedule_key(m, n, k, spec,
+                                                           elem_bytes))
+
     def propose(self, key: str) -> S:
         slot = self._slots[key]
         if slot.committed is not None:

@@ -25,18 +25,28 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import loopnest as ln
 from repro.core.loopnest import ConvLayer, LOOPS
 
 # Bump whenever a change below alters predicted costs: the tuning registry
 # keys cached results on this string, so stale predictions self-invalidate.
+# The batch engine reproduces the scalar model bit-for-bit (same argmin,
+# cycles within 1e-9 relative — see tests/test_batch_equivalence.py), so
+# introducing it did NOT bump this and warm registries survive.
 COST_MODEL_VERSION = "1"
 
 # Evaluation counters — how many cost-model queries ran in this process.
 # The registry's warm-cache guarantee ("a hit performs zero sweep
 # evaluations") is asserted against these in tests and bench_registry.
+# Batch entry points count one eval per *candidate scored*, so the
+# guarantee holds whichever engine a caller uses.
 EVAL_COUNTS: Dict[str, int] = {"simulate": 0, "conv_schedule_cost": 0,
-                               "matmul_schedule_cost": 0}
+                               "matmul_schedule_cost": 0,
+                               "simulate_batch": 0,
+                               "conv_schedule_cost_batch": 0,
+                               "matmul_schedule_cost_batch": 0}
 
 
 def reset_eval_counts() -> None:
@@ -235,6 +245,175 @@ def sweep_permutations(layer: ConvLayer,
 
 
 # ---------------------------------------------------------------------------
+# Vectorized batch engine — the whole permutation space in one shot
+# ---------------------------------------------------------------------------
+#
+# ``simulate_batch`` is the same recursive footprint model as ``simulate``,
+# restructured as dense array computation: footprints collapse onto the 64
+# inner-loop subsets (precomputed once per (layer, block size) in
+# loopnest.footprint_block_table), permutations become an int [P, 6] array
+# of loop ids plus an int [P, 7] array of per-depth subset masks, and the
+# innermost→outermost recursion becomes six rounds of np.where over all P
+# candidates at once.  Arithmetic is sequenced exactly like the scalar
+# model (same operand order, same float64 ops), so results are
+# bit-identical, not merely close — the equivalence property tests pin
+# this down.
+
+@dataclasses.dataclass
+class BatchSimResult:
+    """Per-permutation arrays for one layer: ``cycles[i]`` etc. correspond
+    to ``perms[i]`` (row i of the [P, 6] loop-id array)."""
+    layer: ConvLayer
+    perms: np.ndarray                       # int64 [P, 6]
+    cycles: np.ndarray                      # float64 [P]
+    accesses: np.ndarray                    # float64 [P]
+    misses: Dict[str, np.ndarray]           # level -> [P]
+    misses_by_array: Dict[str, Dict[str, np.ndarray]]
+    working_set_blocks: Dict[str, float]    # level -> capacity in blocks
+
+    def __len__(self) -> int:
+        return self.perms.shape[0]
+
+    def result(self, i: int) -> CacheSimResult:
+        """Scalar view of candidate ``i`` (same shape as ``simulate``)."""
+        return CacheSimResult(
+            cycles=float(self.cycles[i]),
+            accesses=float(self.accesses[i]),
+            misses={lv: float(v[i]) for lv, v in self.misses.items()},
+            misses_by_array={lv: {a: float(v[i]) for a, v in per.items()}
+                             for lv, per in self.misses_by_array.items()},
+            working_set_blocks=dict(self.working_set_blocks))
+
+    def best(self) -> Tuple[Tuple[int, ...], CacheSimResult]:
+        i = int(np.argmin(self.cycles))
+        return tuple(int(x) for x in self.perms[i]), self.result(i)
+
+
+def _depth_footprints(layer: ConvLayer, masks: np.ndarray,
+                      block_bytes: int):
+    """Per-depth footprint gathers shared by every cache level with this
+    block size: (subset tables, per-array [P, 7] footprints, their total).
+    The total is summed in ARRAY_DIMS order like the scalar model (exact
+    integers in float64 — comparisons identical)."""
+    tabs = ln.footprint_block_table(layer, block_bytes)
+    fp = {a: tabs[a][masks] for a in ln.ARRAY_DIMS}          # [P, 7] each
+    total_fp = fp["out"] + fp["wgt"] + fp["img"]
+    return tabs, fp, total_fp
+
+
+def _fetches_per_level_batch(layer: ConvLayer, parr: np.ndarray,
+                             depth_fp, capacity_blocks: float,
+                             ) -> Dict[str, np.ndarray]:
+    """Vectorized :func:`_fetches_per_level`: per-array block fetches for
+    every permutation at once (float64 [P] per array).
+
+    The scalar recursion walks depths innermost→outermost carrying one
+    running fetch count; here the carry is a [P] array and each depth is a
+    masked select between the three scalar branches (sub-nest fits /
+    resident or halo-reused / evicted-and-multiplied).  ``depth_fp`` is a
+    :func:`_depth_footprints` result, computed once per block size."""
+    tabs, fp, total_fp = depth_fp
+    trips = ln.trips_vector(layer).astype(np.float64)
+    fits = total_fp <= capacity_blocks                       # bool [P, 7]
+
+    n = parr.shape[1]
+    fetches: Dict[str, np.ndarray] = {}
+    for array in ln.ARRAY_DIMS:
+        full_fp = float(tabs[array][ln.FULL_MASK])
+        if full_fp <= capacity_blocks / 2:
+            # Hot set: survives any streaming; compulsory misses only.
+            fetches[array] = np.full(parr.shape[0], full_fp)
+            continue
+        indexes_tab = ln.ARRAY_LOOP_MASKS[array]
+        f = np.ones(parr.shape[0])
+        for d in range(n - 1, -1, -1):
+            loop_ids = parr[:, d]
+            fits_d = fits[:, d]
+            inner_fits = fits[:, d + 1]
+            indexes = indexes_tab[loop_ids]
+            # Branches of the scalar recursion, as one masked select:
+            #   fits_d                      -> one-pass distinct blocks
+            #   inner_fits & indexes        -> halo reuse: distinct blocks
+            #   inner_fits & ~indexes       -> resident: carry unchanged
+            #   ~inner_fits                 -> evicted: multiply by trips
+            f = np.where(fits_d | (inner_fits & indexes), fp[array][:, d],
+                         np.where(inner_fits, f, f * trips[loop_ids]))
+        fetches[array] = f
+    return fetches
+
+
+def simulate_batch(layer: ConvLayer, perms: Sequence[Sequence[int]],
+                   machine: MachineModel = MachineModel(),
+                   threads: int = 1,
+                   partial_sums: bool = True) -> BatchSimResult:
+    """Score every permutation in ``perms`` with one array computation.
+
+    Semantically ``[simulate(layer, p, machine, threads) for p in perms]``
+    but ~2 orders of magnitude faster for the full 720-candidate space:
+    the footprint recursion runs once over dense arrays instead of once
+    per permutation in Python.  Results are bit-identical to the scalar
+    path, so ranks, argmins and registry contents are unchanged.
+    """
+    parr = ln.perms_array(perms)
+    EVAL_COUNTS["simulate_batch"] += parr.shape[0]
+    masks = ln.perm_inner_masks(parr)
+    trips_i = ln.trips_vector(layer)
+    iters = layer.iterations
+
+    per_iter = ln.accesses_per_iteration(partial_sums)
+    out_writes = (ln.out_writes_with_partial_sums_batch(layer, parr)
+                  if partial_sums else np.zeros(parr.shape[0], np.int64))
+    accesses = sum(per_iter.values()) * iters + 2 * out_writes
+
+    misses: Dict[str, np.ndarray] = {}
+    misses_by_array: Dict[str, Dict[str, np.ndarray]] = {}
+    ws: Dict[str, float] = {}
+    depth_fp_cache: Dict[int, tuple] = {}  # levels usually share 32 B blocks
+    for level in machine.levels:
+        cap_blocks = level.size_bytes / level.block_bytes
+        if level.block_bytes not in depth_fp_cache:
+            depth_fp_cache[level.block_bytes] = _depth_footprints(
+                layer, masks, level.block_bytes)
+        per_array = _fetches_per_level_batch(
+            layer, parr, depth_fp_cache[level.block_bytes], cap_blocks)
+        if partial_sums:
+            blk_elems = level.block_bytes // layer.elem_bytes
+            per_array["out"] = np.minimum(per_array["out"],
+                                          out_writes.astype(np.float64))
+            per_array["out"] = np.maximum(
+                per_array["out"], layer.oc * layer.h * layer.w / blk_elems)
+        misses_by_array[level.name] = per_array
+        misses[level.name] = (per_array["out"] + per_array["wgt"]
+                              + per_array["img"])
+        ws[level.name] = cap_blocks
+
+    l1, l2 = machine.levels[0], machine.levels[1]
+    m1 = misses["L1"]
+    m2 = np.minimum(misses["L2"], m1)  # inclusive hierarchy sanity
+    hits_l1 = np.maximum(accesses - m1, 0.0)
+    hits_l2 = np.maximum(m1 - m2, 0.0)
+    cycles = (iters * machine.instrs_per_iter * machine.cpi_compute
+              + hits_l1 * l1.latency + hits_l2 * l2.latency
+              + m2 * machine.mem_latency)
+
+    if threads > 1:
+        outer_ids = parr[:, 0]
+        par = np.minimum(threads, trips_i[outer_ids])
+        cycles = cycles / par
+        # Threads race on out[] when the outermost loop does not index it:
+        # atomic per output update (§3.4).
+        upd = out_writes if partial_sums else np.full(parr.shape[0], iters)
+        atomic = machine.atomic_cost * upd / np.maximum(par, 1)
+        cycles = np.where(ln.OUTPUT_MASK[outer_ids], cycles,
+                          cycles + atomic)
+
+    return BatchSimResult(layer=layer, perms=parr, cycles=cycles,
+                          accesses=accesses.astype(np.float64),
+                          misses=misses, misses_by_array=misses_by_array,
+                          working_set_blocks=ws)
+
+
+# ---------------------------------------------------------------------------
 # TPU-adapted model (hardware adaptation — see DESIGN.md §2)
 # ---------------------------------------------------------------------------
 
@@ -427,3 +606,201 @@ def matmul_schedule_cost(m: int, n: int, k: int,
     return KernelCost(flops=2.0 * m * n * k, hbm_bytes=hbm, vmem_peak=vmem,
                       grid_steps=grid_steps, compute_s=compute_s,
                       memory_s=memory_s, overhead_s=overhead_s)
+
+
+# ---------------------------------------------------------------------------
+# Batch TPU scorers — whole schedule enumerations as array computation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchKernelCost:
+    """Roofline terms for a whole schedule enumeration at once.
+
+    All fields are float64 arrays of the same shape (grid-order axis first;
+    e.g. [n_orders, n_blocks] for conv, [n_orders, n_blocks, 2] for matmul
+    with the trailing axis = resident_rhs False/True).  ``flops`` is the
+    useful-work count (constant over the space), matching the scalar
+    :class:`KernelCost` convention.
+    """
+    flops: np.ndarray
+    hbm_bytes: np.ndarray
+    vmem_peak: np.ndarray
+    grid_steps: np.ndarray
+    compute_s: np.ndarray
+    memory_s: np.ndarray
+    overhead_s: np.ndarray
+
+    @property
+    def time_s(self) -> np.ndarray:
+        return np.maximum(self.compute_s, self.memory_s) + self.overhead_s
+
+    def cost(self, idx) -> KernelCost:
+        """Scalar :class:`KernelCost` for one candidate (tuple index)."""
+        return KernelCost(
+            flops=float(self.flops[idx]),
+            hbm_bytes=float(self.hbm_bytes[idx]),
+            vmem_peak=float(self.vmem_peak[idx]),
+            grid_steps=int(self.grid_steps[idx]),
+            compute_s=float(self.compute_s[idx]),
+            memory_s=float(self.memory_s[idx]),
+            overhead_s=float(self.overhead_s[idx]))
+
+
+def _batch_refetch(orders: Sequence[Sequence[str]], dep: frozenset,
+                   trips: Dict[str, np.ndarray]) -> np.ndarray:
+    """``refetch[o]`` per block candidate for each grid order: the product
+    of trips over non-dependent axes that have a dependent axis deeper in
+    the order (multiplied in outermost→innermost axis order, exactly like
+    the scalar walk)."""
+    nblk = next(iter(trips.values())).shape[0]
+    out = np.empty((len(orders), nblk))
+    for o, order in enumerate(orders):
+        refetch = np.ones(nblk)
+        for i, a in enumerate(order):
+            if a in dep:
+                continue
+            if any(b in dep for b in list(order)[i + 1:]):
+                refetch = refetch * trips[a]
+        out[o] = refetch
+    return out
+
+
+def conv_schedule_cost_batch(layer: ConvLayer,
+                             orders: Sequence[Sequence[str]],
+                             blocks: Sequence[Dict[str, int]],
+                             spec: TPUSpec = TPUSpec(),
+                             elem_bytes: int = 2) -> BatchKernelCost:
+    """Score the full ``orders`` × ``blocks`` conv-schedule grid at once.
+
+    Equivalent to ``conv_schedule_cost(layer, orders[o], blocks[b], ...)``
+    at every index [o, b], computed as dense arrays; used by
+    :func:`repro.core.tuner.tune_conv` to rank the whole enumeration with
+    one call.  Bit-identical to the scalar scorer.
+    """
+    n_o, n_b = len(orders), len(blocks)
+    for order in orders:
+        assert sorted(order) == ["ic", "oc", "x", "y"], \
+            f"bad grid order {list(order)}"
+    EVAL_COUNTS["conv_schedule_cost_batch"] += n_o * n_b
+    boc = np.array([b["oc"] for b in blocks], dtype=np.int64)
+    bic = np.array([b["ic"] for b in blocks], dtype=np.int64)
+    by = np.array([b["y"] for b in blocks], dtype=np.int64)
+    bx = np.array([b["x"] for b in blocks], dtype=np.int64)
+    trips = {"oc": -(-layer.oc // boc), "ic": -(-layer.ic // bic),
+             "y": -(-layer.h // by), "x": -(-layer.w // bx)}
+    grid_steps = trips["oc"] * trips["ic"] * trips["y"] * trips["x"]
+
+    out_blk = boc * by * bx
+    wgt_blk = boc * bic * layer.kh * layer.kw
+    img_blk = bic * (by + layer.kh - 1) * (bx + layer.kw - 1)
+    dep = {"out": frozenset({"oc", "y", "x"}),
+           "wgt": frozenset({"oc", "ic"}),
+           "img": frozenset({"ic", "y", "x"})}
+
+    def fetches(op: str) -> np.ndarray:                   # [O, B]
+        distinct = np.ones(n_b, dtype=np.int64)
+        for a in sorted(dep[op]):
+            distinct = distinct * trips[a]
+        return distinct * _batch_refetch(orders, dep[op], trips)
+
+    hbm = fetches("wgt") * wgt_blk * elem_bytes
+    hbm = hbm + fetches("img") * img_blk * elem_bytes
+    out_distinct = trips["oc"] * trips["y"] * trips["x"]
+    out_visits = fetches("out")
+    hbm = hbm + np.where(out_visits <= out_distinct,
+                         (out_distinct * out_blk * elem_bytes
+                          ).astype(np.float64),
+                         (2 * out_visits - out_distinct)
+                         * out_blk * elem_bytes)
+
+    eff_oc = _round_up(np.minimum(boc, layer.oc), spec.mxu_dim)
+    eff_ic = _round_up(np.minimum(bic, layer.ic), spec.mxu_dim)
+    spatial = np.minimum(by, layer.h) * np.minimum(bx, layer.w)
+    eff_spatial = _round_up(spatial, 8)
+    flops_pad = (2.0 * eff_oc * eff_ic * eff_spatial
+                 * layer.kh * layer.kw) * grid_steps
+
+    vmem = out_blk * 4 + wgt_blk * elem_bytes + img_blk * elem_bytes
+    compute_s = flops_pad / spec.peak_flops
+    memory_s = hbm / spec.hbm_bw
+    overhead_s = (spec.dma_latency_s * grid_steps
+                  + np.where(vmem > spec.vmem_bytes, 1e3, 0.0))
+
+    shape = (n_o, n_b)
+    bc = lambda a: np.broadcast_to(a, shape)  # noqa: E731
+    return BatchKernelCost(
+        flops=bc(np.float64(2.0 * layer.macs)), hbm_bytes=hbm,
+        vmem_peak=bc(vmem.astype(np.float64)),
+        grid_steps=bc(grid_steps),
+        compute_s=bc(compute_s), memory_s=memory_s,
+        overhead_s=bc(overhead_s))
+
+
+def matmul_schedule_cost_batch(m: int, n: int, k: int,
+                               blocks: Sequence[Tuple[int, int, int]],
+                               orders: Sequence[Sequence[str]] = None,
+                               spec: TPUSpec = TPUSpec(),
+                               elem_bytes: int = 2) -> BatchKernelCost:
+    """Score matmul schedules for every (order, block, resident_rhs) at
+    once: result arrays are [n_orders, n_blocks, 2], trailing axis indexed
+    by ``resident_rhs`` False/True.  Bit-identical to the scalar scorer.
+    """
+    if orders is None:
+        import itertools
+        orders = list(itertools.permutations(("m", "n", "k")))
+    for order in orders:
+        assert sorted(order) == ["k", "m", "n"], \
+            f"bad grid order {list(order)}"
+    n_o, n_b = len(orders), len(blocks)
+    EVAL_COUNTS["matmul_schedule_cost_batch"] += n_o * n_b * 2
+    bm = np.array([b[0] for b in blocks], dtype=np.int64)
+    bn = np.array([b[1] for b in blocks], dtype=np.int64)
+    bk = np.array([b[2] for b in blocks], dtype=np.int64)
+    trips = {"m": -(-m // bm), "n": -(-n // bn), "k": -(-k // bk)}
+    grid_steps = trips["m"] * trips["n"] * trips["k"]
+    dep = {"A": frozenset({"m", "k"}), "B": frozenset({"k", "n"}),
+           "C": frozenset({"m", "n"})}
+    blk = {"A": bm * bk, "B": bk * bn, "C": bm * bn}
+
+    def fetches(op: str) -> np.ndarray:                   # [O, B]
+        distinct = np.ones(n_b, dtype=np.int64)
+        for a in sorted(dep[op]):
+            distinct = distinct * trips[a]
+        return distinct * _batch_refetch(orders, dep[op], trips)
+
+    hbm_a = fetches("A") * blk["A"] * elem_bytes          # [O, B]
+    c_distinct = trips["m"] * trips["n"]
+    c_visits = fetches("C")
+    hbm_c = np.where(c_visits <= c_distinct,
+                     (c_distinct * blk["C"] * elem_bytes
+                      ).astype(np.float64),
+                     (2 * c_visits - c_distinct) * blk["C"] * elem_bytes)
+    # resident_rhs False / True along the trailing axis.
+    hbm = np.stack([hbm_a + fetches("B") * blk["B"] * elem_bytes + hbm_c,
+                    hbm_a + np.float64(n * k * elem_bytes) + hbm_c],
+                   axis=-1)
+    vmem_b = np.stack([np.broadcast_to(blk["B"] * elem_bytes, (n_b,)),
+                       np.full(n_b, n * k * elem_bytes, dtype=np.int64)],
+                      axis=-1)                             # [B, 2]
+    vmem = (blk["A"] * elem_bytes)[:, None] + vmem_b + (blk["C"] * 4)[:, None]
+
+    eff_m = _round_up(np.minimum(bm, m), 8)
+    eff_n = _round_up(np.minimum(bn, n), spec.mxu_dim)
+    eff_k = _round_up(np.minimum(bk, k), spec.mxu_dim)
+    flops_pad = 2.0 * eff_m * eff_n * eff_k * grid_steps   # [B]
+
+    compute_s = flops_pad / spec.peak_flops
+    memory_s = hbm / spec.hbm_bw
+    overhead_s = (spec.dma_latency_s * grid_steps)[:, None] \
+        + np.where(vmem > spec.vmem_bytes, 1e3, 0.0)       # [B, 2]
+
+    shape = (n_o, n_b, 2)
+    bc = lambda a: np.broadcast_to(a, shape)  # noqa: E731
+    return BatchKernelCost(
+        flops=bc(np.float64(2.0 * m * n * k)), hbm_bytes=hbm,
+        vmem_peak=bc(vmem.astype(np.float64)),
+        grid_steps=bc(grid_steps[:, None]),
+        compute_s=bc(compute_s[:, None]), memory_s=memory_s,
+        overhead_s=bc(overhead_s))
+
+

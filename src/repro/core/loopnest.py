@@ -22,8 +22,11 @@ microseconds and the 720-permutation sweeps of Ch. 4/5 are cheap.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
 
 # Canonical loop order (permutation identity): matches thesis Fig 3.1.
 LOOPS: Tuple[str, ...] = ("oc", "ic", "y", "x", "ky", "kx")
@@ -169,6 +172,86 @@ def accesses_per_iteration(partial_sums: bool) -> Dict[str, float]:
     if partial_sums:
         return {"img": 1.0, "wgt": 1.0, "out": 0.0}
     return {"img": 1.0, "wgt": 1.0, "out": 2.0}
+
+
+# ---------------------------------------------------------------------------
+# Precomputed tables for the vectorized batch sweep engine
+# ---------------------------------------------------------------------------
+#
+# A footprint only depends on the *set* of inner loops, never their order,
+# so the whole recursive model collapses onto 2^6 = 64 subset values per
+# array.  The batch engine (cost_model.simulate_batch) gathers from these
+# tables with integer masks and replaces the per-permutation Python
+# recursion with six rounds of array ops over the full candidate space.
+
+SUBSET_COUNT = 1 << len(LOOPS)
+FULL_MASK = SUBSET_COUNT - 1
+
+
+def subset_loops(mask: int) -> frozenset:
+    """The loop-name set encoded by a 6-bit mask (bit i = LOOPS[i])."""
+    return frozenset(LOOPS[i] for i in range(len(LOOPS)) if mask >> i & 1)
+
+
+@functools.lru_cache(maxsize=512)
+def footprint_block_table(layer: ConvLayer, block_bytes: int,
+                          ) -> Dict[str, np.ndarray]:
+    """``tab[array][mask]`` = :func:`footprint_blocks` over every one of the
+    64 inner-loop subsets (float64; the values are exact integers)."""
+    return {
+        array: np.array([
+            footprint_blocks(layer, array, subset_loops(m), block_bytes)
+            for m in range(SUBSET_COUNT)], dtype=np.float64)
+        for array in ARRAY_DIMS
+    }
+
+
+def perms_array(perms: Sequence[Sequence[int]]) -> np.ndarray:
+    """Candidate permutations as an int64 [P, 6] array."""
+    arr = np.asarray(perms, dtype=np.int64)
+    if arr.ndim != 2 or arr.shape[1] != len(LOOPS):
+        raise ValueError(f"expected [P, {len(LOOPS)}] perms, "
+                         f"got shape {arr.shape}")
+    return arr
+
+
+def perm_inner_masks(parr: np.ndarray) -> np.ndarray:
+    """``masks[p, d]`` = bitmask of the loops at positions d..5 of perm p
+    (so column 0 is FULL_MASK and column 6 is 0) — the vectorized analogue
+    of :func:`inner_set` for every depth at once."""
+    n = parr.shape[1]
+    masks = np.zeros((parr.shape[0], n + 1), dtype=np.int64)
+    for d in range(n - 1, -1, -1):
+        masks[:, d] = masks[:, d + 1] | np.left_shift(1, parr[:, d])
+    return masks
+
+
+def trips_vector(layer: ConvLayer) -> np.ndarray:
+    """Trip counts indexed by loop id (int64 [6])."""
+    trips = layer.trips()
+    return np.array([trips[name] for name in LOOPS], dtype=np.int64)
+
+
+# Bool [6] masks by loop id, for vectorized membership tests.
+REDUCTION_MASK = np.array([name in REDUCTION_LOOPS for name in LOOPS])
+OUTPUT_MASK = np.array([name in OUTPUT_LOOPS for name in LOOPS])
+ARRAY_LOOP_MASKS: Dict[str, np.ndarray] = {
+    array: np.array([name in ARRAY_LOOPS[array] for name in LOOPS])
+    for array in ARRAY_DIMS
+}
+
+
+def out_writes_with_partial_sums_batch(layer: ConvLayer,
+                                       parr: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`out_writes_with_partial_sums`: int64 [P]."""
+    trips = trips_vector(layer)
+    run = np.ones(parr.shape[0], dtype=np.int64)
+    alive = np.ones(parr.shape[0], dtype=bool)
+    for pos in range(parr.shape[1] - 1, -1, -1):
+        ids = parr[:, pos]
+        alive &= REDUCTION_MASK[ids]
+        run = np.where(alive, run * trips[ids], run)
+    return layer.iterations // run
 
 
 def out_writes_with_partial_sums(layer: ConvLayer,

@@ -28,6 +28,7 @@ bytes as the serial sweep.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import json
 import os
@@ -51,12 +52,29 @@ def canonical_json(obj: Any) -> str:
     return json.dumps(obj, sort_keys=True, separators=(",", ":"))
 
 
+@functools.lru_cache(maxsize=1024)
+def _fingerprint_dataclass(obj: Any) -> str:
+    # Machine descriptors (MachineModel, TPUSpec) are frozen dataclasses,
+    # so their digest is memoizable per-process: every cached_* call needs
+    # the machine fingerprint, and without this cache it re-serialised and
+    # re-hashed the same object on every lookup.
+    payload = {"__class__": type(obj).__name__,
+               **dataclasses.asdict(obj)}
+    digest = hashlib.sha256(canonical_json(payload).encode("utf-8"))
+    return digest.hexdigest()[:12]
+
+
 def fingerprint(obj: Any) -> str:
     """Stable 12-hex digest of a dataclass / dict / tuple describing the
-    machine (``MachineModel``, ``TPUSpec``, ...)."""
+    machine (``MachineModel``, ``TPUSpec``, ...).  Hashable (frozen)
+    dataclasses are memoized per-process."""
     if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
-        payload = {"__class__": type(obj).__name__,
-                   **dataclasses.asdict(obj)}
+        try:
+            return _fingerprint_dataclass(obj)
+        except TypeError:
+            # unhashable (mutable) dataclass: compute without the cache
+            payload = {"__class__": type(obj).__name__,
+                       **dataclasses.asdict(obj)}
     else:
         payload = obj
     digest = hashlib.sha256(canonical_json(payload).encode("utf-8"))

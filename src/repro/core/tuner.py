@@ -11,6 +11,12 @@ enabled by the Hamiltonian index).
 The TPU half tunes actual kernel schedules: grid order × block shapes ×
 resident-weights, ranked by the TPU cost model; the adaptive runtime
 (core/adaptive.py) then micro-profiles the top few.
+
+Everything here consumes the *batch* cost-model entry points
+(``simulate_batch`` / ``conv_schedule_cost_batch`` /
+``matmul_schedule_cost_batch``): one call scores an entire candidate
+space as arrays, bit-identical to the scalar model.  The process pool
+survives only behind :func:`exact_sweep`, the trace-driven validator.
 """
 from __future__ import annotations
 
@@ -65,16 +71,27 @@ class SweepResult:
 def sweep_layer(layer: ConvLayer,
                 machine: cm.MachineModel = cm.MachineModel(),
                 threads: int = 1) -> SweepResult:
-    cycles = np.empty(len(ALL_PERMS))
-    l1 = np.empty(len(ALL_PERMS))
-    l2 = np.empty(len(ALL_PERMS))
-    for i, p in enumerate(ALL_PERMS):
-        r = cm.simulate(layer, p, machine, threads)
-        cycles[i] = r.cycles
-        l1[i] = r.misses["L1"]
-        l2[i] = r.misses["L2"]
-    return SweepResult(layer=layer, cycles=cycles, l1_misses=l1,
-                       l2_misses=l2)
+    """All-720 signature through the vectorized batch engine: one
+    :func:`repro.core.cost_model.simulate_batch` call scores the whole
+    permutation space (bit-identical to per-perm ``simulate`` calls)."""
+    batch = cm.simulate_batch(layer, ALL_PERMS, machine, threads)
+    l1 = machine.levels[0].name
+    l2 = machine.levels[1].name
+    return SweepResult(layer=layer, cycles=batch.cycles,
+                       l1_misses=batch.misses[l1],
+                       l2_misses=batch.misses[l2])
+
+
+def batch_perm_scorer(layer: ConvLayer,
+                      machine: cm.MachineModel = cm.MachineModel(),
+                      threads: int = 1,
+                      ) -> Callable[[Sequence[Perm]], np.ndarray]:
+    """A many-perms-at-once cycles scorer for the permutohedron searches:
+    ``scorer(perms) -> float64 [len(perms)]``."""
+    def score_batch(candidates: Sequence[Perm]) -> np.ndarray:
+        return cm.simulate_batch(layer, list(candidates), machine,
+                                 threads).cycles
+    return score_batch
 
 
 def speedup_matrix(sweeps: Sequence[SweepResult],
@@ -184,48 +201,68 @@ def good_permutation_counts(sweeps: Sequence[SweepResult],
 # Locality-aware search on the permutohedron (thesis §7.2 future work)
 # ---------------------------------------------------------------------------
 
-def neighbor_swap_search(score: Callable[[Perm], float],
+def _score_perms(score: Optional[Callable[[Perm], float]],
+                 score_batch: Optional[Callable[[Sequence[Perm]],
+                                                np.ndarray]],
+                 candidates: Sequence[Perm]) -> List[float]:
+    if not candidates:
+        return []
+    if score_batch is not None:
+        return [float(v) for v in score_batch(list(candidates))]
+    return [score(p) for p in candidates]
+
+
+def neighbor_swap_search(score: Optional[Callable[[Perm], float]],
                          start: Perm,
-                         max_steps: int = 100) -> Tuple[Perm, float, int]:
+                         max_steps: int = 100,
+                         score_batch: Optional[
+                             Callable[[Sequence[Perm]], np.ndarray]] = None,
+                         ) -> Tuple[Perm, float, int]:
     """Greedy descent over adjacent-transposition neighbours.  ``score`` is
-    minimised (e.g. predicted cycles).  Returns (perm, score, evals)."""
+    minimised (e.g. predicted cycles).  Returns (perm, score, evals).
+
+    With ``score_batch`` (e.g. :func:`batch_perm_scorer`) each descent
+    step scores its whole neighbourhood in one vectorized call; ``score``
+    may then be None."""
     cur = tuple(start)
-    cur_score = score(cur)
+    cur_score = _score_perms(score, score_batch, [cur])[0]
     evals = 1
     for _ in range(max_steps):
         nbrs = perms.permutohedron_neighbors(cur)
-        scored = [(score(p), p) for p in nbrs]
+        vals = _score_perms(score, score_batch, nbrs)
         evals += len(nbrs)
-        best_s, best_p = min(scored, key=lambda t: t[0])
-        if best_s >= cur_score:
+        best_i = min(range(len(nbrs)), key=vals.__getitem__)
+        if vals[best_i] >= cur_score:
             return cur, cur_score, evals
-        cur, cur_score = best_p, best_s
+        cur, cur_score = nbrs[best_i], vals[best_i]
     return cur, cur_score, evals
 
 
-def bfs_search(score: Callable[[Perm], float], start: Perm,
-               budget: int = 60) -> Tuple[Perm, float, int]:
+def bfs_search(score: Optional[Callable[[Perm], float]], start: Perm,
+               budget: int = 60,
+               score_batch: Optional[
+                   Callable[[Sequence[Perm]], np.ndarray]] = None,
+               ) -> Tuple[Perm, float, int]:
     """Best-first search on the permutohedron with an evaluation budget
-    (the thesis' suggested BFS variant)."""
+    (the thesis' suggested BFS variant).  ``score_batch`` scores each
+    expansion's unseen neighbours in one call."""
     import heapq
-    seen = {tuple(start)}
-    s0 = score(tuple(start))
-    heap = [(s0, tuple(start))]
-    best = (s0, tuple(start))
+    start = tuple(start)
+    seen = {start}
+    s0 = _score_perms(score, score_batch, [start])[0]
+    heap = [(s0, start)]
+    best = (s0, start)
     evals = 1
     while heap and evals < budget:
         s, p = heapq.heappop(heap)
-        for q in perms.permutohedron_neighbors(p):
-            if q in seen:
-                continue
-            seen.add(q)
-            sq = score(q)
+        fresh = [q for q in perms.permutohedron_neighbors(p)
+                 if q not in seen][:max(budget - evals, 0)]
+        seen.update(fresh)
+        for q, sq in zip(fresh, _score_perms(score, score_batch, fresh)):
             evals += 1
             if sq < best[0]:
                 best = (sq, q)
             heapq.heappush(heap, (sq, q))
-            if evals >= budget:
-                break
     return best[1], best[0], evals
 
 
@@ -247,21 +284,27 @@ def _block_candidates(dim: int, targets: Sequence[int]) -> List[int]:
 def tune_conv(layer: ConvLayer, spec: cm.TPUSpec = cm.TPUSpec(),
               elem_bytes: int = 2, top_k: int = 5,
               ) -> List[Tuple[ConvSchedule, cm.KernelCost]]:
-    """Rank (grid order x block shape) conv schedules by the TPU model."""
+    """Rank (grid order x block shape) conv schedules by the TPU model.
+
+    The whole enumeration is scored as one
+    :func:`repro.core.cost_model.conv_schedule_cost_batch` array
+    computation; a stable argsort over the same enumeration order keeps
+    the ranking identical to the old per-candidate loop."""
     oc_c = _block_candidates(layer.oc, (32, 128, 256))
     ic_c = _block_candidates(layer.ic, (32, 128, 256))
     y_c = _block_candidates(layer.h, (4, 8, layer.h))
     x_c = _block_candidates(layer.w, (8, 16, layer.w))
-    ranked: List[Tuple[float, ConvSchedule, cm.KernelCost]] = []
-    for order in itertools.permutations(("oc", "ic", "y", "x")):
-        for boc, bic, by, bx in itertools.product(oc_c, ic_c, y_c, x_c):
-            block = {"oc": boc, "ic": bic, "y": by, "x": bx}
-            cost = cm.conv_schedule_cost(layer, order, block, spec,
-                                         elem_bytes)
-            ranked.append((cost.time_s, ConvSchedule.make(order, block),
-                           cost))
-    ranked.sort(key=lambda t: t[0])
-    return [(s, c) for _, s, c in ranked[:top_k]]
+    orders = list(itertools.permutations(("oc", "ic", "y", "x")))
+    blocks = [{"oc": boc, "ic": bic, "y": by, "x": bx}
+              for boc, bic, by, bx
+              in itertools.product(oc_c, ic_c, y_c, x_c)]
+    batch = cm.conv_schedule_cost_batch(layer, orders, blocks, spec,
+                                        elem_bytes)
+    flat = batch.time_s.reshape(-1)
+    top = np.argsort(flat, kind="stable")[:top_k]
+    n_b = len(blocks)
+    return [(ConvSchedule.make(orders[i // n_b], blocks[i % n_b]),
+             batch.cost((i // n_b, i % n_b))) for i in map(int, top)]
 
 
 def tune_matmul(m: int, n: int, k: int,
@@ -269,30 +312,26 @@ def tune_matmul(m: int, n: int, k: int,
                 top_k: int = 5,
                 ) -> List[Tuple[MatmulSchedule, cm.KernelCost]]:
     """Rank matmul schedules: 6 loop orders x blocks x resident-RHS (the
-    kernel-level tiles-for-L2 trade, thesis §6.3)."""
+    kernel-level tiles-for-L2 trade, thesis §6.3), scored by one
+    :func:`repro.core.cost_model.matmul_schedule_cost_batch` call."""
     m_c = _block_candidates(m, (128, 256, 512))
     n_c = _block_candidates(n, (128, 256, 512))
     k_c = _block_candidates(k, (128, 512, k))
-    ranked: List[Tuple[float, MatmulSchedule, cm.KernelCost]] = []
-    for order in itertools.permutations(("m", "n", "k")):
-        for bm, bn, bk in itertools.product(m_c, n_c, k_c):
-            for resident in (False, True):
-                cost = cm.matmul_schedule_cost(
-                    m, n, k, bm, bn, bk, order, spec, elem_bytes,
-                    resident_rhs=resident)
-                sched = MatmulSchedule.make(
-                    order, {"m": bm, "n": bn, "k": bk}, resident)
-                ranked.append((cost.time_s, sched, cost))
-    ranked.sort(key=lambda t: t[0])
+    orders = list(itertools.permutations(("m", "n", "k")))
+    blocks = list(itertools.product(m_c, n_c, k_c))
+    batch = cm.matmul_schedule_cost_batch(m, n, k, blocks, orders, spec,
+                                          elem_bytes)
+    flat = batch.time_s.reshape(-1)       # [(order, block, resident)]
+    top = np.argsort(flat, kind="stable")[:top_k]
+    n_b = len(blocks)
     out: List[Tuple[MatmulSchedule, cm.KernelCost]] = []
-    seen = set()
-    for _, s, c in ranked:
-        if s in seen:
-            continue
-        seen.add(s)
-        out.append((s, c))
-        if len(out) >= top_k:
-            break
+    for i in map(int, top):
+        o, rem = divmod(i, n_b * 2)
+        b, resident = divmod(rem, 2)
+        bm, bn, bk = blocks[b]
+        sched = MatmulSchedule.make(orders[o], {"m": bm, "n": bn, "k": bk},
+                                    bool(resident))
+        out.append((sched, batch.cost((o, b, resident))))
     return out
 
 
@@ -394,37 +433,26 @@ def cached_sweep_layer(layer: ConvLayer,
 
 
 # ---------------------------------------------------------------------------
-# Parallel sweeps with deterministic merge
+# Multi-layer sweeps + the exact-validator pool
 # ---------------------------------------------------------------------------
 #
-# The worker payloads are module-level functions over picklable dataclasses
-# so a ProcessPoolExecutor can run them; results come back via
-# ``executor.map`` in *input* order, and registry records are written in
-# that order and then compacted — so the registry file is byte-identical
-# whatever the worker count or completion order.
-
-def _sweep_worker(args) -> Dict:
-    layer, machine, threads = args
-    s = sweep_layer(layer, machine, threads)
-    return {"cycles": s.cycles.tolist(), "l1_misses": s.l1_misses.tolist(),
-            "l2_misses": s.l2_misses.tolist()}
-
-
-def _conv_tune_worker(args) -> Dict:
-    layer, spec, elem_bytes, top_k = args
-    return _ranked_to_value(tune_conv(layer, spec, elem_bytes,
-                                      top_k=top_k))
-
+# Since the batch engine, a full 720-permutation sweep is a sub-millisecond
+# array computation, so multi-layer warms run in-process: no pickling, no
+# worker startup, and determinism for free (the old guarantee — parallel
+# warm byte-identical to serial — now holds trivially).  The
+# forkserver/spawn process pool survives only as ``exact_sweep``'s engine:
+# the trace-driven validator (core/tracesim) really does cost seconds per
+# permutation and still wants the fan-out.
 
 def _map_parallel(fn, jobs: Sequence, workers: Optional[int]) -> List:
     """Map ``fn`` over ``jobs`` preserving order.  ``workers`` None/0/1 =>
-    serial; otherwise a process pool (the cost model is pure Python, so
-    threads gain nothing under the GIL), degrading gracefully to threads
-    then serial where the platform forbids subprocesses.
+    serial; otherwise a process pool (tracesim is pure Python, so threads
+    gain nothing under the GIL), degrading gracefully to threads then
+    serial where the platform forbids subprocesses.
 
     Uses a forkserver/spawn start method, never plain fork: the parent
-    has usually initialised JAX by the time a sweep runs, and forking a
-    multithreaded JAX process can deadlock."""
+    has usually initialised JAX by the time a validation runs, and forking
+    a multithreaded JAX process can deadlock."""
     if not workers or workers <= 1 or len(jobs) <= 1:
         return [fn(j) for j in jobs]
     import multiprocessing as mp
@@ -444,18 +472,36 @@ def _map_parallel(fn, jobs: Sequence, workers: Optional[int]) -> List:
             return [fn(j) for j in jobs]
 
 
+def _exact_sweep_worker(args) -> float:
+    layer, perm, machine = args
+    from repro.core import tracesim
+    return float(tracesim.simulate_trace(layer, perm, machine).cycles)
+
+
+def exact_sweep(layer: ConvLayer,
+                sample: Sequence[Perm],
+                machine: cm.MachineModel = cm.MachineModel(),
+                workers: Optional[int] = None) -> np.ndarray:
+    """Exact trace-driven cycles for a permutation sample — the validator
+    for the analytic batch engine, and the one remaining consumer of the
+    worker pool (a trace costs seconds; the analytic batch costs
+    microseconds)."""
+    jobs = [(layer, tuple(p), machine) for p in sample]
+    return np.asarray(_map_parallel(_exact_sweep_worker, jobs, workers))
+
+
 def parallel_sweep(layers: Sequence[ConvLayer],
                    machine: cm.MachineModel = cm.MachineModel(),
                    threads: int = 1,
                    workers: Optional[int] = None) -> List[SweepResult]:
-    """Sweep many layers across a worker pool; result order == input
-    order, values bit-identical to the serial sweep."""
-    raw = _map_parallel(_sweep_worker,
-                        [(l, machine, threads) for l in layers], workers)
-    return [SweepResult(layer=l, cycles=np.asarray(v["cycles"]),
-                        l1_misses=np.asarray(v["l1_misses"]),
-                        l2_misses=np.asarray(v["l2_misses"]))
-            for l, v in zip(layers, raw)]
+    """Sweep many layers; result order == input order, values
+    bit-identical to per-layer :func:`sweep_layer` calls.
+
+    ``workers`` is accepted for API compatibility but ignored: the batch
+    engine made in-process sweeping faster than any pool could ship the
+    work."""
+    del workers
+    return [sweep_layer(l, machine, threads) for l in layers]
 
 
 def warm_registry(layers: Sequence[ConvLayer],
@@ -468,34 +514,37 @@ def warm_registry(layers: Sequence[ConvLayer],
                   refresh: bool = False) -> Dict[str, int]:
     """Tune every layer (sweeps and/or TPU schedules) into ``registry``.
 
-    Only missing keys are computed (unless ``refresh``); computation fans
-    out over ``workers`` processes; the merge is deterministic: records
-    land in input order and the file is compacted (sorted by key), so a
-    parallel warm is byte-identical to a serial one.
+    Only missing keys are computed (unless ``refresh``); each layer is one
+    batch-engine array computation, run in-process (``workers`` is
+    accepted for API compatibility but ignored).  The merge stays
+    deterministic: records land in input order and the file is compacted
+    (sorted by key), so warm output is byte-identical run to run.
     """
+    del workers  # batch engine: in-process beats any pool (see above)
     done = {"conv_sweep": 0, "conv_schedule": 0, "skipped": 0}
     if "conv_sweep" in kinds:
         keys = [reg.conv_sweep_key(l, machine, threads) for l in layers]
         todo = [(l, k) for l, k in zip(layers, keys)
                 if refresh or k not in registry]
         done["skipped"] += len(layers) - len(todo)
-        raw = _map_parallel(_sweep_worker,
-                            [(l, machine, threads) for l, _ in todo],
-                            workers)
-        for (_, k), v in zip(todo, raw):
-            registry.put(reg.TuningRecord(key=k, value=v,
-                                          source="offline"))
+        for layer, k in todo:
+            s = sweep_layer(layer, machine, threads)
+            registry.put(reg.TuningRecord(
+                key=k,
+                value={"cycles": s.cycles.tolist(),
+                       "l1_misses": s.l1_misses.tolist(),
+                       "l2_misses": s.l2_misses.tolist()},
+                source="offline"))
             done["conv_sweep"] += 1
     if "conv_schedule" in kinds:
         keys = [reg.conv_schedule_key(l, spec, elem_bytes) for l in layers]
         todo = [(l, k) for l, k in zip(layers, keys)
                 if refresh or k not in registry]
         done["skipped"] += len(layers) - len(todo)
-        raw = _map_parallel(_conv_tune_worker,
-                            [(l, spec, elem_bytes, top_k)
-                             for l, _ in todo], workers)
-        for (_, k), v in zip(todo, raw):
-            registry.put(reg.TuningRecord(key=k, value=v,
+        for layer, k in todo:
+            value = _ranked_to_value(tune_conv(layer, spec, elem_bytes,
+                                               top_k=top_k))
+            registry.put(reg.TuningRecord(key=k, value=value,
                                           source="offline"))
             done["conv_schedule"] += 1
     registry.compact()

@@ -41,17 +41,24 @@ def _fmt_problem(p: dict) -> str:
 
 
 def cmd_warm(args) -> int:
+    import time
     registry = _registry(args)
     layers = _load_layers(args.config)
     kinds = tuple(k.strip() for k in args.kinds.split(",") if k.strip())
+    evals_before = cm.total_evals()
+    t0 = time.perf_counter()
     done = tuner.warm_registry(
         layers, registry, threads=args.threads, top_k=args.top_k,
         elem_bytes=args.elem_bytes, kinds=kinds, workers=args.workers,
         refresh=args.refresh)
+    dt = time.perf_counter() - t0
+    evals = cm.total_evals() - evals_before
     print(f"warmed {args.config}: "
           + ", ".join(f"{k}={v}" for k, v in done.items())
           + f"; registry now has {len(registry)} records"
           + (f" at {registry.path}" if registry.path else " (in memory)"))
+    print(f"batch engine: {evals} cost-model evals in {dt:.3f}s "
+          f"({evals / max(dt, 1e-9):,.0f} evals/s)")
     return 0
 
 
@@ -123,7 +130,9 @@ def build_parser() -> argparse.ArgumentParser:
     w.add_argument("--kinds", default="conv_sweep,conv_schedule",
                    help="comma list of conv_sweep,conv_schedule")
     w.add_argument("--workers", type=int, default=None,
-                   help="parallel sweep worker processes (default serial)")
+                   help="accepted for compatibility; warming runs through "
+                        "the in-process batch engine (the pool remains "
+                        "only behind the exact tracesim validator)")
     w.add_argument("--threads", type=int, default=1,
                    help="modelled thread count for the cache sweeps")
     w.add_argument("--top-k", type=int, default=5)

@@ -85,7 +85,12 @@ def test_warm_hit_zero_evaluations_and_identical_schedule(tmp_path):
     assert [c.time_s for _, c in warm] == [c.time_s for _, c in cold]
 
 
-def test_warm_hit_speedup_at_least_100x(tmp_path):
+def test_warm_hit_speedup_at_least_10x(tmp_path):
+    # The ratio was >= 100x when the cold path was a per-candidate Python
+    # loop; the batch engine collapsed cold tuning to ~1.5 ms, so the warm
+    # hit's margin is structurally smaller now.  The load-bearing warm
+    # guarantee is zero evaluations (asserted above); this keeps a sanity
+    # margin on wall time.
     r = make_registry(tmp_path)
     t0 = time.perf_counter()
     tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
@@ -96,7 +101,7 @@ def test_warm_hit_speedup_at_least_100x(tmp_path):
         tuner.cached_tune_conv(LAYER, registry=r, top_k=1)
         warm_times.append(time.perf_counter() - t0)
     t_warm = statistics.median(warm_times)
-    assert t_cold / t_warm >= 100, (t_cold, t_warm)
+    assert t_cold / t_warm >= 10, (t_cold, t_warm)
 
 
 def test_warm_hit_survives_process_restart_simulation(tmp_path):
@@ -206,6 +211,41 @@ def test_adaptive_commit_writes_back(tmp_path):
     assert rec is not None and rec.measured is not None
     assert reg.schedule_from_dict(rec.measured["best"]) == fast
     assert rec.measured["time_s"] == pytest.approx(0.01)
+
+
+def test_adaptive_register_conv_from_batch_tuner(tmp_path):
+    # register_conv pulls top-K candidates from the (batch-powered)
+    # cached tuner, wires the registry key, and a commit writes the
+    # measured winner back under that key.
+    r = make_registry(tmp_path)
+    sel = AdaptiveSelector(probes_per_candidate=1, registry=r)
+    sel.register_conv("conv", LAYER, top_k=2)
+    slot = sel._slots["conv"]
+    assert len(slot.candidates) == 2
+    assert slot.registry_key == reg.conv_schedule_key(LAYER, cm.TPUSpec())
+    assert [type(c).__name__ for c in slot.candidates] == \
+        ["ConvSchedule", "ConvSchedule"]
+    # candidates match the cached tuner's ranking for the same problem
+    ranked = tuner.cached_tune_conv(LAYER, registry=r, top_k=2)
+    assert slot.candidates == [s for s, _ in ranked]
+    for dt in (0.02, 0.01, 0.02, 0.01):
+        if sel.committed("conv"):
+            break
+        sel.propose("conv")
+        sel.observe("conv", dt)
+    rec = r.get(slot.registry_key)
+    assert rec is not None and rec.measured is not None
+
+
+def test_adaptive_register_matmul_without_registry():
+    sel = AdaptiveSelector()
+    sel.register_matmul("mm", 256, 128, 64, top_k=3)
+    slot = sel._slots["mm"]
+    assert len(slot.candidates) == 3
+    assert slot.registry_key == reg.matmul_schedule_key(
+        256, 128, 64, cm.TPUSpec())
+    assert slot.candidates == [s for s, _ in
+                               tuner.tune_matmul(256, 128, 64, top_k=3)]
 
 
 def test_adaptive_only_record_retunes_and_keeps_measurement(tmp_path):
