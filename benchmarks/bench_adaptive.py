@@ -1,19 +1,28 @@
 """Thesis Fig 6.5 — steadiness of the run-time metric and micro-profiling
 correctness: per-step times of two real conv schedules (interpret mode)
 must be steady enough (low CV) that a short profile picks the true winner,
-which is the property that makes adaptive selection sound."""
+which is the property that makes adaptive selection sound.
+
+Plus the dispatch-runtime headline (ISSUE 3): a
+:class:`~repro.runtime.dispatch.DispatchService` fed synthetic per-step
+times that follow the cost model must converge — commit the offline
+batch-sweep argmin — within a bounded number of observations per shape,
+with the committed schedule within 5% of offline best.  The convergence
+step count and the steady-state gap land in ``BENCH_adaptive.json``
+(written by ``benchmarks/run.py``) and CI gates on the 5%.
+"""
 from __future__ import annotations
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, is_quick
+from benchmarks.common import emit, is_quick, record_metric
 from repro.core.adaptive import AdaptiveSelector, microprofile, steadiness
 from repro.core.schedule import ConvSchedule
 
 
-def run() -> None:
+def _microprofile_steadiness() -> None:
     rng = np.random.default_rng(0)
     img = jnp.asarray(rng.normal(size=(1, 16, 18, 18)).astype(np.float32))
     wgt = jnp.asarray(rng.normal(size=(32, 16, 3, 3)).astype(np.float32))
@@ -49,6 +58,57 @@ def run() -> None:
         steps += 1
     emit("adaptive.online.committed", 0.0,
          f"steps={steps};correct={sel.committed('conv') == good}")
+
+
+def _dispatch_convergence() -> None:
+    """Synthetic serve run through the DispatchService: per-step times
+    follow the cost model (+2% noise), so the selector must commit the
+    offline batch-sweep argmin for every probed shape."""
+    from repro.core import registry as reg
+    from repro.runtime.dispatch import DispatchService
+
+    registry = reg.TuningRegistry(None)
+    svc = DispatchService(registry,
+                          probes_per_candidate=2 if is_quick() else 3,
+                          top_k=3)
+    shapes = [
+        ("conv2d", {"oc": 64, "ic": 32, "h": 16, "w": 16,
+                    "kh": 3, "kw": 3}),
+        ("matmul", {"m": 512, "n": 256, "k": 128}),
+        ("decode_attention", {"b": 4, "hq": 8, "hkv": 4, "s": 2048,
+                              "d": 128}),
+    ]
+    rng = np.random.default_rng(0)
+    worst_steps, worst_gap = 0, 0.0
+    for kind, problem in shapes:
+        candidates = svc.candidates(kind, problem)
+        predicted = svc.predicted(kind, problem)
+        steps = 0
+        while svc.committed(kind, problem) is None and steps < 40:
+            sched = svc.propose(kind, problem)
+            t = predicted[candidates.index(sched)] \
+                * (1.0 + 0.02 * rng.standard_normal())
+            svc.observe(kind, problem, t)
+            steps += 1
+        committed = svc.committed(kind, problem)
+        gap = (predicted[candidates.index(committed)] / min(predicted)
+               - 1.0) if committed is not None else float("inf")
+        worst_steps = max(worst_steps, steps)
+        worst_gap = max(worst_gap, gap)
+        emit(f"adaptive.dispatch.{kind}", 0.0,
+             f"steps={steps};gap={gap:.4f};argmin={gap == 0.0}")
+    record_metric("adaptive.convergence_steps", worst_steps)
+    record_metric("adaptive.committed_vs_best_gap", worst_gap)
+    emit("adaptive.dispatch.convergence_steps", float(worst_steps))
+    emit("adaptive.dispatch.committed_vs_best_gap", worst_gap * 100.0,
+         "percent vs offline best")
+    assert worst_gap <= 0.05, (
+        f"dispatch committed a schedule {worst_gap:.1%} off offline best")
+
+
+def run() -> None:
+    _microprofile_steadiness()
+    _dispatch_convergence()
 
 
 if __name__ == "__main__":

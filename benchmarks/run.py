@@ -51,6 +51,10 @@ def main(argv=None) -> int:
     ap.add_argument("--bench-json", default="BENCH_sweep.json",
                     help="where to write the machine-readable metric "
                          "summary ('' disables)")
+    ap.add_argument("--adaptive-json", default="BENCH_adaptive.json",
+                    help="where to write the adaptive-dispatch metrics "
+                         "(convergence steps, committed-vs-best gap; "
+                         "'' disables)")
     args = ap.parse_args(argv)
     unknown = [b for b in args.benches if b not in MODULES]
     if unknown:
@@ -76,14 +80,26 @@ def main(argv=None) -> int:
             failures.append(name)
             print(f"# {name} FAILED", flush=True)
             traceback.print_exc()
+    from benchmarks.common import metrics
     if args.bench_json:
-        from benchmarks.common import metrics
         payload = {"quick": bool(args.quick), "benches": which,
                    "failures": failures, "metrics": metrics()}
         with open(args.bench_json, "w", encoding="utf-8") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# metrics written to {args.bench_json}", flush=True)
+    # The adaptive-dispatch headline (convergence steps, committed-vs-
+    # offline-best gap) also lands in its own artifact so CI can gate the
+    # serving-path quality independently of the sweep-engine trajectory.
+    adaptive = {k: v for k, v in metrics().items()
+                if k.startswith("adaptive.")}
+    if args.adaptive_json and adaptive:
+        with open(args.adaptive_json, "w", encoding="utf-8") as f:
+            json.dump({"quick": bool(args.quick), "metrics": adaptive},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# adaptive metrics written to {args.adaptive_json}",
+              flush=True)
 
     if failures:
         print(f"# {len(failures)} bench(es) failed: "

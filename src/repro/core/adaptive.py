@@ -142,21 +142,49 @@ class AdaptiveSelector(Generic[S]):
                       registry_key=reg.matmul_schedule_key(m, n, k, spec,
                                                            elem_bytes))
 
+    def register_ranked(self, key: str, ranked: Sequence,
+                        registry_key: Optional[reg.RegistryKey] = None,
+                        ) -> None:
+        """Register a slot straight from a ``tuner.cached_tune_*`` result
+        (a list of (schedule, cost) pairs)."""
+        self.register(key, [s for s, _ in ranked],
+                      registry_key=registry_key)
+
     def propose(self, key: str) -> S:
         slot = self._slots[key]
         if slot.committed is not None:
             return slot.committed
-        if len(slot.candidates) == 1:
-            self._commit(slot, 0, None)
-            return slot.committed
+        # Single-candidate slots still collect ``probes`` observations
+        # before committing: an immediate commit would carry no measured
+        # time, silently dropping the registry write-back.
         idx = slot.next_candidate
         return slot.candidates[idx]
 
-    def observe(self, key: str, dt: float) -> None:
+    def propose_with_index(self, key: str) -> tuple:
+        """(candidate index | None once committed, schedule) — callers
+        that may interleave (e.g. concurrent dispatched kernel calls)
+        capture the index here and attribute the measurement with
+        :meth:`observe_at`, so a timing never lands on the wrong
+        candidate."""
         slot = self._slots[key]
         if slot.committed is not None:
-            return
+            return None, slot.committed
         idx = slot.next_candidate
+        return idx, slot.candidates[idx]
+
+    def observe(self, key: str, dt: float) -> None:
+        slot = self._slots[key]
+        self.observe_at(key, slot.next_candidate, dt)
+
+    def observe_at(self, key: str, index: Optional[int],
+                   dt: float) -> None:
+        """Attribute ``dt`` to a specific candidate (from
+        :meth:`propose_with_index`); ``index=None`` (already committed)
+        is a no-op."""
+        slot = self._slots[key]
+        if slot.committed is not None or index is None:
+            return
+        idx = index
         slot.samples[idx].append(dt)
         slot.next_candidate = (idx + 1) % len(slot.candidates)
         min_n = min(len(v) for v in slot.samples.values())

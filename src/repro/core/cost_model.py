@@ -46,7 +46,11 @@ EVAL_COUNTS: Dict[str, int] = {"simulate": 0, "conv_schedule_cost": 0,
                                "matmul_schedule_cost": 0,
                                "simulate_batch": 0,
                                "conv_schedule_cost_batch": 0,
-                               "matmul_schedule_cost_batch": 0}
+                               "matmul_schedule_cost_batch": 0,
+                               "flash_attention_schedule_cost_batch": 0,
+                               "decode_attention_schedule_cost_batch": 0,
+                               "ssm_scan_schedule_cost_batch": 0,
+                               "sparse_conv_schedule_cost_batch": 0}
 
 
 def reset_eval_counts() -> None:
@@ -802,5 +806,210 @@ def matmul_schedule_cost_batch(m: int, n: int, k: int,
         grid_steps=bc(grid_steps[:, None]),
         compute_s=bc(compute_s[:, None]), memory_s=memory_s,
         overhead_s=bc(overhead_s))
+
+
+# ---------------------------------------------------------------------------
+# Serving-kernel scorers — flash/decode attention, SSM scan, sparse conv
+# ---------------------------------------------------------------------------
+#
+# These give the remaining kernel families first-class cost models so the
+# adaptive dispatch runtime (runtime/dispatch.py) can resolve candidates
+# for every kernel through one tune -> select -> observe path.  Each is a
+# roofline in the style of ``conv_schedule_cost_batch``: MXU compute with
+# padding effects, HBM traffic from block-fetch arithmetic, per-DMA
+# overheads, and a feasibility penalty when the schedule's VMEM working
+# set exceeds the budget.  All are batch entry points from day one: the
+# candidate axis is a dense array and one call scores the whole space.
+
+# The scan kernel's recurrence runs on the VPU (exp/mul/add per element),
+# not the MXU; its effective throughput is a fixed fraction of peak.
+VPU_FLOPS_FRACTION = 1.0 / 16.0
+
+
+def flash_attention_schedule_cost_batch(
+        b: int, hq: int, hkv: int, s: int, d: int,
+        blocks: Sequence[Tuple[int, int]],
+        causal: bool = True,
+        spec: TPUSpec = TPUSpec(),
+        elem_bytes: int = 2) -> BatchKernelCost:
+    """Score (block_q, block_kv) flash-attention schedules, one [C] array
+    per roofline term.
+
+    The kernel streams K/V blocks per query block with online softmax;
+    under causality, (qi, ki) pairs wholly above the diagonal are skipped,
+    so larger ``block_q`` amortises K/V refetches while larger ``block_kv``
+    wastes work past the diagonal — the trade the tuner ranks.
+
+    ``hkv`` shapes the problem key but not the traffic term: GQA folds
+    query heads onto shared K/V in HBM, yet the kernel's grid
+    (B*HQ, n_q, n_kv; KV innermost) changes the K/V block index on every
+    consecutive step, so each (query head, block) visit issues its own
+    DMA — traffic scales with ``hq`` regardless of the group size.  A
+    kernel that deduped fetches across a query-head group would need an
+    ``hkv``-scaled term here (and a cost-model version bump)."""
+    EVAL_COUNTS["flash_attention_schedule_cost_batch"] += len(blocks)
+    bq = np.array([blk[0] for blk in blocks], dtype=np.int64)
+    bkv = np.array([blk[1] for blk in blocks], dtype=np.int64)
+    n_q = -(-s // bq)
+    n_kv = -(-s // bkv)
+
+    # Active (q-block, kv-block) pairs: all of them unmasked; only pairs
+    # reaching the diagonal when causal.
+    active = np.empty(len(blocks), dtype=np.float64)
+    for i in range(len(blocks)):
+        if not causal:
+            active[i] = float(n_q[i] * n_kv[i])
+        else:
+            qi = np.arange(1, int(n_q[i]) + 1, dtype=np.int64)
+            active[i] = float(np.minimum(-(-(qi * bq[i]) // bkv[i]),
+                                         n_kv[i]).sum())
+
+    hbm = (2.0 * b * hq * s * d * elem_bytes          # q read + o write
+           + b * hq * active * bkv * d * 2 * elem_bytes)  # k+v per pair
+    steps = b * hq * active
+    # QK^T + PV on the MXU per active pair; q rows pad to 8 sublanes.
+    flops_pad = steps * 4.0 * _round_up(bq, 8) * _round_up(bkv, spec.mxu_dim) \
+        * _round_up(d, spec.mxu_dim)
+    useful = np.minimum(4.0 * b * hq * d * active * bq * bkv,
+                        4.0 * b * hq * d * float(s) * s)
+
+    vmem = ((bq * d + 2 * bkv * d) * elem_bytes
+            + bq * d * 4 + 2 * bq * 4)                # acc + (m, l) stats
+    compute_s = flops_pad / spec.peak_flops
+    memory_s = hbm / spec.hbm_bw
+    overhead_s = (spec.dma_latency_s * steps
+                  + np.where(vmem > spec.vmem_bytes, 1e3, 0.0))
+    return BatchKernelCost(flops=useful, hbm_bytes=hbm,
+                           vmem_peak=vmem.astype(np.float64),
+                           grid_steps=(b * hq * n_q * n_kv),
+                           compute_s=compute_s, memory_s=memory_s,
+                           overhead_s=overhead_s)
+
+
+def decode_attention_schedule_cost_batch(
+        b: int, hq: int, hkv: int, s: int, d: int,
+        block_kvs: Sequence[int],
+        pos: Optional[int] = None,
+        spec: TPUSpec = TPUSpec(),
+        elem_bytes: int = 2) -> BatchKernelCost:
+    """Score ``block_kv`` candidates for one single-token decode step.
+
+    The kernel skips KV blocks wholly beyond ``pos`` (scalar prefetch), so
+    small blocks track the valid prefix tightly (less wasted read) while
+    large blocks amortise per-DMA latency — the serving-path trade.
+    ``pos`` defaults to a full cache (s - 1), the steady-state worst case.
+    As with the flash scorer, ``hkv`` enters the problem key only: the
+    decode grid (B*HQ, n_kv) never revisits a K/V block on consecutive
+    steps, so every query head pays its own block DMAs.
+    """
+    EVAL_COUNTS["decode_attention_schedule_cost_batch"] += len(block_kvs)
+    pos = s - 1 if pos is None else int(pos)
+    bkv = np.asarray(list(block_kvs), dtype=np.int64)
+    n_kv = -(-s // bkv)
+    n_valid = np.minimum(-(-(pos + 1) // bkv), n_kv)  # k_start <= pos
+
+    steps = float(b * hq) * n_valid
+    hbm = (2.0 * b * hq * d * elem_bytes              # q read + o write
+           + steps * bkv * d * 2 * elem_bytes)        # k+v per valid block
+    # QK^T + PV on the MXU: the single query row pads to 8.
+    flops_pad = steps * 4.0 * 8 * _round_up(bkv, spec.mxu_dim) \
+        * _round_up(d, spec.mxu_dim)
+    useful = 4.0 * b * hq * (pos + 1) * d
+
+    vmem = 2 * bkv * d * elem_bytes + (d + 2) * 4     # k+v blocks + scratch
+    compute_s = flops_pad / spec.peak_flops
+    memory_s = hbm / spec.hbm_bw
+    overhead_s = (spec.dma_latency_s * steps          # skipped blocks: free
+                  + np.where(vmem > spec.vmem_bytes, 1e3, 0.0))
+    return BatchKernelCost(flops=np.full(len(bkv), useful),
+                           hbm_bytes=hbm,
+                           vmem_peak=vmem.astype(np.float64),
+                           grid_steps=(b * hq * n_kv),
+                           compute_s=compute_s, memory_s=memory_s,
+                           overhead_s=overhead_s)
+
+
+def ssm_scan_schedule_cost_batch(
+        bt: int, seq: int, di: int, n: int,
+        block_ds: Sequence[int],
+        spec: TPUSpec = TPUSpec(),
+        elem_bytes: int = 2) -> BatchKernelCost:
+    """Score ``block_d`` candidates for the fused selective scan.
+
+    Traffic is nearly block-independent (the fused kernel streams each
+    operand once); what the block size moves is the per-program working
+    set (x/dt/y blocks of [seq, bd] must fit VMEM alongside the state) and
+    the grid-step overhead — the classic overhead-vs-residency trade."""
+    EVAL_COUNTS["ssm_scan_schedule_cost_batch"] += len(block_ds)
+    bd = np.asarray(list(block_ds), dtype=np.int64)
+    n_blocks = -(-di // bd)
+    grid_steps = bt * n_blocks
+
+    hbm = (3.0 * bt * seq * di * elem_bytes           # x, dt in; y out
+           + 2.0 * bt * seq * n * elem_bytes          # b, c: once per row
+           + grid_steps * bd * n * 4.0                # A per grid step
+           + grid_steps * bd * 4.0)                   # D per grid step
+    # Recurrence on the VPU: ~10 elementwise ops (exp, 4 mul, 2 add, sum)
+    # per (element, state); sublane padding rounds bd up to 8.
+    flops_pad = 10.0 * bt * seq * n_blocks * _round_up(bd, 8) * max(n, 1)
+    useful = 10.0 * bt * seq * di * n
+
+    vmem = ((3 * seq * bd + 2 * seq * n) * elem_bytes  # x, dt, y + b, c
+            + 2 * bd * n * 4 + bd * 4)                 # A + h state + D
+    compute_s = flops_pad / (spec.peak_flops * VPU_FLOPS_FRACTION)
+    memory_s = hbm / spec.hbm_bw
+    overhead_s = (spec.dma_latency_s * grid_steps * 6  # six operand DMAs
+                  + np.where(vmem > spec.vmem_bytes, 1e3, 0.0))
+    return BatchKernelCost(flops=np.full(len(bd), useful),
+                           hbm_bytes=hbm,
+                           vmem_peak=vmem.astype(np.float64),
+                           grid_steps=grid_steps,
+                           compute_s=compute_s, memory_s=memory_s,
+                           overhead_s=overhead_s)
+
+
+def sparse_conv_schedule_cost_batch(
+        layer: ConvLayer,
+        blocks: Sequence[Dict[str, int]],
+        density: float = 1.0,
+        batch: int = 1,
+        spec: TPUSpec = TPUSpec(),
+        elem_bytes: int = 2) -> BatchKernelCost:
+    """Score (oc, ic) block candidates for the block-sparse conv kernel.
+
+    The sparse grid iterates only nonzero (oc-block, ic-block) pairs, so
+    expected steps scale with block ``density``; finer ic blocks skip at a
+    finer granularity but multiply per-DMA overheads and image refetches
+    (the kernel refetches the [bic, H2, W2] image slab per oc block)."""
+    EVAL_COUNTS["sparse_conv_schedule_cost_batch"] += len(blocks)
+    boc = np.array([blk["oc"] for blk in blocks], dtype=np.int64)
+    bic = np.array([blk["ic"] for blk in blocks], dtype=np.int64)
+    n_oc = -(-layer.oc // boc)
+    n_ic = -(-layer.ic // bic)
+    nnz = np.maximum(np.ceil(density * n_ic), 1.0)    # steps per oc block
+    steps = batch * n_oc * nnz
+
+    h2, w2 = layer.h + layer.kh - 1, layer.w + layer.kw - 1
+    hbm = (steps * bic * h2 * w2 * elem_bytes         # image slab per step
+           + steps * boc * bic * layer.kh * layer.kw * elem_bytes
+           + batch * layer.oc * layer.h * layer.w * elem_bytes)  # out once
+    flops_pad = steps * 2.0 * layer.kh * layer.kw \
+        * _round_up(boc, spec.mxu_dim) * _round_up(bic, spec.mxu_dim) \
+        * _round_up(layer.h * layer.w, 8)
+    useful = 2.0 * batch * layer.macs * density
+
+    vmem = (bic * h2 * w2 * elem_bytes
+            + boc * bic * layer.kh * layer.kw * elem_bytes
+            + boc * layer.h * layer.w * (4 + elem_bytes))  # acc + out blk
+    compute_s = flops_pad / spec.peak_flops
+    memory_s = hbm / spec.hbm_bw
+    overhead_s = (spec.dma_latency_s * steps
+                  + np.where(vmem > spec.vmem_bytes, 1e3, 0.0))
+    return BatchKernelCost(flops=np.full(len(blocks), useful),
+                           hbm_bytes=hbm,
+                           vmem_peak=vmem.astype(np.float64),
+                           grid_steps=steps,
+                           compute_s=compute_s, memory_s=memory_s,
+                           overhead_s=overhead_s)
 
 

@@ -158,24 +158,44 @@ class TuningRecord:
 # ---------------------------------------------------------------------------
 
 def schedule_to_dict(sched: Any) -> Dict[str, Any]:
-    from repro.core.schedule import ConvSchedule, MatmulSchedule
-    if isinstance(sched, ConvSchedule):
+    from repro.core import schedule as sch
+    if isinstance(sched, sch.ConvSchedule):
         return {"type": "conv", "grid_order": list(sched.grid_order),
                 "block": sched.block_dict()}
-    if isinstance(sched, MatmulSchedule):
+    if isinstance(sched, sch.MatmulSchedule):
         return {"type": "matmul", "grid_order": list(sched.grid_order),
                 "block": sched.block_dict(),
                 "resident_rhs": bool(sched.resident_rhs)}
+    if isinstance(sched, sch.FlashAttentionSchedule):
+        return {"type": "flash_attention",
+                "block_q": int(sched.block_q),
+                "block_kv": int(sched.block_kv)}
+    if isinstance(sched, sch.DecodeAttentionSchedule):
+        return {"type": "decode_attention",
+                "block_kv": int(sched.block_kv)}
+    if isinstance(sched, sch.SSMScanSchedule):
+        return {"type": "ssm_scan", "block_d": int(sched.block_d)}
+    if isinstance(sched, sch.SparseConvSchedule):
+        return {"type": "sparse_conv", "block": sched.block_dict()}
     return {"type": "opaque", "repr": repr(sched)}
 
 
 def schedule_from_dict(d: Dict[str, Any]) -> Any:
-    from repro.core.schedule import ConvSchedule, MatmulSchedule
+    from repro.core import schedule as sch
     if d["type"] == "conv":
-        return ConvSchedule.make(d["grid_order"], d["block"])
+        return sch.ConvSchedule.make(d["grid_order"], d["block"])
     if d["type"] == "matmul":
-        return MatmulSchedule.make(d["grid_order"], d["block"],
-                                   d.get("resident_rhs", False))
+        return sch.MatmulSchedule.make(d["grid_order"], d["block"],
+                                       d.get("resident_rhs", False))
+    if d["type"] == "flash_attention":
+        return sch.FlashAttentionSchedule(int(d["block_q"]),
+                                          int(d["block_kv"]))
+    if d["type"] == "decode_attention":
+        return sch.DecodeAttentionSchedule(int(d["block_kv"]))
+    if d["type"] == "ssm_scan":
+        return sch.SSMScanSchedule(int(d["block_d"]))
+    if d["type"] == "sparse_conv":
+        return sch.SparseConvSchedule.make(d["block"])
     raise ValueError(f"cannot rebuild schedule of type {d['type']!r}")
 
 
@@ -339,6 +359,37 @@ class TuningRegistry:
             self.compact()
         return len(doomed)
 
+    def merge(self, other: "TuningRegistry",
+              persist: bool = True) -> Dict[str, int]:
+        """Content-addressed union with ``other`` (fleet sync).
+
+        Records are addressed by their canonical key; identical records
+        (byte-identical canonical JSON) dedupe for free.  A key conflict
+        is resolved by :func:`prefer_record` — a deterministic total
+        order (measured beats unmeasured, more ranked schedules beat
+        fewer, then canonical bytes), so ``a.merge(b)`` and ``b.merge(a)``
+        converge on the same record set regardless of merge direction.
+        """
+        stats = {"added": 0, "replaced": 0, "kept": 0, "identical": 0}
+        for rec in other.records():
+            mine = self.get(rec.key)
+            if mine is None:
+                self.put(rec, persist=persist)
+                stats["added"] += 1
+            elif canonical_json(mine.to_dict()) == \
+                    canonical_json(rec.to_dict()):
+                stats["identical"] += 1
+            elif prefer_record(mine, rec) is mine:
+                stats["kept"] += 1
+            else:
+                self.put(rec, persist=persist)
+                stats["replaced"] += 1
+        return stats
+
+    def machines(self) -> List[str]:
+        """Distinct machine fingerprints present in the record set."""
+        return sorted({rec.key.machine for rec in self._records.values()})
+
     def keys(self) -> List[RegistryKey]:
         return [rec.key for _, rec in sorted(self._records.items())]
 
@@ -363,6 +414,57 @@ class TuningRegistry:
 
 
 _DEFAULT_REGISTRY: Optional[TuningRegistry] = None
+
+
+def prefer_record(a: TuningRecord, b: TuningRecord) -> TuningRecord:
+    """Deterministic, order-independent conflict rule for merges: a
+    measured record beats an unmeasured one, more ranked schedules beat
+    fewer, and canonical bytes break the remaining ties (so the winner
+    does not depend on which registry was merged into which)."""
+    def rank(rec: TuningRecord):
+        return (rec.measured is not None,
+                len(rec.value.get("schedules", ())),
+                len(rec.value.get("costs", ())))
+    ra, rb = rank(a), rank(b)
+    if ra != rb:
+        return a if ra > rb else b
+    ca, cb = canonical_json(a.to_dict()), canonical_json(b.to_dict())
+    return a if ca <= cb else b
+
+
+# ---------------------------------------------------------------------------
+# Machine last-seen sidecar (fleet-scale eviction policy)
+# ---------------------------------------------------------------------------
+#
+# Registry records deliberately carry no wall-clock timestamps (bytes are
+# a pure function of the record set), so staleness lives in a sidecar:
+# ``<registry>.machines.json`` maps machine fingerprint -> last-seen ISO
+# date, stamped whenever a registry containing that fingerprint is merged.
+# ``python -m repro.tune merge --evict-days N`` drops records whose
+# fingerprint has not been seen for N days.
+
+def machine_seen_path(registry_path: str) -> str:
+    return registry_path + ".machines.json"
+
+
+def load_machine_seen(registry_path: str) -> Dict[str, str]:
+    path = machine_seen_path(registry_path)
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            d = json.load(f)
+        return {str(k): str(v) for k, v in d.items()}
+    except (ValueError, OSError):
+        return {}
+
+
+def save_machine_seen(registry_path: str, seen: Dict[str, str]) -> None:
+    path = machine_seen_path(registry_path)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(dict(sorted(seen.items())), f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 # ---------------------------------------------------------------------------
@@ -404,10 +506,59 @@ def conv_sweep_key(layer: Any, machine: Any, threads: int = 1,
                             COST_MODEL_VERSION)
 
 
+def flash_attention_schedule_key(b: int, hq: int, hkv: int, s: int,
+                                 d: int, spec: Any, causal: bool = True,
+                                 elem_bytes: int = 2) -> RegistryKey:
+    from repro.core.cost_model import COST_MODEL_VERSION
+    problem = {"b": b, "hq": hq, "hkv": hkv, "s": s, "d": d,
+               "causal": bool(causal), "elem_bytes": elem_bytes}
+    return RegistryKey.make("flash_attention_schedule", problem,
+                            fingerprint(spec), COST_MODEL_VERSION)
+
+
+def decode_attention_schedule_key(b: int, hq: int, hkv: int, s: int,
+                                  d: int, spec: Any, elem_bytes: int = 2,
+                                  ) -> RegistryKey:
+    from repro.core.cost_model import COST_MODEL_VERSION
+    problem = {"b": b, "hq": hq, "hkv": hkv, "s": s, "d": d,
+               "elem_bytes": elem_bytes}
+    return RegistryKey.make("decode_attention_schedule", problem,
+                            fingerprint(spec), COST_MODEL_VERSION)
+
+
+def ssm_scan_schedule_key(bt: int, seq: int, di: int, n: int, spec: Any,
+                          elem_bytes: int = 2) -> RegistryKey:
+    from repro.core.cost_model import COST_MODEL_VERSION
+    problem = {"bt": bt, "seq": seq, "di": di, "n": n,
+               "elem_bytes": elem_bytes}
+    return RegistryKey.make("ssm_scan_schedule", problem,
+                            fingerprint(spec), COST_MODEL_VERSION)
+
+
+def quantize_density(density: float, steps: int = 16) -> int:
+    """Block density quantised to a 1/``steps`` grid (an int numerator),
+    so sparse-conv registry keys stay a finite, canonical-JSON-stable
+    space instead of keying on raw floats."""
+    return max(0, min(steps, int(round(float(density) * steps))))
+
+
+def sparse_conv_schedule_key(layer: Any, density: float, spec: Any,
+                             elem_bytes: int = 2) -> RegistryKey:
+    from repro.core.cost_model import COST_MODEL_VERSION
+    problem = conv_problem(layer, elem_bytes)
+    problem["density_16"] = quantize_density(density)
+    return RegistryKey.make("sparse_conv_schedule", problem,
+                            fingerprint(spec), COST_MODEL_VERSION)
+
+
 __all__ = [
     "SCHEMA_VERSION", "RegistryKey", "TuningRecord", "TuningRegistry",
     "canonical_json", "fingerprint", "runtime_fingerprint",
     "schedule_to_dict", "schedule_from_dict", "cost_to_dict",
     "cost_from_dict", "conv_problem", "conv_layer_from_problem",
     "conv_schedule_key", "matmul_schedule_key", "conv_sweep_key",
+    "flash_attention_schedule_key", "decode_attention_schedule_key",
+    "ssm_scan_schedule_key", "sparse_conv_schedule_key",
+    "quantize_density", "machine_seen_path", "load_machine_seen",
+    "save_machine_seen",
 ]

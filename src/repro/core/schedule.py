@@ -63,3 +63,77 @@ class MatmulSchedule:
         return matmul(a, b, block=self.block_dict(),
                       grid_order=self.grid_order,
                       resident_rhs=self.resident_rhs, interpret=interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashAttentionSchedule:
+    """Prefill/training attention launch point: q/kv block sizes."""
+    block_q: int
+    block_kv: int
+
+    def to_dict(self) -> Dict:
+        from repro.core import registry
+        return registry.schedule_to_dict(self)
+
+    def run(self, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, window: Optional[int] = None,
+            interpret: bool = True) -> jnp.ndarray:
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, block_q=self.block_q,
+                               block_kv=self.block_kv, causal=causal,
+                               window=window, interpret=interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeAttentionSchedule:
+    """Serving decode-step launch point: the KV streaming block."""
+    block_kv: int
+
+    def to_dict(self) -> Dict:
+        from repro.core import registry
+        return registry.schedule_to_dict(self)
+
+    def run(self, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            pos, *, interpret: bool = True) -> jnp.ndarray:
+        from repro.kernels.decode_attention import decode_attention
+        return decode_attention(q, k, v, pos, block_kv=self.block_kv,
+                                interpret=interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMScanSchedule:
+    """Fused selective-scan launch point: the channel block."""
+    block_d: int
+
+    def to_dict(self) -> Dict:
+        from repro.core import registry
+        return registry.schedule_to_dict(self)
+
+    def run(self, x, dt, b, c, a, d, *,
+            interpret: bool = True) -> jnp.ndarray:
+        from repro.kernels.ssm_scan import ssm_scan
+        return ssm_scan(x, dt, b, c, a, d, block_d=self.block_d,
+                        interpret=interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseConvSchedule:
+    """Block-sparse conv launch point: (oc, ic) skip-block shape."""
+    block: Tuple[Tuple[str, int], ...]    # hashable {"oc","ic"} dict
+
+    def block_dict(self) -> Dict[str, int]:
+        return dict(self.block)
+
+    @staticmethod
+    def make(block: Dict[str, int]) -> "SparseConvSchedule":
+        return SparseConvSchedule(tuple(sorted(block.items())))
+
+    def to_dict(self) -> Dict:
+        from repro.core import registry
+        return registry.schedule_to_dict(self)
+
+    def run(self, img: jnp.ndarray, wgt: jnp.ndarray, *,
+            sparsity=None, interpret: bool = True) -> jnp.ndarray:
+        from repro.kernels.sparse_conv import sparse_conv2d
+        return sparse_conv2d(img, wgt, block=self.block_dict(),
+                             sparsity=sparsity, interpret=interpret)

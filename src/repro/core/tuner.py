@@ -32,7 +32,9 @@ from repro.core import cost_model as cm
 from repro.core import permutations as perms
 from repro.core import registry as reg
 from repro.core.loopnest import ConvLayer
-from repro.core.schedule import ConvSchedule, MatmulSchedule
+from repro.core.schedule import (ConvSchedule, DecodeAttentionSchedule,
+                                 FlashAttentionSchedule, MatmulSchedule,
+                                 SparseConvSchedule, SSMScanSchedule)
 
 Perm = Tuple[int, ...]
 ALL_PERMS: Tuple[Perm, ...] = tuple(itertools.permutations(range(6)))
@@ -336,6 +338,73 @@ def tune_matmul(m: int, n: int, k: int,
 
 
 # ---------------------------------------------------------------------------
+# Serving-kernel schedule tuning (the remaining four families)
+# ---------------------------------------------------------------------------
+
+def tune_flash_attention(b: int, hq: int, hkv: int, s: int, d: int,
+                         causal: bool = True,
+                         spec: cm.TPUSpec = cm.TPUSpec(),
+                         elem_bytes: int = 2, top_k: int = 5,
+                         ) -> List[Tuple[FlashAttentionSchedule,
+                                         cm.KernelCost]]:
+    """Rank (block_q, block_kv) flash-attention schedules via one
+    :func:`repro.core.cost_model.flash_attention_schedule_cost_batch`."""
+    q_c = _block_candidates(s, (64, 128, 256, 512))
+    kv_c = _block_candidates(s, (128, 256, 512, 1024))
+    blocks = list(itertools.product(q_c, kv_c))
+    batch = cm.flash_attention_schedule_cost_batch(
+        b, hq, hkv, s, d, blocks, causal, spec, elem_bytes)
+    top = np.argsort(batch.time_s, kind="stable")[:top_k]
+    return [(FlashAttentionSchedule(*blocks[i]), batch.cost(i))
+            for i in map(int, top)]
+
+
+def tune_decode_attention(b: int, hq: int, hkv: int, s: int, d: int,
+                          spec: cm.TPUSpec = cm.TPUSpec(),
+                          elem_bytes: int = 2, top_k: int = 5,
+                          pos: Optional[int] = None,
+                          ) -> List[Tuple[DecodeAttentionSchedule,
+                                          cm.KernelCost]]:
+    """Rank KV streaming blocks for the single-token decode kernel."""
+    kv_c = _block_candidates(s, (64, 128, 256, 512, 1024, 2048))
+    batch = cm.decode_attention_schedule_cost_batch(
+        b, hq, hkv, s, d, kv_c, pos, spec, elem_bytes)
+    top = np.argsort(batch.time_s, kind="stable")[:top_k]
+    return [(DecodeAttentionSchedule(kv_c[i]), batch.cost(i))
+            for i in map(int, top)]
+
+
+def tune_ssm_scan(bt: int, seq: int, di: int, n: int,
+                  spec: cm.TPUSpec = cm.TPUSpec(),
+                  elem_bytes: int = 2, top_k: int = 5,
+                  ) -> List[Tuple[SSMScanSchedule, cm.KernelCost]]:
+    """Rank channel blocks for the fused selective scan."""
+    d_c = _block_candidates(di, (32, 64, 128, 256, di))
+    batch = cm.ssm_scan_schedule_cost_batch(bt, seq, di, n, d_c, spec,
+                                            elem_bytes)
+    top = np.argsort(batch.time_s, kind="stable")[:top_k]
+    return [(SSMScanSchedule(d_c[i]), batch.cost(i))
+            for i in map(int, top)]
+
+
+def tune_sparse_conv(layer: ConvLayer, density: float = 1.0,
+                     spec: cm.TPUSpec = cm.TPUSpec(),
+                     elem_bytes: int = 2, top_k: int = 5,
+                     ) -> List[Tuple[SparseConvSchedule, cm.KernelCost]]:
+    """Rank (oc, ic) skip blocks for the block-sparse conv kernel at a
+    given block density."""
+    oc_c = _block_candidates(layer.oc, (16, 32, 128, 256))
+    ic_c = _block_candidates(layer.ic, (16, 32, 128, 256))
+    blocks = [{"oc": boc, "ic": bic}
+              for boc, bic in itertools.product(oc_c, ic_c)]
+    batch = cm.sparse_conv_schedule_cost_batch(layer, blocks, density,
+                                               1, spec, elem_bytes)
+    top = np.argsort(batch.time_s, kind="stable")[:top_k]
+    return [(SparseConvSchedule.make(blocks[i]), batch.cost(i))
+            for i in map(int, top)]
+
+
+# ---------------------------------------------------------------------------
 # Cached tuning — the registry front door
 # ---------------------------------------------------------------------------
 #
@@ -353,10 +422,15 @@ def _ranked_to_value(ranked) -> Dict:
 
 def _has_ranked(value: Dict, top_k: int) -> bool:
     """A record satisfies a top_k request only if it carries that many
-    ranked (schedule, cost) pairs.  Records created purely by adaptive
-    write-back hold a winner but no cost list — those must re-tune."""
-    return (len(value.get("schedules", ())) >= top_k
-            and len(value.get("costs", ())) >= top_k)
+    ranked (schedule, cost) pairs — or the *whole* enumeration
+    (``complete``: small schedule spaces can have fewer candidates than
+    any top_k asks for, and re-sweeping them would never help).  Records
+    created purely by adaptive write-back hold a winner but no cost list
+    — those must re-tune."""
+    n = min(len(value.get("schedules", ())), len(value.get("costs", ())))
+    if value.get("complete") and n > 0:
+        return True
+    return n >= top_k
 
 
 def _value_to_ranked(value: Dict, top_k: Optional[int] = None):
@@ -365,24 +439,41 @@ def _value_to_ranked(value: Dict, top_k: Optional[int] = None):
             for s, c in pairs]
 
 
+def _cached_ranked(key: reg.RegistryKey, tune: Callable[[int], List],
+                   top_k: int,
+                   registry: Optional[reg.TuningRegistry],
+                   refresh: bool) -> List:
+    """The memoisation pattern shared by every ``cached_tune_*``: return
+    the stored ranking on a warm hit (zero cost-model evals), otherwise
+    run ``tune(top_k)`` and persist it — preserving any run-time
+    measurement already attached to the key."""
+    registry = registry if registry is not None else \
+        reg.TuningRegistry.default()
+    prev = registry.get(key)
+    rec = None if refresh else prev
+    if rec is not None and _has_ranked(rec.value, top_k):
+        return _value_to_ranked(rec.value, top_k)
+    want = max(top_k, 5)
+    ranked = tune(want)
+    value = _ranked_to_value(ranked)
+    if len(ranked) < want:
+        value["complete"] = True      # the whole enumeration fits
+    registry.put(reg.TuningRecord(key=key, value=value,
+                                  measured=prev.measured if prev else None,
+                                  source="offline"))
+    return ranked[:top_k]
+
+
 def cached_tune_conv(layer: ConvLayer, spec: cm.TPUSpec = cm.TPUSpec(),
                      elem_bytes: int = 2, top_k: int = 5,
                      registry: Optional[reg.TuningRegistry] = None,
                      refresh: bool = False,
                      ) -> List[Tuple[ConvSchedule, cm.KernelCost]]:
     """:func:`tune_conv` with persistent memoisation."""
-    registry = registry if registry is not None else \
-        reg.TuningRegistry.default()
-    key = reg.conv_schedule_key(layer, spec, elem_bytes)
-    prev = registry.get(key)
-    rec = None if refresh else prev
-    if rec is not None and _has_ranked(rec.value, top_k):
-        return _value_to_ranked(rec.value, top_k)
-    ranked = tune_conv(layer, spec, elem_bytes, top_k=max(top_k, 5))
-    registry.put(reg.TuningRecord(key=key, value=_ranked_to_value(ranked),
-                                  measured=prev.measured if prev else None,
-                                  source="offline"))
-    return ranked[:top_k]
+    return _cached_ranked(
+        reg.conv_schedule_key(layer, spec, elem_bytes),
+        lambda k: tune_conv(layer, spec, elem_bytes, top_k=k),
+        top_k, registry, refresh)
 
 
 def cached_tune_matmul(m: int, n: int, k: int,
@@ -392,18 +483,71 @@ def cached_tune_matmul(m: int, n: int, k: int,
                        refresh: bool = False,
                        ) -> List[Tuple[MatmulSchedule, cm.KernelCost]]:
     """:func:`tune_matmul` with persistent memoisation."""
-    registry = registry if registry is not None else \
-        reg.TuningRegistry.default()
-    key = reg.matmul_schedule_key(m, n, k, spec, elem_bytes)
-    prev = registry.get(key)
-    rec = None if refresh else prev
-    if rec is not None and _has_ranked(rec.value, top_k):
-        return _value_to_ranked(rec.value, top_k)
-    ranked = tune_matmul(m, n, k, spec, elem_bytes, top_k=max(top_k, 5))
-    registry.put(reg.TuningRecord(key=key, value=_ranked_to_value(ranked),
-                                  measured=prev.measured if prev else None,
-                                  source="offline"))
-    return ranked[:top_k]
+    return _cached_ranked(
+        reg.matmul_schedule_key(m, n, k, spec, elem_bytes),
+        lambda kk: tune_matmul(m, n, k, spec, elem_bytes, top_k=kk),
+        top_k, registry, refresh)
+
+
+def cached_tune_flash_attention(
+        b: int, hq: int, hkv: int, s: int, d: int, causal: bool = True,
+        spec: cm.TPUSpec = cm.TPUSpec(), elem_bytes: int = 2,
+        top_k: int = 5, registry: Optional[reg.TuningRegistry] = None,
+        refresh: bool = False,
+        ) -> List[Tuple[FlashAttentionSchedule, cm.KernelCost]]:
+    """:func:`tune_flash_attention` with persistent memoisation."""
+    return _cached_ranked(
+        reg.flash_attention_schedule_key(b, hq, hkv, s, d, spec, causal,
+                                         elem_bytes),
+        lambda k: tune_flash_attention(b, hq, hkv, s, d, causal, spec,
+                                       elem_bytes, top_k=k),
+        top_k, registry, refresh)
+
+
+def cached_tune_decode_attention(
+        b: int, hq: int, hkv: int, s: int, d: int,
+        spec: cm.TPUSpec = cm.TPUSpec(), elem_bytes: int = 2,
+        top_k: int = 5, registry: Optional[reg.TuningRegistry] = None,
+        refresh: bool = False,
+        ) -> List[Tuple[DecodeAttentionSchedule, cm.KernelCost]]:
+    """:func:`tune_decode_attention` with persistent memoisation."""
+    return _cached_ranked(
+        reg.decode_attention_schedule_key(b, hq, hkv, s, d, spec,
+                                          elem_bytes),
+        lambda k: tune_decode_attention(b, hq, hkv, s, d, spec,
+                                        elem_bytes, top_k=k),
+        top_k, registry, refresh)
+
+
+def cached_tune_ssm_scan(
+        bt: int, seq: int, di: int, n: int,
+        spec: cm.TPUSpec = cm.TPUSpec(), elem_bytes: int = 2,
+        top_k: int = 5, registry: Optional[reg.TuningRegistry] = None,
+        refresh: bool = False,
+        ) -> List[Tuple[SSMScanSchedule, cm.KernelCost]]:
+    """:func:`tune_ssm_scan` with persistent memoisation."""
+    return _cached_ranked(
+        reg.ssm_scan_schedule_key(bt, seq, di, n, spec, elem_bytes),
+        lambda k: tune_ssm_scan(bt, seq, di, n, spec, elem_bytes,
+                                top_k=k),
+        top_k, registry, refresh)
+
+
+def cached_tune_sparse_conv(
+        layer: ConvLayer, density: float = 1.0,
+        spec: cm.TPUSpec = cm.TPUSpec(), elem_bytes: int = 2,
+        top_k: int = 5, registry: Optional[reg.TuningRegistry] = None,
+        refresh: bool = False,
+        ) -> List[Tuple[SparseConvSchedule, cm.KernelCost]]:
+    """:func:`tune_sparse_conv` with persistent memoisation (density
+    quantised to the registry's 1/16 grid so the key space stays
+    finite)."""
+    density_q = reg.quantize_density(density) / 16.0
+    return _cached_ranked(
+        reg.sparse_conv_schedule_key(layer, density, spec, elem_bytes),
+        lambda k: tune_sparse_conv(layer, density_q, spec, elem_bytes,
+                                   top_k=k),
+        top_k, registry, refresh)
 
 
 def cached_sweep_layer(layer: ConvLayer,

@@ -92,4 +92,26 @@ def conv2d_tuned(img: jnp.ndarray, wgt: jnp.ndarray, *,
                   grid_order=sched.grid_order, interpret=interpret)
 
 
-__all__ = ["conv2d", "conv2d_tuned", "conv2d_ref", "default_block"]
+def conv2d_dispatched(img: jnp.ndarray, wgt: jnp.ndarray, *,
+                      service=None, interpret: bool = True) -> jnp.ndarray:
+    """`conv2d` through the adaptive dispatch runtime: the process-wide
+    :class:`~repro.runtime.dispatch.DispatchService` proposes one of the
+    registry-backed top-K schedules, the call is timed, and the
+    measurement feeds the online selector (which commits the argmin and
+    writes it back to the registry once steady)."""
+    from repro.runtime.dispatch import get_dispatch_service
+    n, ic, h2, w2 = img.shape
+    oc, _, kh, kw = wgt.shape
+    h, w = h2 - kh + 1, w2 - kw + 1
+    svc = service if service is not None else get_dispatch_service()
+    problem = {"oc": oc, "ic": ic, "h": h, "w": w, "kh": kh, "kw": kw}
+    with svc.measure("conv2d", problem,
+                     elem_bytes=img.dtype.itemsize) as sched:
+        out = conv2d(img, wgt, block=sched.block_dict(),
+                     grid_order=sched.grid_order, interpret=interpret)
+        jax.block_until_ready(out)
+    return out
+
+
+__all__ = ["conv2d", "conv2d_tuned", "conv2d_dispatched", "conv2d_ref",
+           "default_block"]

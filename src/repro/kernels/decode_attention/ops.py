@@ -17,4 +17,24 @@ def decode_attention(q, k, v, pos, *, block_kv: int = 256,
                                    interpret=interpret)
 
 
-__all__ = ["decode_attention", "decode_attention_ref"]
+def decode_attention_dispatched(q, k, v, pos, *, service=None,
+                                interpret: bool = True):
+    """`decode_attention` through the adaptive dispatch runtime: the KV
+    streaming block for this (B, HQ, HKV, S, D) cache shape comes from
+    the registry-backed top-K and each call's measured time feeds the
+    online selector (see :mod:`repro.runtime.dispatch`)."""
+    from repro.runtime.dispatch import get_dispatch_service
+    b, hq, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    svc = service if service is not None else get_dispatch_service()
+    problem = {"b": b, "hq": hq, "hkv": hkv, "s": s, "d": d}
+    with svc.measure("decode_attention", problem,
+                     elem_bytes=q.dtype.itemsize) as sched:
+        out = decode_attention(q, k, v, pos, block_kv=sched.block_kv,
+                               interpret=interpret)
+        jax.block_until_ready(out)
+    return out
+
+
+__all__ = ["decode_attention", "decode_attention_dispatched",
+           "decode_attention_ref"]

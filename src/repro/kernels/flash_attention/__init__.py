@@ -1,5 +1,7 @@
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import (
+    flash_attention, flash_attention_dispatched)
 from repro.kernels.flash_attention.ref import mha_ref
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
-__all__ = ["flash_attention", "mha_ref", "flash_attention_pallas"]
+__all__ = ["flash_attention", "flash_attention_dispatched", "mha_ref",
+           "flash_attention_pallas"]

@@ -23,4 +23,30 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                   window=window, interpret=interpret)
 
 
-__all__ = ["flash_attention", "mha_ref"]
+def flash_attention_dispatched(q: jnp.ndarray, k: jnp.ndarray,
+                               v: jnp.ndarray, *, causal: bool = True,
+                               window: Optional[int] = None,
+                               service=None,
+                               interpret: bool = True) -> jnp.ndarray:
+    """`flash_attention` through the adaptive dispatch runtime: the
+    (block_q, block_kv) schedule comes from the registry-backed top-K
+    for this (B, HQ, HKV, S, D) shape and the measured call time feeds
+    the online selector (see :mod:`repro.runtime.dispatch`)."""
+    from repro.runtime.dispatch import get_dispatch_service
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    svc = service if service is not None else get_dispatch_service()
+    problem = {"b": b, "hq": hq, "hkv": hkv, "s": s, "d": d,
+               "causal": causal}
+    with svc.measure("flash_attention", problem,
+                     elem_bytes=q.dtype.itemsize) as sched:
+        out = flash_attention(q, k, v,
+                              block_q=min(sched.block_q, s),
+                              block_kv=min(sched.block_kv, s),
+                              causal=causal, window=window,
+                              interpret=interpret)
+        jax.block_until_ready(out)
+    return out
+
+
+__all__ = ["flash_attention", "flash_attention_dispatched", "mha_ref"]

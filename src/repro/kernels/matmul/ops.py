@@ -74,4 +74,23 @@ def matmul_tuned(a: jnp.ndarray, b: jnp.ndarray, *,
                   resident_rhs=sched.resident_rhs, interpret=interpret)
 
 
-__all__ = ["matmul", "matmul_tuned", "matmul_ref", "default_block"]
+def matmul_dispatched(a: jnp.ndarray, b: jnp.ndarray, *,
+                      service=None, interpret: bool = True) -> jnp.ndarray:
+    """`matmul` through the adaptive dispatch runtime (see
+    :mod:`repro.runtime.dispatch`): propose a registry-backed candidate,
+    time the call, feed the selector, commit + write back once steady."""
+    from repro.runtime.dispatch import get_dispatch_service
+    m, k = a.shape
+    _, n = b.shape
+    svc = service if service is not None else get_dispatch_service()
+    with svc.measure("matmul", {"m": m, "n": n, "k": k},
+                     elem_bytes=a.dtype.itemsize) as sched:
+        out = matmul(a, b, block=sched.block_dict(),
+                     grid_order=sched.grid_order,
+                     resident_rhs=sched.resident_rhs, interpret=interpret)
+        jax.block_until_ready(out)
+    return out
+
+
+__all__ = ["matmul", "matmul_tuned", "matmul_dispatched", "matmul_ref",
+           "default_block"]

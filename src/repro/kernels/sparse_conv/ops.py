@@ -58,5 +58,37 @@ def sparse_conv2d(img: jnp.ndarray, wgt: jnp.ndarray, *,
         block=block, interpret=interpret)
 
 
-__all__ = ["sparse_conv2d", "sparse_conv_ref", "analyze_weights",
-           "BlockSparsity"]
+def sparse_conv2d_dispatched(img: jnp.ndarray, wgt: jnp.ndarray, *,
+                             density: Optional[float] = None,
+                             service=None,
+                             interpret: bool = True) -> jnp.ndarray:
+    """`sparse_conv2d` through the adaptive dispatch runtime: the (oc,
+    ic) skip-block shape for this (layer, density) comes from the
+    registry-backed top-K and each call's measured time feeds the online
+    selector (see :mod:`repro.runtime.dispatch`).  The dispatch key uses
+    the weight tensor's element-level density quantised to a 1/16 grid —
+    an upper bound on block density at any granularity — so one key
+    covers all block candidates.  Computing that density pulls the whole
+    weight tensor to the host; serving loops that call this repeatedly
+    with the same weights should pass ``density`` (density is a property
+    of the weights, not the call)."""
+    from repro.core.registry import quantize_density
+    from repro.runtime.dispatch import get_dispatch_service
+    n, ic, h2, w2 = img.shape
+    oc, _, kh, kw = wgt.shape
+    h, w = h2 - kh + 1, w2 - kw + 1
+    if density is None:
+        density = float((np.abs(np.asarray(wgt)) > 0.0).mean())
+    svc = service if service is not None else get_dispatch_service()
+    problem = {"oc": oc, "ic": ic, "h": h, "w": w, "kh": kh, "kw": kw,
+               "density_16": quantize_density(density)}
+    with svc.measure("sparse_conv", problem,
+                     elem_bytes=img.dtype.itemsize) as sched:
+        out = sparse_conv2d(img, wgt, block=sched.block_dict(),
+                            interpret=interpret)
+        jax.block_until_ready(out)
+    return out
+
+
+__all__ = ["sparse_conv2d", "sparse_conv2d_dispatched", "sparse_conv_ref",
+           "analyze_weights", "BlockSparsity"]

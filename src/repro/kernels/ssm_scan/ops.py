@@ -31,4 +31,24 @@ def traffic_model(bt: int, seq: int, di: int, n: int,
             "reduction": naive / fused}
 
 
-__all__ = ["ssm_scan", "ssm_scan_ref", "traffic_model"]
+def ssm_scan_dispatched(x, dt, b, c, a, d, *, service=None,
+                        interpret: bool = True):
+    """`ssm_scan` through the adaptive dispatch runtime: the channel
+    block for this (Bt, S, Di, N) shape comes from the registry-backed
+    top-K and each call's measured time feeds the online selector (see
+    :mod:`repro.runtime.dispatch`)."""
+    from repro.runtime.dispatch import get_dispatch_service
+    bt, seq, di = x.shape
+    n = b.shape[-1]
+    svc = service if service is not None else get_dispatch_service()
+    problem = {"bt": bt, "seq": seq, "di": di, "n": n}
+    with svc.measure("ssm_scan", problem,
+                     elem_bytes=x.dtype.itemsize) as sched:
+        out = ssm_scan(x, dt, b, c, a, d, block_d=sched.block_d,
+                       interpret=interpret)
+        jax.block_until_ready(out)
+    return out
+
+
+__all__ = ["ssm_scan", "ssm_scan_dispatched", "ssm_scan_ref",
+           "traffic_model"]

@@ -16,6 +16,10 @@ def main() -> None:
     ap.add_argument("--registry", default=None,
                     help="tuning-registry path: measured decode "
                          "throughput is written back")
+    ap.add_argument("--dispatch", action="store_true",
+                    help="route prefill/decode through the adaptive "
+                         "dispatch service (per-shape tune -> select -> "
+                         "observe; winners written to the registry)")
     args = ap.parse_args()
 
     import jax
@@ -40,12 +44,23 @@ def main() -> None:
             jax.random.key(2),
             (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
     registry = TuningRegistry(args.registry) if args.registry else None
+    dispatch = None
+    if args.dispatch:
+        from repro.runtime.dispatch import DispatchService, \
+            get_dispatch_service
+        dispatch = (DispatchService(registry) if registry is not None
+                    else get_dispatch_service())
     out, stats = generate(model, params, batch,
                           max_new_tokens=args.new_tokens,
                           temperature=args.temperature,
-                          registry=registry)
+                          registry=registry, dispatch=dispatch)
     print(f"generated {out.shape}; prefill {stats.prefill_s*1e3:.1f}ms; "
           f"decode {stats.decode_tok_s:.0f} tok/s")
+    if dispatch is not None:
+        for entry in dispatch.report().values():
+            committed = entry["committed"]
+            print(f"dispatch {entry['kind']}: obs={entry['observations']}"
+                  f" committed={committed if committed else '(probing)'}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,370 @@
+"""Online adaptive dispatch runtime — tune → select → observe per shape.
+
+The thesis' closing chapter argues static tuning leaves performance on
+the table and that run-time adaptation (micro-profiling a few candidates
+under the real workload) recovers it.  This module is that argument as a
+serving subsystem: a process-wide :class:`DispatchService` that every
+kernel call routes through.
+
+Each call is keyed by ``(kernel kind, canonical problem shape, machine
+fingerprint)``.  On first sight of a key the service resolves a top-K
+candidate list through the batch tuner behind the persistent registry —
+a warm registry answers with ZERO cost-model evaluations; a cold one
+pays a single batch sweep — and registers the candidates with an
+:class:`~repro.core.adaptive.AdaptiveSelector`.  Every subsequent call
+round-robins the candidates (``propose``), feeds back measured step
+times (``observe``), and once the selector's steadiness check passes it
+commits the argmin and writes the measured winner back to the
+:class:`~repro.core.registry.TuningRegistry` — so the next process (or
+host, after ``python -m repro.tune merge``) starts from what this
+traffic learned.
+
+All six kernel families dispatch through this one code path::
+
+    kind               problem                       schedule
+    conv2d             oc,ic,h,w,kh,kw               ConvSchedule
+    matmul             m,n,k                         MatmulSchedule
+    flash_attention    b,hq,hkv,s,d,causal           FlashAttentionSchedule
+    decode_attention   b,hq,hkv,s,d                  DecodeAttentionSchedule
+    ssm_scan           bt,seq,di,n                   SSMScanSchedule
+    sparse_conv        oc,ic,h,w,kh,kw,density_16    SparseConvSchedule
+
+``runtime/serve_loop.generate`` and ``runtime/train_loop.Trainer`` feed
+the service with production-shaped traffic; the ``*_dispatched`` wrappers
+in ``kernels/*/ops.py`` consume it for direct kernel calls; and
+``python -m repro.tune serve-report`` prints what it has learned.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import cost_model as cm
+from repro.core import registry as reg
+from repro.core import tuner
+from repro.core.adaptive import AdaptiveSelector
+from repro.core.loopnest import ConvLayer
+
+
+# ---------------------------------------------------------------------------
+# Kernel families: canonical problems + registry keys + cached tuners
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelFamily:
+    """One dispatchable kernel kind: how to key it and how to tune it."""
+    kind: str
+    dims: tuple                       # required problem-dict fields
+    key_fn: Callable[..., reg.RegistryKey]
+    tune_fn: Callable[..., List]      # -> [(schedule, KernelCost), ...]
+
+    def key(self, problem: Dict[str, Any], spec, elem_bytes: int,
+            ) -> reg.RegistryKey:
+        return self.key_fn(problem, spec, elem_bytes)
+
+    def tune(self, problem: Dict[str, Any], spec, elem_bytes: int,
+             top_k: int, registry: reg.TuningRegistry) -> List:
+        return self.tune_fn(problem, spec, elem_bytes, top_k, registry)
+
+
+def _conv_layer(p: Dict[str, Any]) -> ConvLayer:
+    return ConvLayer(p["oc"], p["ic"], p["h"], p["w"], p["kh"], p["kw"])
+
+
+FAMILIES: Dict[str, KernelFamily] = {}
+
+
+def _family(kind: str, dims: tuple, key_fn, tune_fn) -> None:
+    FAMILIES[kind] = KernelFamily(kind, dims, key_fn, tune_fn)
+
+
+_family(
+    "conv2d", ("oc", "ic", "h", "w", "kh", "kw"),
+    lambda p, spec, eb: reg.conv_schedule_key(_conv_layer(p), spec, eb),
+    lambda p, spec, eb, k, r: tuner.cached_tune_conv(
+        _conv_layer(p), spec, eb, top_k=k, registry=r))
+
+_family(
+    "matmul", ("m", "n", "k"),
+    lambda p, spec, eb: reg.matmul_schedule_key(p["m"], p["n"], p["k"],
+                                                spec, eb),
+    lambda p, spec, eb, k, r: tuner.cached_tune_matmul(
+        p["m"], p["n"], p["k"], spec, eb, top_k=k, registry=r))
+
+_family(
+    "flash_attention", ("b", "hq", "hkv", "s", "d"),
+    lambda p, spec, eb: reg.flash_attention_schedule_key(
+        p["b"], p["hq"], p["hkv"], p["s"], p["d"], spec,
+        p.get("causal", True), eb),
+    lambda p, spec, eb, k, r: tuner.cached_tune_flash_attention(
+        p["b"], p["hq"], p["hkv"], p["s"], p["d"],
+        p.get("causal", True), spec, eb, top_k=k, registry=r))
+
+_family(
+    "decode_attention", ("b", "hq", "hkv", "s", "d"),
+    lambda p, spec, eb: reg.decode_attention_schedule_key(
+        p["b"], p["hq"], p["hkv"], p["s"], p["d"], spec, eb),
+    lambda p, spec, eb, k, r: tuner.cached_tune_decode_attention(
+        p["b"], p["hq"], p["hkv"], p["s"], p["d"], spec, eb,
+        top_k=k, registry=r))
+
+_family(
+    "ssm_scan", ("bt", "seq", "di", "n"),
+    lambda p, spec, eb: reg.ssm_scan_schedule_key(
+        p["bt"], p["seq"], p["di"], p["n"], spec, eb),
+    lambda p, spec, eb, k, r: tuner.cached_tune_ssm_scan(
+        p["bt"], p["seq"], p["di"], p["n"], spec, eb,
+        top_k=k, registry=r))
+
+_family(
+    "sparse_conv", ("oc", "ic", "h", "w", "kh", "kw", "density_16"),
+    lambda p, spec, eb: reg.sparse_conv_schedule_key(
+        _conv_layer(p), p["density_16"] / 16.0, spec, eb),
+    lambda p, spec, eb, k, r: tuner.cached_tune_sparse_conv(
+        _conv_layer(p), p["density_16"] / 16.0, spec, eb,
+        top_k=k, registry=r))
+
+
+def canonical_problem(kind: str, **dims: Any) -> Dict[str, Any]:
+    """Validate and canonicalise a problem dict for ``kind`` (missing
+    required dims raise; extra dims are kept — e.g. ``causal``)."""
+    fam = FAMILIES.get(kind)
+    if fam is None:
+        raise KeyError(f"unknown kernel kind {kind!r}; "
+                       f"known: {sorted(FAMILIES)}")
+    missing = [d for d in fam.dims if d not in dims]
+    if missing:
+        raise KeyError(f"{kind} problem missing dims {missing}")
+    return {k: (bool(v) if isinstance(v, bool) else int(v))
+            for k, v in dims.items()}
+
+
+# ---------------------------------------------------------------------------
+# The dispatch service
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Resolved:
+    """Per-(kind, shape, machine) dispatch state."""
+    kind: str
+    problem: Dict[str, Any]
+    elem_bytes: int
+    registry_key: reg.RegistryKey
+    candidates: List[Any]
+    predicted: List[float]            # cost-model time_s per candidate
+    observations: int = 0
+
+
+class DispatchService:
+    """Process-wide tune → select → observe scheduler for every kernel.
+
+    ``registry=None`` uses the process default registry
+    (``REPRO_TUNE_REGISTRY`` / ``~/.cache/repro/tuning.jsonl``); pass an
+    in-memory ``TuningRegistry(None)`` for hermetic runs.
+
+    Typical call site (what the ``*_dispatched`` kernel wrappers do)::
+
+        svc = get_dispatch_service()
+        with svc.measure("matmul", dict(m=m, n=n, k=k)) as sched:
+            out = matmul(a, b, block=sched.block_dict(), ...)
+            jax.block_until_ready(out)
+
+    The context manager resolves candidates (warm-registry hit or one
+    batch sweep), proposes the schedule for this call, times the body,
+    and feeds the measurement back; once steady, the selector commits
+    the argmin and persists it with its measured step time.
+    """
+
+    def __init__(self, registry: Optional[reg.TuningRegistry] = None,
+                 spec: Optional[cm.TPUSpec] = None,
+                 top_k: int = 3,
+                 probes_per_candidate: int = 3,
+                 steadiness_threshold: float = 0.2,
+                 max_extra_probes: int = 2):
+        self.registry = (registry if registry is not None
+                         else reg.TuningRegistry.default())
+        self.spec = spec if spec is not None else cm.TPUSpec()
+        self.top_k = top_k
+        self.machine = reg.fingerprint(self.spec)
+        self.selector: AdaptiveSelector = AdaptiveSelector(
+            probes_per_candidate=probes_per_candidate,
+            steadiness_threshold=steadiness_threshold,
+            max_extra_probes=max_extra_probes,
+            registry=self.registry)
+        self._slots: Dict[str, _Resolved] = {}
+        # (kind, frozen problem, elem_bytes) -> slot key: the serving
+        # loop calls propose/observe per decode step, and without this
+        # memo each call would rebuild the RegistryKey and its canonical
+        # JSON just to probe an already-resolved slot.
+        self._key_cache: Dict[tuple, str] = {}
+        self._lock = threading.Lock()
+
+    # -- resolution ----------------------------------------------------
+    def resolve(self, kind: str, problem: Dict[str, Any],
+                elem_bytes: int = 2) -> str:
+        """Ensure a slot exists for (kind, shape, machine); return its
+        key.  First resolution per process consults the registry (warm:
+        zero cost-model evals) or runs one batch sweep; later calls are
+        a dict probe."""
+        ckey = (kind, tuple(sorted(problem.items())), elem_bytes)
+        with self._lock:
+            cached = self._key_cache.get(ckey)
+            if cached is not None:
+                return cached
+        fam = FAMILIES.get(kind)
+        if fam is None:
+            raise KeyError(f"unknown kernel kind {kind!r}; "
+                           f"known: {sorted(FAMILIES)}")
+        problem = canonical_problem(kind, **problem)
+        rkey = fam.key(problem, self.spec, elem_bytes)
+        skey = rkey.canonical()
+        with self._lock:
+            if skey in self._slots:
+                self._key_cache[ckey] = skey
+                return skey
+        ranked = fam.tune(problem, self.spec, elem_bytes, self.top_k,
+                          self.registry)
+        with self._lock:
+            if skey not in self._slots:
+                self.selector.register_ranked(skey, ranked,
+                                              registry_key=rkey)
+                self._slots[skey] = _Resolved(
+                    kind=kind, problem=problem, elem_bytes=elem_bytes,
+                    registry_key=rkey,
+                    candidates=[s for s, _ in ranked],
+                    predicted=[float(c.time_s) for _, c in ranked])
+            self._key_cache[ckey] = skey
+        return skey
+
+    # -- the step-loop protocol ----------------------------------------
+    def propose(self, kind: str, problem: Dict[str, Any],
+                elem_bytes: int = 2) -> Any:
+        """Schedule to use for this call (resolving if needed)."""
+        return self.selector.propose(self.resolve(kind, problem,
+                                                  elem_bytes))
+
+    def observe(self, kind: str, problem: Dict[str, Any], dt: float,
+                elem_bytes: int = 2) -> None:
+        """Feed one measured duration (seconds) for the schedule last
+        proposed for this shape.  (Sequential propose/observe protocol —
+        step loops; concurrent callers should use :meth:`measure`, which
+        pins the candidate index.)"""
+        skey = self.resolve(kind, problem, elem_bytes)
+        with self._lock:
+            self._slots[skey].observations += 1
+            self.selector.observe(skey, dt)
+
+    @contextlib.contextmanager
+    def measure(self, kind: str, problem: Dict[str, Any],
+                elem_bytes: int = 2):
+        """Propose + time the body + observe, as a context manager.
+
+        The proposed candidate's index is captured under the service
+        lock and the measurement is attributed to it explicitly, so
+        concurrent dispatched calls on the same shape cannot land a
+        timing on the wrong candidate."""
+        skey = self.resolve(kind, problem, elem_bytes)
+        with self._lock:
+            idx, sched = self.selector.propose_with_index(skey)
+        t0 = time.perf_counter()
+        yield sched
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self._slots[skey].observations += 1
+            self.selector.observe_at(skey, idx, dt)
+
+    def committed(self, kind: str, problem: Dict[str, Any],
+                  elem_bytes: int = 2) -> Optional[Any]:
+        """The committed schedule for a shape, or None while probing."""
+        skey = self.resolve(kind, problem, elem_bytes)
+        return self.selector.committed(skey)
+
+    def candidates(self, kind: str, problem: Dict[str, Any],
+                   elem_bytes: int = 2) -> List[Any]:
+        skey = self.resolve(kind, problem, elem_bytes)
+        return list(self._slots[skey].candidates)
+
+    def predicted(self, kind: str, problem: Dict[str, Any],
+                  elem_bytes: int = 2) -> List[float]:
+        """Cost-model time_s per candidate (same order as
+        :meth:`candidates`)."""
+        skey = self.resolve(kind, problem, elem_bytes)
+        return list(self._slots[skey].predicted)
+
+    # -- reporting -----------------------------------------------------
+    def report(self) -> Dict[str, Dict[str, Any]]:
+        """Per-shape dispatch state: candidates, observation counts,
+        committed winner, predicted-vs-selected gap."""
+        out: Dict[str, Dict[str, Any]] = {}
+        sel_report = self.selector.report()
+        for skey, slot in self._slots.items():
+            committed = self.selector.committed(skey)
+            entry = {
+                "kind": slot.kind,
+                "problem": dict(slot.problem),
+                "machine": slot.registry_key.machine,
+                "n_candidates": len(slot.candidates),
+                "observations": slot.observations,
+                "committed": (reg.schedule_to_dict(committed)
+                              if committed is not None else None),
+                "predicted_best_s": (min(slot.predicted)
+                                     if slot.predicted else None),
+            }
+            if committed is not None and committed in slot.candidates:
+                i = slot.candidates.index(committed)
+                entry["predicted_committed_s"] = slot.predicted[i]
+            samples = sel_report.get(skey, {}).get("samples", {})
+            entry["samples"] = {i: len(v) for i, v in samples.items()}
+            out[skey] = entry
+        return out
+
+    def shapes(self) -> List[Dict[str, Any]]:
+        """The (kind, problem) pairs this service has seen."""
+        return [{"kind": s.kind, "problem": dict(s.problem)}
+                for s in self._slots.values()]
+
+
+# ---------------------------------------------------------------------------
+# Process-wide service (what the *_dispatched kernel wrappers use)
+# ---------------------------------------------------------------------------
+
+_SERVICE: Optional[DispatchService] = None
+_SERVICE_INSTALLED = False   # True: set explicitly via set_dispatch_service
+_SERVICE_LOCK = threading.Lock()
+
+
+def get_dispatch_service() -> DispatchService:
+    """The process-wide service.  An explicitly installed service
+    (:func:`set_dispatch_service`) is always returned as-is; otherwise a
+    default-registry service is created lazily and recreated if
+    ``REPRO_TUNE_REGISTRY`` has been repointed (mirroring
+    ``TuningRegistry.default()``)."""
+    global _SERVICE
+    with _SERVICE_LOCK:
+        if _SERVICE_INSTALLED:
+            return _SERVICE
+        path = reg.TuningRegistry.default_path()
+        if _SERVICE is None or _SERVICE.registry.path != path:
+            _SERVICE = DispatchService(reg.TuningRegistry.default())
+        return _SERVICE
+
+
+def set_dispatch_service(service: Optional[DispatchService]
+                         ) -> Optional[DispatchService]:
+    """Install (or with None, clear back to the lazy default) the
+    process-wide service; returns the previous one so tests can restore
+    it."""
+    global _SERVICE, _SERVICE_INSTALLED
+    with _SERVICE_LOCK:
+        prev, _SERVICE = _SERVICE, service
+        _SERVICE_INSTALLED = service is not None
+        return prev
+
+
+__all__ = [
+    "DispatchService", "KernelFamily", "FAMILIES", "canonical_problem",
+    "get_dispatch_service", "set_dispatch_service",
+]

@@ -1,9 +1,20 @@
-"""Serving driver: batched prefill + greedy decode with KV/state caches."""
+"""Serving driver: batched prefill + greedy decode with KV/state caches.
+
+With a :class:`~repro.runtime.dispatch.DispatchService` attached, the
+loop is the adaptive runtime's traffic source: the prefill and every
+decode step are timed individually and fed to the service under the
+model's true kernel shapes (flash/decode attention for transformer
+families, the fused scan for SSMs).  The service round-robins its
+registry-backed top-K candidates across the first steps, commits the
+measured argmin once step times are steady, and writes the winner (with
+its measured step time) back to the tuning registry — so the shapes this
+deployment actually serves tune themselves.
+"""
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +35,43 @@ class ServeStats:
         return self.tokens_generated / max(self.decode_s, 1e-9)
 
 
+def serve_dispatch_problems(cfg, bsz: int, prompt_len: int, total: int,
+                            ) -> Dict[str, Tuple[str, Dict[str, int]]]:
+    """The kernel-shape problems a serving run of ``cfg`` exercises:
+    ``{"prefill": (kind, problem), "decode": (kind, problem)}``.
+
+    Attention families map to (flash_attention, decode_attention) over
+    the config's head geometry; SSMs map to the fused scan at prompt
+    length (prefill) and one token (decode)."""
+    if cfg.family == "ssm":
+        return {
+            "prefill": ("ssm_scan", {"bt": bsz, "seq": prompt_len,
+                                     "di": cfg.d_inner,
+                                     "n": cfg.ssm_state}),
+            "decode": ("ssm_scan", {"bt": bsz, "seq": 1,
+                                    "di": cfg.d_inner,
+                                    "n": cfg.ssm_state}),
+        }
+    hd = cfg.resolved_head_dim
+    # VLM prefill attends over image tokens + text tokens.
+    prefill_s = prompt_len + (cfg.num_image_tokens
+                              if cfg.family == "vlm" else 0)
+    return {
+        "prefill": ("flash_attention", {"b": bsz, "hq": cfg.n_heads,
+                                        "hkv": cfg.n_kv_heads,
+                                        "s": prefill_s, "d": hd,
+                                        "causal": True}),
+        "decode": ("decode_attention", {"b": bsz, "hq": cfg.n_heads,
+                                        "hkv": cfg.n_kv_heads,
+                                        "s": total, "d": hd}),
+    }
+
+
 def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
              max_new_tokens: int, temperature: float = 0.0,
              rng: Optional[jax.Array] = None,
              registry: Optional[reg.TuningRegistry] = None,
+             dispatch=None,
              ) -> tuple[np.ndarray, ServeStats]:
     """Greedy (or sampled) continuation of a batch of prompts.
 
@@ -35,6 +79,10 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
     Returns generated tokens [B, max_new_tokens].  With ``registry``
     given, the measured prefill/decode throughput is persisted so repeat
     deployments of the same (arch, batch, lengths) know what to expect.
+    With ``dispatch`` (a :class:`repro.runtime.dispatch.DispatchService`)
+    given, the prefill and each decode step are measured per-step and
+    fed to the per-shape adaptive scheduler, which commits the measured
+    winner back to its registry.
     """
     cfg = model.cfg
     bsz, prompt_len = batch["tokens"].shape
@@ -42,8 +90,31 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
     if cfg.family == "vlm":
         total += cfg.num_image_tokens
 
+    problems = (serve_dispatch_problems(cfg, bsz, prompt_len, total)
+                if dispatch is not None else {})
+    if dispatch is not None:
+        # Resolve both shapes up front: warm registries answer with zero
+        # cost-model evaluations; cold ones pay one batch sweep here,
+        # not inside the timed loop.
+        for kind, problem in problems.values():
+            dispatch.resolve(kind, problem)
+        dispatch.propose(*problems["prefill"])
+
+    prefill_fn = jax.jit(model.prefill)
+    try:
+        # AOT-compile outside the timed region: the dispatch observation
+        # (and prefill_s) should measure the step, not XLA compilation —
+        # a compile-inflated median would be committed to the registry.
+        prefill_fn = prefill_fn.lower(params, batch).compile()
+    except Exception:  # pragma: no cover - AOT unsupported: time jit call
+        pass
     t0 = time.time()
-    logits, cache = jax.jit(model.prefill)(params, batch)
+    logits, cache = prefill_fn(params, batch)
+    jax.block_until_ready(logits)
+    prefill_exec_s = time.time() - t0
+    if dispatch is not None:
+        kind, problem = problems["prefill"]
+        dispatch.observe(kind, problem, prefill_exec_s)
     # Grow caches to full capacity.
     full = model.init_cache(bsz, total)
 
@@ -54,7 +125,7 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
         return dst.at[sl].set(src.astype(dst.dtype))
 
     cache = jax.tree.map(fit, full, cache)
-    jax.block_until_ready(logits)
+    jax.block_until_ready(cache)
     prefill_s = time.time() - t0
 
     step_jit = jax.jit(model.decode_step)
@@ -71,13 +142,31 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
     out: List[np.ndarray] = [np.asarray(tok)]
     pos0 = prompt_len + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
 
+    if max_new_tokens > 1:
+        try:
+            # Same AOT treatment as prefill: keep XLA compilation out of
+            # the first decode step's timing (it would otherwise be
+            # attributed to the dispatcher's first candidate).
+            step_jit = step_jit.lower(params, cache, tok[:, None],
+                                      jnp.int32(pos0)).compile()
+        except Exception:  # pragma: no cover - AOT unsupported
+            pass
+
     t1 = time.time()
     for i in range(max_new_tokens - 1):
+        if dispatch is not None:
+            kind, problem = problems["decode"]
+            dispatch.propose(kind, problem)
+            t_step = time.perf_counter()
         lg, cache = step_jit(params, cache, tok[:, None],
                              jnp.int32(pos0 + i))
         rng, sub = jax.random.split(rng)
         tok = pick(lg, sub)
         out.append(np.asarray(tok))
+        if dispatch is not None:
+            # np.asarray above synchronised the step; feed its wall time
+            # to the per-shape scheduler.
+            dispatch.observe(kind, problem, time.perf_counter() - t_step)
     jax.block_until_ready(tok)
     decode_s = time.time() - t1
     stats = ServeStats(prefill_s=prefill_s, decode_s=decode_s,

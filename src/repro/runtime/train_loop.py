@@ -119,6 +119,18 @@ class Trainer:
                      if cfg.ckpt_dir else None)
         self.registry = (reg.TuningRegistry(cfg.registry_path)
                          if cfg.registry_path else None)
+        # Adaptive dispatch: with a registry attached, step times feed
+        # the per-shape scheduler under the model's dominant GEMM shape
+        # (tokens x d_ff x d_model — the MLP up-projection), so training
+        # traffic tunes the same record serving and kernel calls consult.
+        self.dispatch = None
+        self._gemm_problem: Optional[Dict[str, int]] = None
+        if self.registry is not None:
+            from repro.runtime.dispatch import DispatchService
+            self.dispatch = DispatchService(self.registry)
+            self._gemm_problem = {
+                "m": data_cfg.global_batch * data_cfg.seq_len,
+                "n": model.cfg.d_ff, "k": model.cfg.d_model}
         self.history: List[Dict[str, float]] = []
 
         lr_fn = functools.partial(
@@ -184,11 +196,17 @@ class Trainer:
         try:
             for step in range(start_step, steps):
                 batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+                if self.dispatch is not None:
+                    self.dispatch.propose("matmul", self._gemm_problem)
                 t0 = time.time()
                 params, opt_state, metrics = step_fn(params, opt_state,
                                                      batch)
                 jax.block_until_ready(metrics["loss"])
                 dt = time.time() - t0
+                if self.dispatch is not None and step > start_step:
+                    # skip the compile step; feed steady step times only
+                    self.dispatch.observe("matmul", self._gemm_problem,
+                                          dt)
                 self.monitor.record(step, dt)
                 rec = {k: float(v) for k, v in metrics.items()}
                 rec["step"] = step

@@ -104,6 +104,90 @@ def cmd_export(args) -> int:
     return 0
 
 
+def cmd_merge(args) -> int:
+    """Content-addressed union with another registry + staleness
+    eviction (the fleet-sync story: hosts export their JSONL, any host
+    merges them in; records whose machine fingerprint has not been seen
+    for ``--evict-days`` days are dropped)."""
+    import datetime
+    registry = _registry(args)
+    if registry.path is None:
+        raise SystemExit("merge needs an on-disk registry (--registry)")
+    other = reg.TuningRegistry(args.other)
+    stats = registry.merge(other)
+
+    now = (datetime.date.fromisoformat(args.now) if args.now
+           else datetime.date.today())
+    seen = reg.load_machine_seen(registry.path)
+    # Fingerprints arriving in the merged-in registry were just seen on
+    # its host; fingerprints already here keep their stamp (defaulting
+    # to today so pre-sidecar registries are grandfathered, not purged).
+    for fp in other.machines():
+        prev = seen.get(fp)
+        seen[fp] = max(prev, now.isoformat()) if prev else now.isoformat()
+    for fp in registry.machines():
+        seen.setdefault(fp, now.isoformat())
+
+    evicted = 0
+    if args.evict_days is not None:
+        cutoff = (now - datetime.timedelta(days=args.evict_days)
+                  ).isoformat()
+        doomed = sorted(fp for fp, d in seen.items() if d < cutoff)
+        for fp in doomed:
+            evicted += registry.invalidate(machine=fp, persist=False)
+            del seen[fp]
+    reg.save_machine_seen(registry.path, seen)
+    registry.compact()
+    print(f"merged {args.other}: "
+          + ", ".join(f"{k}={v}" for k, v in sorted(stats.items()))
+          + f"; evicted {evicted} stale records"
+          + f"; registry now has {len(registry)} records")
+    return 0
+
+
+def cmd_serve_report(args) -> int:
+    """Per-shape report of what the adaptive dispatch runtime has
+    learned: offline predictions vs run-time measurements for every
+    kernel-schedule record (plus serve/train step measurements)."""
+    registry = _registry(args)
+    schedule_kinds = ("conv_schedule", "matmul_schedule",
+                      "flash_attention_schedule",
+                      "decode_attention_schedule", "ssm_scan_schedule",
+                      "sparse_conv_schedule")
+    runtime_kinds = ("serve_decode", "train_step")
+    rows = measured = 0
+    print(f"{'kind':26s} {'problem':44s} {'predicted':>11s} "
+          f"{'measured':>11s} {'ratio':>7s} src")
+    for rec in registry.records():
+        kind = rec.key.kind
+        if kind not in schedule_kinds and kind not in runtime_kinds:
+            continue
+        if args.kind and kind != args.kind:
+            continue
+        # Predicted time of the schedule the measurement belongs to (the
+        # committed winner may not be the offline rank-0 pick); fall
+        # back to rank 0 for measurement-free records.
+        pred = None
+        costs = rec.value.get("costs") or []
+        scheds = rec.value.get("schedules") or []
+        best = (rec.measured or {}).get("best")
+        if costs:
+            idx = scheds.index(best) if best in scheds[:len(costs)] else 0
+            pred = reg.cost_from_dict(costs[idx]).time_s
+        meas = (rec.measured or {}).get("time_s")
+        ratio = (meas / pred) if (pred and meas) else None
+        measured += meas is not None
+        rows += 1
+        fmt = lambda v, f: ("-" if v is None else f % v)  # noqa: E731
+        print(f"{kind:26s} {_fmt_problem(rec.key.problem_dict()):44s} "
+              f"{fmt(pred, '%.3e'):>11s} {fmt(meas, '%.3e'):>11s} "
+              f"{fmt(ratio, '%.2f'):>7s} {rec.source}")
+    print(f"-- {rows} serving-path records, {measured} with run-time "
+          f"measurements"
+          + (f" ({registry.path})" if registry.path else ""))
+    return 0
+
+
 def cmd_invalidate(args) -> int:
     registry = _registry(args)
     if not (args.all or args.kind or args.machine or args.cost_model):
@@ -155,6 +239,27 @@ def build_parser() -> argparse.ArgumentParser:
     e = sub.add_parser("export", help="dump as a JSON array")
     e.add_argument("--out", default="-", help="output path ('-' = stdout)")
     e.set_defaults(fn=cmd_export)
+
+    m = sub.add_parser("merge", help="union another registry into this "
+                                     "one (+ stale-machine eviction)")
+    m.add_argument("other", help="path to the registry JSONL to merge in")
+    m.add_argument("--evict-days", type=int, default=None,
+                   help="drop records whose machine fingerprint has not "
+                        "been seen in this many days (sidecar: "
+                        "<registry>.machines.json)")
+    m.add_argument("--now", default=None,
+                   help="override today's date (YYYY-MM-DD; for tests "
+                        "and replayed merges)")
+    m.set_defaults(fn=cmd_merge)
+
+    sr = sub.add_parser("serve-report",
+                        help="per-shape adaptive-dispatch report: "
+                             "predicted vs measured for serving-path "
+                             "records")
+    sr.add_argument("--kind", default=None,
+                    help="restrict to one kind (e.g. "
+                         "decode_attention_schedule)")
+    sr.set_defaults(fn=cmd_serve_report)
 
     v = sub.add_parser("invalidate", help="drop records by filter")
     v.add_argument("--kind", default=None)

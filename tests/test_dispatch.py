@@ -1,0 +1,414 @@
+"""Adaptive dispatch runtime: per-shape tune -> select -> observe for all
+six kernel families, warm-hit guarantees, convergence, serve-loop
+write-back, registry merge + eviction, and the measurement-only record
+regression."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core import registry as reg
+from repro.core import tuner
+from repro.core.adaptive import AdaptiveSelector
+from repro.core.loopnest import ConvLayer
+from repro.runtime.dispatch import (DispatchService, FAMILIES,
+                                    canonical_problem)
+
+PROBLEMS = [
+    ("conv2d", {"oc": 16, "ic": 8, "h": 12, "w": 12, "kh": 3, "kw": 3}),
+    ("matmul", {"m": 64, "n": 32, "k": 16}),
+    ("flash_attention", {"b": 1, "hq": 4, "hkv": 2, "s": 32, "d": 16,
+                         "causal": True}),
+    ("decode_attention", {"b": 2, "hq": 4, "hkv": 2, "s": 64, "d": 16}),
+    ("ssm_scan", {"bt": 2, "seq": 8, "di": 16, "n": 4}),
+    ("sparse_conv", {"oc": 16, "ic": 8, "h": 12, "w": 12, "kh": 3,
+                     "kw": 3, "density_16": 8}),
+]
+
+
+def make_service(tmp_path=None, name="dispatch.jsonl", **kw):
+    path = str(tmp_path / name) if tmp_path is not None else None
+    return DispatchService(reg.TuningRegistry(path), **kw)
+
+
+# ------------------------------------------------------ resolution / warm
+
+def test_all_six_families_registered():
+    assert sorted(FAMILIES) == ["conv2d", "decode_attention",
+                                "flash_attention", "matmul",
+                                "sparse_conv", "ssm_scan"]
+
+
+def test_all_six_kinds_resolve_candidates():
+    svc = make_service()
+    for kind, problem in PROBLEMS:
+        cands = svc.candidates(kind, problem)
+        assert len(cands) >= 1, kind
+        pred = svc.predicted(kind, problem)
+        assert len(pred) == len(cands)
+        assert pred == sorted(pred), f"{kind} candidates not ranked"
+
+
+def test_second_resolve_is_free_same_service():
+    svc = make_service()
+    for kind, problem in PROBLEMS:
+        svc.resolve(kind, problem)
+    cm.reset_eval_counts()
+    for kind, problem in PROBLEMS:
+        svc.resolve(kind, problem)
+    assert cm.total_evals() == 0
+
+
+def test_warm_registry_zero_evals_fresh_service(tmp_path):
+    # The acceptance bar: a new process (fresh service) over a warm
+    # registry resolves every family with zero cost-model evaluations.
+    svc = make_service(tmp_path)
+    for kind, problem in PROBLEMS:
+        svc.resolve(kind, problem)
+    fresh = DispatchService(reg.TuningRegistry(svc.registry.path))
+    cm.reset_eval_counts()
+    for kind, problem in PROBLEMS:
+        fresh.resolve(kind, problem)
+    assert cm.total_evals() == 0
+    for kind, problem in PROBLEMS:
+        assert fresh.candidates(kind, problem) == \
+            svc.candidates(kind, problem), kind
+
+
+def test_canonical_problem_validation():
+    with pytest.raises(KeyError):
+        canonical_problem("matmul", m=1, n=2)       # missing k
+    with pytest.raises(KeyError):
+        canonical_problem("warp_drive", m=1)
+    p = canonical_problem("matmul", m=np.int64(4), n=8, k=16)
+    assert p == {"m": 4, "n": 8, "k": 16}
+    assert all(isinstance(v, int) for v in p.values())
+
+
+# ---------------------------------------------------------- convergence
+
+def test_convergence_on_bimodal_distribution(tmp_path):
+    # Synthetic bimodal timing: the true argmin candidate is fast with
+    # jitter, all others are ~4x slower.  The selector must commit the
+    # true argmin within 20 observations and write the measurement back.
+    svc = make_service(tmp_path, top_k=3)
+    kind, problem = PROBLEMS[0]
+    cands = svc.candidates(kind, problem)
+    assert len(cands) >= 2
+    best = cands[1]   # NOT the cost model's first pick: online data wins
+    rng = np.random.default_rng(7)
+    obs = 0
+    while svc.committed(kind, problem) is None and obs < 20:
+        sched = svc.propose(kind, problem)
+        base = 1e-3 if sched == best else 4e-3
+        svc.observe(kind, problem, base * (1 + 0.05 * rng.random()))
+        obs += 1
+    assert svc.committed(kind, problem) == best
+    assert obs <= 20
+
+    rec = svc.registry.get(
+        FAMILIES[kind].key(canonical_problem(kind, **problem), svc.spec,
+                           2))
+    assert rec is not None and rec.measured is not None
+    assert reg.schedule_from_dict(rec.measured["best"]) == best
+    assert rec.measured["time_s"] == pytest.approx(1e-3, rel=0.1)
+
+
+def test_converges_to_offline_argmin_under_model_faithful_traffic():
+    # If measured step times follow the cost model, the committed
+    # schedule is the offline batch-sweep argmin (gap 0) within 20
+    # observations per shape — the ISSUE acceptance bar.
+    svc = make_service(top_k=3)
+    for kind, problem in PROBLEMS[:3]:
+        cands = svc.candidates(kind, problem)
+        pred = svc.predicted(kind, problem)
+        rng = np.random.default_rng(0)
+        obs = 0
+        while svc.committed(kind, problem) is None and obs < 20:
+            sched = svc.propose(kind, problem)
+            t = pred[cands.index(sched)] * (1 + 0.02 * rng.random())
+            svc.observe(kind, problem, t)
+            obs += 1
+        committed = svc.committed(kind, problem)
+        assert committed is not None, (kind, obs)
+        assert pred[cands.index(committed)] == min(pred), kind
+        assert obs <= 20
+
+
+def test_report_shapes_and_observations():
+    svc = make_service()
+    kind, problem = PROBLEMS[1]
+    with svc.measure(kind, problem) as sched:
+        assert sched in svc.candidates(kind, problem)
+    rep = svc.report()
+    assert len(rep) == 1
+    entry = next(iter(rep.values()))
+    assert entry["kind"] == kind and entry["observations"] == 1
+    assert entry["n_candidates"] >= 1
+    assert svc.shapes() == [{"kind": kind,
+                             "problem": canonical_problem(kind,
+                                                          **problem)}]
+
+
+# ------------------------------------------------- dispatched kernel ops
+
+def test_dispatched_wrappers_match_references():
+    from repro.kernels.conv2d import conv2d_dispatched, conv2d_ref
+    from repro.kernels.decode_attention import (
+        decode_attention_dispatched, decode_attention_ref)
+    from repro.kernels.matmul import matmul_dispatched, matmul_ref
+    from repro.kernels.sparse_conv import (sparse_conv2d_dispatched,
+                                           sparse_conv_ref)
+    svc = make_service()
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.normal(size=(1, 8, 14, 14)).astype(np.float32))
+    wgt = jnp.asarray(rng.normal(size=(16, 8, 3, 3)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(conv2d_dispatched(img, wgt, service=svc)),
+        np.asarray(conv2d_ref(img, wgt)), rtol=1e-4, atol=1e-4)
+
+    a = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(matmul_dispatched(a, b, service=svc)),
+        np.asarray(matmul_ref(a, b)), rtol=1e-4, atol=1e-4)
+
+    q = jnp.asarray(rng.normal(size=(2, 4, 1, 16)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(size=(2, 2, 64, 16)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(2, 2, 64, 16)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(decode_attention_dispatched(q, kc, vc, jnp.int32(13),
+                                               service=svc)),
+        np.asarray(decode_attention_ref(q, kc, vc, jnp.int32(13))),
+        rtol=1e-4, atol=1e-4)
+
+    wsp = np.asarray(rng.normal(size=(16, 8, 3, 3)).astype(np.float32))
+    wsp[:8, :4] = 0.0
+    np.testing.assert_allclose(
+        np.asarray(sparse_conv2d_dispatched(img, jnp.asarray(wsp),
+                                            service=svc)),
+        np.asarray(sparse_conv_ref(img, jnp.asarray(wsp))),
+        rtol=1e-4, atol=1e-4)
+    # each wrapper fed one observation into its own per-shape slot
+    assert sorted(e["kind"] for e in svc.report().values()) == \
+        ["conv2d", "decode_attention", "matmul", "sparse_conv"]
+    assert all(e["observations"] == 1 for e in svc.report().values())
+
+
+# ------------------------------------------------ serve-loop write-back
+
+def test_serve_generate_dispatch_and_registry_writeback(tmp_path):
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.runtime.serve_loop import generate, serve_dispatch_problems
+
+    cfg = get_config("phi3-mini-3.8b-smoke")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0,
+                                          cfg.vocab_size)}
+    registry = reg.TuningRegistry(str(tmp_path / "serve.jsonl"))
+    svc = DispatchService(registry)
+    out, stats = generate(model, params, batch, max_new_tokens=16,
+                          registry=registry, dispatch=svc)
+    assert out.shape == (2, 16)
+
+    # serve_decode throughput record (pre-existing write-back)
+    kinds = {k.kind for k in registry.keys()}
+    assert "serve_decode" in kinds
+    # dispatch registered the model's serving shapes and observed the
+    # decode steps; the decode slot saw one observation per loop step
+    problems = serve_dispatch_problems(cfg, 2, 8, 8 + 16)
+    dec_kind, dec_problem = problems["decode"]
+    assert dec_kind == "decode_attention"
+    rep = svc.report()
+    by_kind = {e["kind"]: e for e in rep.values()}
+    assert by_kind["decode_attention"]["observations"] == 15
+    assert by_kind["flash_attention"]["observations"] == 1
+    # enough steps to commit: the winner is persisted with its measured
+    # step time under the decode_attention_schedule key
+    committed = svc.committed(dec_kind, dec_problem)
+    assert committed is not None
+    rec = registry.get(FAMILIES[dec_kind].key(
+        canonical_problem(dec_kind, **dec_problem), svc.spec, 2))
+    assert rec is not None and rec.measured is not None
+    assert rec.measured["time_s"] > 0
+    # a restarted serving process resolves the same shapes warm
+    fresh = DispatchService(reg.TuningRegistry(registry.path))
+    cm.reset_eval_counts()
+    for kind, problem in problems.values():
+        fresh.resolve(kind, problem)
+    assert cm.total_evals() == 0
+
+
+def test_serve_dispatch_problems_ssm_family():
+    from repro.configs import get_config
+    from repro.runtime.serve_loop import serve_dispatch_problems
+    cfg = get_config("falcon-mamba-7b-smoke")
+    probs = serve_dispatch_problems(cfg, 4, 16, 48)
+    assert probs["prefill"][0] == "ssm_scan"
+    assert probs["prefill"][1]["seq"] == 16
+    assert probs["decode"] == ("ssm_scan",
+                               {"bt": 4, "seq": 1, "di": cfg.d_inner,
+                                "n": cfg.ssm_state})
+
+
+# --------------------------------------- measurement-only records (fix)
+
+def test_record_measurement_without_prior_record_persists(tmp_path):
+    # Regression (ISSUE 3 satellite): a measurement on a key offline
+    # tuning never saw must create a measurement-only record, not drop
+    # the data on the floor.
+    r = reg.TuningRegistry(str(tmp_path / "m.jsonl"))
+    key = reg.decode_attention_schedule_key(2, 4, 2, 64, 16, cm.TPUSpec())
+    assert r.get(key) is None
+    best = {"type": "decode_attention", "block_kv": 32}
+    r.record_measurement(key, best, 2.5e-4)
+    rec = reg.TuningRegistry(r.path).get(key)   # visible after reload
+    assert rec is not None
+    assert rec.source == "adaptive"
+    assert rec.measured["time_s"] == pytest.approx(2.5e-4)
+    assert rec.value["schedules"] == [best]
+
+
+def test_single_candidate_slot_still_writes_measurement(tmp_path):
+    # A single-candidate slot used to commit instantly with no measured
+    # time, silently dropping the registry write-back.
+    r = reg.TuningRegistry(str(tmp_path / "s.jsonl"))
+    key = reg.matmul_schedule_key(8, 8, 8, cm.TPUSpec())
+    sel = AdaptiveSelector(probes_per_candidate=2, registry=r)
+    sel.register("mm", ["only"], registry_key=key)
+    for _ in range(3):
+        if sel.committed("mm"):
+            break
+        sel.propose("mm")
+        sel.observe("mm", 1.5e-3)
+    assert sel.committed("mm") == "only"
+    rec = r.get(key)
+    assert rec is not None and rec.measured is not None
+    assert rec.measured["time_s"] == pytest.approx(1.5e-3)
+
+
+# --------------------------------------------------- merge + eviction
+
+def _mk_registry(tmp_path, name):
+    return reg.TuningRegistry(str(tmp_path / name))
+
+
+def test_merge_union_and_conflict_preference(tmp_path):
+    layer = ConvLayer(16, 8, 12, 12, 3, 3)
+    r1 = _mk_registry(tmp_path, "a.jsonl")
+    r2 = _mk_registry(tmp_path, "b.jsonl")
+    tuner.cached_tune_conv(layer, registry=r1, top_k=2)
+    tuner.cached_tune_matmul(64, 32, 16, registry=r2, top_k=2)
+    # same key in both; r2's copy carries a measurement -> preferred
+    ranked = tuner.cached_tune_matmul(128, 64, 32, registry=r1, top_k=2)
+    tuner.cached_tune_matmul(128, 64, 32, registry=r2, top_k=2)
+    key = reg.matmul_schedule_key(128, 64, 32, cm.TPUSpec())
+    r2.record_measurement(key, reg.schedule_to_dict(ranked[0][0]), 1e-3)
+
+    stats = r1.merge(r2)
+    assert stats == {"added": 1, "replaced": 1, "kept": 0, "identical": 0}
+    assert len(r1) == 3
+    assert r1.get(key).measured is not None
+    # merging again is a no-op (content addressed)
+    assert r1.merge(r2)["identical"] == 2
+    # direction independence: r2.merge(r1) converges to the same set
+    r2.merge(r1)
+    assert sorted(reg.canonical_json(rec.to_dict())
+                  for rec in r1.records()) == \
+        sorted(reg.canonical_json(rec.to_dict()) for rec in r2.records())
+
+
+def test_cli_merge_with_eviction(tmp_path):
+    from repro.tune.cli import main
+    layer = ConvLayer(16, 8, 12, 12, 3, 3)
+    main_path = str(tmp_path / "main.jsonl")
+    other_path = str(tmp_path / "other.jsonl")
+    r = reg.TuningRegistry(main_path)
+    # a record from a machine that will go stale (not in `other`)
+    stale_key = reg.RegistryKey.make("conv_schedule", {"oc": 1},
+                                     "feedfeedfeed",
+                                     cm.COST_MODEL_VERSION)
+    r.put(reg.TuningRecord(key=stale_key,
+                           value={"schedules": [], "costs": []}))
+    reg.save_machine_seen(main_path, {"feedfeedfeed": "2020-01-01"})
+    tuner.cached_tune_conv(layer,
+                           registry=reg.TuningRegistry(other_path),
+                           top_k=2)
+
+    with pytest.raises(SystemExit) as e:
+        main(["--registry", main_path, "merge", other_path,
+              "--evict-days", "30", "--now", "2026-07-30"])
+    assert e.value.code == 0
+    merged = reg.TuningRegistry(main_path)
+    assert len(merged) == 1                     # stale record evicted
+    assert "feedfeedfeed" not in merged.machines()
+    seen = reg.load_machine_seen(main_path)
+    assert "feedfeedfeed" not in seen
+    live = reg.fingerprint(cm.TPUSpec())
+    assert seen[live] == "2026-07-30"
+
+
+def test_cli_serve_report(tmp_path, capsys):
+    from repro.tune.cli import main
+    path = str(tmp_path / "sr.jsonl")
+    r = reg.TuningRegistry(path)
+    svc = DispatchService(r)
+    kind, problem = PROBLEMS[3]
+    for _ in range(12):
+        if svc.committed(kind, problem):
+            break
+        svc.propose(kind, problem)
+        svc.observe(kind, problem, 1e-3)
+    with pytest.raises(SystemExit) as e:
+        main(["--registry", path, "serve-report"])
+    assert e.value.code == 0
+    out = capsys.readouterr().out
+    assert "decode_attention_schedule" in out
+    assert "serving-path records" in out
+
+
+# ------------------------------------------------- new schedule kinds
+
+def test_new_schedule_roundtrips():
+    from repro.core.schedule import (DecodeAttentionSchedule,
+                                     FlashAttentionSchedule,
+                                     SparseConvSchedule, SSMScanSchedule)
+    for sched in (FlashAttentionSchedule(128, 256),
+                  DecodeAttentionSchedule(512),
+                  SSMScanSchedule(64),
+                  SparseConvSchedule.make({"oc": 32, "ic": 16})):
+        d = reg.schedule_to_dict(sched)
+        json.loads(reg.canonical_json(d))       # JSON-serialisable
+        assert reg.schedule_from_dict(d) == sched
+
+
+def test_new_cost_models_rank_sensibly():
+    # decode attention: with a near-empty cache, small KV blocks beat
+    # huge ones (they track the valid prefix); DMA overhead penalises
+    # tiny ones at full cache.
+    costs_empty = cm.decode_attention_schedule_cost_batch(
+        4, 8, 4, 8192, 128, [64, 8192], pos=63)
+    assert costs_empty.time_s[0] < costs_empty.time_s[1]
+    # ssm scan: a block too large for VMEM is penalised into oblivion
+    costs = cm.ssm_scan_schedule_cost_batch(8, 65536, 4096, 16,
+                                            [128, 4096])
+    assert costs.time_s[1] > 1.0          # infeasible penalty
+    assert costs.time_s[0] < 1.0
+    # sparse conv: halving density must not increase predicted time
+    layer = ConvLayer(64, 64, 16, 16, 3, 3)
+    blocks = [{"oc": 32, "ic": 32}]
+    dense = cm.sparse_conv_schedule_cost_batch(layer, blocks, 1.0)
+    sparse = cm.sparse_conv_schedule_cost_batch(layer, blocks, 0.5)
+    assert sparse.time_s[0] <= dense.time_s[0]
+    # flash attention: causal skips ~half the pairs
+    full = cm.flash_attention_schedule_cost_batch(
+        2, 8, 4, 4096, 128, [(256, 256)], causal=False)
+    causal = cm.flash_attention_schedule_cost_batch(
+        2, 8, 4, 4096, 128, [(256, 256)], causal=True)
+    assert causal.hbm_bytes[0] < full.hbm_bytes[0]
