@@ -1,0 +1,144 @@
+"""Perf-trend gate: diff fresh BENCH_*.json output against committed
+baselines and fail on regression.
+
+    python -m benchmarks.compare BENCH_sweep.json \
+        --baseline benchmarks/baselines/BENCH_sweep.json
+    python -m benchmarks.compare BENCH_adaptive.json \
+        --baseline benchmarks/baselines/BENCH_adaptive.json --update
+
+Every gated metric has a direction (higher/lower is better) and a
+relative tolerance; the default is the 10% trend budget, while metrics
+derived from wall-clock time get a wider, documented band (CI machines
+are not each other — their hard floors live in ci.yml).  Near-zero
+baselines additionally carry an absolute guard band, so "0.00 gap"
+cannot turn every nonzero future gap into an infinite-percent
+regression.  Purely machine-absolute numbers (wall seconds, evals/sec)
+are tracked in the report but never gated.
+
+``--update`` rewrites the baseline file from the fresh output — the
+main-branch CI job runs it after the gates pass, so baselines always
+describe the current fleet, and pull requests diff against what main
+actually measured.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import shutil
+import sys
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    direction: str  # "higher" | "lower" is better
+    rel: float = 0.10  # relative regression tolerance
+    abs_band: float = 0.0  # absolute guard band (near-zero baselines)
+    gate: bool = True  # False: report only, never fail
+
+
+POLICIES: Dict[str, Policy] = {
+    # deterministic counts/ratios: the 10% budget of the CI gate
+    "adaptive.convergence_steps": Policy("lower", abs_band=1.0),
+    "adaptive.committed_vs_best_gap": Policy("lower", abs_band=0.05),
+    # wall-clock-derived ratios: same-machine relative, but CI runners
+    # differ run to run — wider band; ci.yml keeps the hard floors
+    "sweep.batch_vs_scalar_speedup": Policy("higher", rel=0.50),
+    "registry.warm_vs_cold_ratio": Policy("higher", rel=0.50),
+    # interpret-mode pallas vs XLA wall ratio swings with jit-cache
+    # warmth; gate only on order-of-magnitude drift
+    "adaptive.pallas_vs_reference_step_ratio": Policy("lower", rel=2.0),
+    # machine-absolute: tracked for the trajectory, never gated
+    "sweep.cold_wall_time_s": Policy("lower", gate=False),
+    "sweep.scalar_wall_time_s": Policy("lower", gate=False),
+    "sweep.evals_per_sec": Policy("higher", gate=False),
+    "registry.warm_wall_time_s": Policy("lower", gate=False),
+}
+DEFAULT_POLICY = Policy("higher")
+
+
+def _load_metrics(path: str) -> Dict[str, float]:
+    with open(path, "r", encoding="utf-8") as f:
+        payload = json.load(f)
+    metrics = payload.get("metrics", {})
+    return {str(k): float(v) for k, v in metrics.items()}
+
+
+def regression(name, base, fresh, policy: Optional[Policy] = None) -> Optional[str]:
+    """None if ``fresh`` is within the trend budget of ``base``, else a
+    human-readable description of the regression."""
+    p = policy or POLICIES.get(name, DEFAULT_POLICY)
+    if not p.gate:
+        return None
+    if p.direction == "higher":
+        floor = min(base * (1.0 - p.rel), base - p.abs_band)
+        if fresh < floor:
+            detail = f"(baseline {base:.4g}, higher is better)"
+            return f"{name}: {fresh:.4g} < allowed {floor:.4g} {detail}"
+    else:
+        ceil = max(base * (1.0 + p.rel), base + p.abs_band)
+        if fresh > ceil:
+            detail = f"(baseline {base:.4g}, lower is better)"
+            return f"{name}: {fresh:.4g} > allowed {ceil:.4g} {detail}"
+    return None
+
+
+def compare(fresh_path: str, baseline_path: str, update: bool = False) -> int:
+    fresh = _load_metrics(fresh_path)
+    try:
+        base = _load_metrics(baseline_path)
+    except FileNotFoundError:
+        if update:
+            shutil.copyfile(fresh_path, baseline_path)
+            print(f"baseline created: {baseline_path}")
+            return 0
+        print(f"FAIL: no baseline at {baseline_path} (run with --update to create it)")
+        return 1
+
+    failures = []
+    for name in sorted(set(base) | set(fresh)):
+        p = POLICIES.get(name, DEFAULT_POLICY)
+        if name not in fresh:
+            failures.append(f"{name}: in baseline but missing from {fresh_path}")
+            continue
+        if name not in base:
+            print(f"  new    {name} = {fresh[name]:.4g} (no baseline yet)")
+            continue
+        msg = regression(name, base[name], fresh[name], p)
+        status = "REGRESS" if msg else ("  ok   " if p.gate else "  info ")
+        print(f"{status} {name}: baseline {base[name]:.4g} -> fresh {fresh[name]:.4g}")
+        if msg:
+            failures.append(msg)
+
+    if failures:
+        print(f"\n{len(failures)} perf-trend regression(s) vs {baseline_path}:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    if update:
+        shutil.copyfile(fresh_path, baseline_path)
+        print(f"baseline updated: {baseline_path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.compare")
+    ap.add_argument("fresh", help="fresh BENCH_*.json to check")
+    ap.add_argument(
+        "--baseline",
+        required=True,
+        help="committed baseline BENCH_*.json",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the fresh output (main-branch CI)",
+    )
+    args = ap.parse_args(argv)
+    return compare(args.fresh, args.baseline, update=args.update)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

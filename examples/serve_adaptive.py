@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--registry", default=None,
                     help="persist what this run learns (default: "
                          "in-memory)")
+    ap.add_argument("--backend", default="pallas",
+                    choices=("reference", "pallas"),
+                    help="pallas: compile the serve step with the "
+                         "committed schedules (re-AOT on commit)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -55,10 +59,16 @@ def main():
 
     out, stats = generate(model, params, batch,
                           max_new_tokens=args.new_tokens,
-                          registry=registry, dispatch=service)
+                          registry=registry, dispatch=service,
+                          backend=args.backend)
     print(f"arch={cfg.name} generated {out.shape}; "
           f"prefill {stats.prefill_s*1e3:.1f}ms, decode "
-          f"{stats.decode_tok_s:.0f} tok/s")
+          f"{stats.decode_tok_s:.0f} tok/s; backend={stats.backend} "
+          f"recompiles={stats.recompiles}")
+    if stats.schedules is not None:
+        live = {k: v for k, v in stats.schedules.items()
+                if v is not None}
+        print(f"compiled-step schedules: {json.dumps(live)}")
 
     # A direct kernel call shares the same service: the matmul below is
     # dispatched through its own per-shape slot.

@@ -117,6 +117,41 @@ class SSMScanSchedule:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScheduleBundle:
+    """The committed schedules a compiled model step runs with.
+
+    One frozen (hashable) object holding the per-kernel-family schedule
+    for every kernel a model step can hit, so the whole bundle threads
+    through ``jax.jit`` as ONE static argument: a different bundle is a
+    different compiled executable, an identical bundle is a cache hit.
+    ``None`` fields fall back to the kernel's default launch parameters.
+
+    Resolution lives in :meth:`repro.runtime.dispatch.DispatchService.
+    schedule_bundle` (committed winner > registry measurement > offline
+    rank-0); models only consume the bundle.
+    """
+    flash_attention: Optional["FlashAttentionSchedule"] = None
+    decode_attention: Optional["DecodeAttentionSchedule"] = None
+    ssm_scan: Optional["SSMScanSchedule"] = None
+    matmul: Optional["MatmulSchedule"] = None
+    conv2d: Optional["ConvSchedule"] = None
+    sparse_conv: Optional["SparseConvSchedule"] = None
+
+    def get(self, kind: str):
+        """Schedule for a dispatch-kind name (None when unset)."""
+        return getattr(self, kind, None)
+
+    def replace(self, **kw) -> "ScheduleBundle":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> Dict:
+        from repro.core import registry
+        return {f.name: (registry.schedule_to_dict(getattr(self, f.name))
+                         if getattr(self, f.name) is not None else None)
+                for f in dataclasses.fields(self)}
+
+
+@dataclasses.dataclass(frozen=True)
 class SparseConvSchedule:
     """Block-sparse conv launch point: (oc, ic) skip-block shape."""
     block: Tuple[Tuple[str, int], ...]    # hashable {"oc","ic"} dict

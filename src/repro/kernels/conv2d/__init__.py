@@ -1,7 +1,9 @@
 from repro.kernels.conv2d.ops import (conv2d, conv2d_dispatched,
-                                      conv2d_tuned, default_block)
+                                      conv2d_scheduled, conv2d_tuned,
+                                      default_block)
 from repro.kernels.conv2d.ref import conv2d_ref
 from repro.kernels.conv2d.kernel import conv2d_pallas, GRID_AXES
 
-__all__ = ["conv2d", "conv2d_tuned", "conv2d_dispatched", "conv2d_ref",
-           "conv2d_pallas", "default_block", "GRID_AXES"]
+__all__ = ["conv2d", "conv2d_tuned", "conv2d_scheduled",
+           "conv2d_dispatched", "conv2d_ref", "conv2d_pallas",
+           "default_block", "GRID_AXES"]

@@ -92,6 +92,15 @@ def conv2d_tuned(img: jnp.ndarray, wgt: jnp.ndarray, *,
                   grid_order=sched.grid_order, interpret=interpret)
 
 
+def conv2d_scheduled(img: jnp.ndarray, wgt: jnp.ndarray, *, schedule,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Schedule-as-static-arg entry point: run ``conv2d`` with a
+    committed :class:`~repro.core.schedule.ConvSchedule` (frozen,
+    hashable — the underlying jit keys on its block/grid order)."""
+    return conv2d(img, wgt, block=schedule.block_dict(),
+                  grid_order=schedule.grid_order, interpret=interpret)
+
+
 def conv2d_dispatched(img: jnp.ndarray, wgt: jnp.ndarray, *,
                       service=None, interpret: bool = True) -> jnp.ndarray:
     """`conv2d` through the adaptive dispatch runtime: the process-wide
@@ -113,5 +122,5 @@ def conv2d_dispatched(img: jnp.ndarray, wgt: jnp.ndarray, *,
     return out
 
 
-__all__ = ["conv2d", "conv2d_tuned", "conv2d_dispatched", "conv2d_ref",
-           "default_block"]
+__all__ = ["conv2d", "conv2d_tuned", "conv2d_scheduled",
+           "conv2d_dispatched", "conv2d_ref", "default_block"]

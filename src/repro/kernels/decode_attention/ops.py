@@ -17,6 +17,18 @@ def decode_attention(q, k, v, pos, *, block_kv: int = 256,
                                    interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("schedule", "interpret"))
+def decode_attention_scheduled(q, k, v, pos, *, schedule,
+                               interpret: bool = True):
+    """Schedule-as-static-arg entry point: the compiled decode step
+    threads a committed :class:`~repro.core.schedule.
+    DecodeAttentionSchedule` (frozen, hashable) straight into the
+    launch, so the executable is keyed by the schedule itself."""
+    return decode_attention_pallas(q, k, v, pos,
+                                   block_kv=schedule.block_kv,
+                                   interpret=interpret)
+
+
 def decode_attention_dispatched(q, k, v, pos, *, service=None,
                                 interpret: bool = True):
     """`decode_attention` through the adaptive dispatch runtime: the KV
@@ -36,5 +48,5 @@ def decode_attention_dispatched(q, k, v, pos, *, service=None,
     return out
 
 
-__all__ = ["decode_attention", "decode_attention_dispatched",
-           "decode_attention_ref"]
+__all__ = ["decode_attention", "decode_attention_scheduled",
+           "decode_attention_dispatched", "decode_attention_ref"]

@@ -1,7 +1,8 @@
 from repro.kernels.flash_attention.ops import (
-    flash_attention, flash_attention_dispatched)
+    flash_attention, flash_attention_scheduled, flash_attention_dispatched)
 from repro.kernels.flash_attention.ref import mha_ref
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
-__all__ = ["flash_attention", "flash_attention_dispatched", "mha_ref",
+__all__ = ["flash_attention", "flash_attention_scheduled",
+           "flash_attention_dispatched", "mha_ref",
            "flash_attention_pallas"]

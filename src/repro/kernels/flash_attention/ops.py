@@ -23,6 +23,25 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                   window=window, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("schedule", "causal",
+                                             "window", "interpret"))
+def flash_attention_scheduled(q: jnp.ndarray, k: jnp.ndarray,
+                              v: jnp.ndarray, *, schedule,
+                              causal: bool = True,
+                              window: Optional[int] = None,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Schedule-as-static-arg entry point: a committed
+    :class:`~repro.core.schedule.FlashAttentionSchedule` (frozen,
+    hashable) keys the compiled executable.  Blocks are clamped to the
+    sequence so one schedule serves nearby shapes."""
+    s = q.shape[2]
+    return flash_attention_pallas(q, k, v,
+                                  block_q=min(schedule.block_q, s),
+                                  block_kv=min(schedule.block_kv, s),
+                                  causal=causal, window=window,
+                                  interpret=interpret)
+
+
 def flash_attention_dispatched(q: jnp.ndarray, k: jnp.ndarray,
                                v: jnp.ndarray, *, causal: bool = True,
                                window: Optional[int] = None,
@@ -49,4 +68,5 @@ def flash_attention_dispatched(q: jnp.ndarray, k: jnp.ndarray,
     return out
 
 
-__all__ = ["flash_attention", "flash_attention_dispatched", "mha_ref"]
+__all__ = ["flash_attention", "flash_attention_scheduled",
+           "flash_attention_dispatched", "mha_ref"]

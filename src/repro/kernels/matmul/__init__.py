@@ -1,7 +1,9 @@
 from repro.kernels.matmul.ops import (matmul, matmul_dispatched,
-                                      matmul_tuned, default_block)
+                                      matmul_scheduled, matmul_tuned,
+                                      default_block)
 from repro.kernels.matmul.ref import matmul_ref
 from repro.kernels.matmul.kernel import matmul_pallas, GRID_AXES
 
-__all__ = ["matmul", "matmul_tuned", "matmul_dispatched", "matmul_ref",
-           "matmul_pallas", "default_block", "GRID_AXES"]
+__all__ = ["matmul", "matmul_tuned", "matmul_scheduled",
+           "matmul_dispatched", "matmul_ref", "matmul_pallas",
+           "default_block", "GRID_AXES"]

@@ -74,6 +74,16 @@ def matmul_tuned(a: jnp.ndarray, b: jnp.ndarray, *,
                   resident_rhs=sched.resident_rhs, interpret=interpret)
 
 
+def matmul_scheduled(a: jnp.ndarray, b: jnp.ndarray, *, schedule,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Schedule-as-static-arg entry point: run ``matmul`` with a
+    committed :class:`~repro.core.schedule.MatmulSchedule` (frozen,
+    hashable — the underlying jit keys on its block/grid/residency)."""
+    return matmul(a, b, block=schedule.block_dict(),
+                  grid_order=schedule.grid_order,
+                  resident_rhs=schedule.resident_rhs, interpret=interpret)
+
+
 def matmul_dispatched(a: jnp.ndarray, b: jnp.ndarray, *,
                       service=None, interpret: bool = True) -> jnp.ndarray:
     """`matmul` through the adaptive dispatch runtime (see
@@ -92,5 +102,5 @@ def matmul_dispatched(a: jnp.ndarray, b: jnp.ndarray, *,
     return out
 
 
-__all__ = ["matmul", "matmul_tuned", "matmul_dispatched", "matmul_ref",
-           "default_block"]
+__all__ = ["matmul", "matmul_tuned", "matmul_scheduled",
+           "matmul_dispatched", "matmul_ref", "default_block"]

@@ -1,9 +1,10 @@
 from repro.kernels.sparse_conv.ops import (
-    sparse_conv2d, sparse_conv2d_dispatched, sparse_conv_ref,
-    analyze_weights, BlockSparsity)
+    sparse_conv2d, sparse_conv2d_scheduled, sparse_conv2d_dispatched,
+    sparse_conv_ref, analyze_weights, BlockSparsity)
 from repro.kernels.sparse_conv.kernel import (sparse_conv2d_pallas,
                                               build_block_index)
 
-__all__ = ["sparse_conv2d", "sparse_conv2d_dispatched", "sparse_conv_ref",
+__all__ = ["sparse_conv2d", "sparse_conv2d_scheduled",
+           "sparse_conv2d_dispatched", "sparse_conv_ref",
            "analyze_weights", "BlockSparsity", "sparse_conv2d_pallas",
            "build_block_index"]

@@ -58,6 +58,17 @@ def sparse_conv2d(img: jnp.ndarray, wgt: jnp.ndarray, *,
         block=block, interpret=interpret)
 
 
+def sparse_conv2d_scheduled(img: jnp.ndarray, wgt: jnp.ndarray, *,
+                            schedule,
+                            sparsity: Optional[BlockSparsity] = None,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Schedule-as-static-arg entry point: run ``sparse_conv2d`` with a
+    committed :class:`~repro.core.schedule.SparseConvSchedule` skip-block
+    shape (frozen, hashable)."""
+    return sparse_conv2d(img, wgt, block=schedule.block_dict(),
+                         sparsity=sparsity, interpret=interpret)
+
+
 def sparse_conv2d_dispatched(img: jnp.ndarray, wgt: jnp.ndarray, *,
                              density: Optional[float] = None,
                              service=None,
@@ -90,5 +101,6 @@ def sparse_conv2d_dispatched(img: jnp.ndarray, wgt: jnp.ndarray, *,
     return out
 
 
-__all__ = ["sparse_conv2d", "sparse_conv2d_dispatched", "sparse_conv_ref",
+__all__ = ["sparse_conv2d", "sparse_conv2d_scheduled",
+           "sparse_conv2d_dispatched", "sparse_conv_ref",
            "analyze_weights", "BlockSparsity"]

@@ -1,6 +1,9 @@
-from repro.kernels.ssm_scan.ops import (ssm_scan, ssm_scan_dispatched,
+from repro.kernels.ssm_scan.ops import (ssm_scan, ssm_scan_with_state,
+                                        ssm_scan_scheduled,
+                                        ssm_scan_dispatched,
                                         ssm_scan_ref, traffic_model)
 from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
 
-__all__ = ["ssm_scan", "ssm_scan_dispatched", "ssm_scan_ref",
-           "ssm_scan_pallas", "traffic_model"]
+__all__ = ["ssm_scan", "ssm_scan_with_state", "ssm_scan_scheduled",
+           "ssm_scan_dispatched", "ssm_scan_ref", "ssm_scan_pallas",
+           "traffic_model"]

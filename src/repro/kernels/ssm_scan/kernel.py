@@ -14,6 +14,12 @@ Grid: (batch, Di/BD) — both parallel (independent scans); the sequence
 loop runs *in-kernel* (jax.lax.fori_loop) because the recurrence is
 inherently sequential: this is the one loop the thesis' interchange
 machinery must keep innermost, the same conclusion as for (ky, kx).
+
+The scan carries an explicit initial state and emits the final state, so
+the same kernel covers training (h0 = 0, state discarded), prefill
+(h0 = 0, state becomes the decode cache) and the decode step itself
+(S = 1, h0 = cache) — which is what lets a committed ``SSMScanSchedule``
+reach the compiled serve step.
 """
 from __future__ import annotations
 
@@ -26,10 +32,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref,
-                h_ref, *, seq: int):
+def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+                y_ref, hout_ref, h_ref, *, seq: int):
     """One (batch, Di-block): sequential scan with VMEM-resident state."""
-    h_ref[...] = jnp.zeros_like(h_ref)
+    h_ref[...] = h0_ref[0].astype(jnp.float32)
     a = a_ref[...].astype(jnp.float32)                  # [BD, N]
     dvec = d_ref[...].astype(jnp.float32)               # [BD]
 
@@ -47,30 +53,46 @@ def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref,
         return 0
 
     jax.lax.fori_loop(0, seq, step, 0)
+    hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
 
 
 def ssm_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, b: jnp.ndarray,
                     c: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray, *,
+                    h0: jnp.ndarray = None,
                     block_d: int = 128,
-                    interpret: bool = True) -> jnp.ndarray:
-    """x, dt: [Bt, S, Di]; b, c: [Bt, S, N]; a: [Di, N]; d: [Di]."""
+                    interpret: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, dt: [Bt, S, Di]; b, c: [Bt, S, N]; a: [Di, N]; d: [Di];
+    h0 (optional): [Bt, Di, N] initial state (zeros when omitted).
+    Returns (y [Bt, S, Di], final state [Bt, Di, N] in f32).
+
+    ``block_d`` is clamped to the nearest divisor of Di (same policy as
+    decode_attention's ``block_kv``); tuner candidates are exact
+    divisors, so the clamp only fires for hand-rolled schedules."""
     bt, seq, di = x.shape
     n = b.shape[-1]
     bd = min(block_d, di)
-    assert di % bd == 0, (di, bd)
+    while di % bd:
+        bd //= 2
     grid = (bt, di // bd)
+    if h0 is None:
+        h0 = jnp.zeros((bt, di, n), jnp.float32)
 
     xd_spec = pl.BlockSpec((1, seq, bd), lambda i, j: (i, 0, j))
     bc_spec = pl.BlockSpec((1, seq, n), lambda i, j: (i, 0, 0))
     a_spec = pl.BlockSpec((bd, n), lambda i, j: (j, 0))
     d_spec = pl.BlockSpec((bd,), lambda i, j: (j,))
+    h_spec = pl.BlockSpec((1, bd, n), lambda i, j: (i, j, 0))
 
-    return pl.pallas_call(
+    y, h_out = pl.pallas_call(
         functools.partial(_ssm_kernel, seq=seq),
         grid=grid,
-        in_specs=[xd_spec, xd_spec, bc_spec, bc_spec, a_spec, d_spec],
-        out_specs=xd_spec,
-        out_shape=jax.ShapeDtypeStruct((bt, seq, di), x.dtype),
+        in_specs=[xd_spec, xd_spec, bc_spec, bc_spec, a_spec, d_spec,
+                  h_spec],
+        out_specs=[xd_spec, h_spec],
+        out_shape=[jax.ShapeDtypeStruct((bt, seq, di), x.dtype),
+                   jax.ShapeDtypeStruct((bt, di, n), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
         interpret=interpret,
-    )(x, dt, b, c, a, d)
+    )(x, dt, b, c, a, d, h0)
+    return y, h_out

@@ -14,8 +14,31 @@ from repro.kernels.ssm_scan.ref import ssm_scan_ref
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def ssm_scan(x, dt, b, c, a, d, *, block_d: int = 128,
              interpret: bool = True):
-    return ssm_scan_pallas(x, dt, b, c, a, d, block_d=block_d,
+    y, _ = ssm_scan_pallas(x, dt, b, c, a, d, block_d=block_d,
                            interpret=interpret)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan_with_state(x, dt, b, c, a, d, h0=None, *,
+                        block_d: int = 128, interpret: bool = True):
+    """Fused scan carrying an explicit state: ``h0`` [Bt, Di, N] (zeros
+    when None) in, final state out — the decode-cache form the model
+    step uses.  Returns (y [Bt, S, Di], h_final [Bt, Di, N] f32)."""
+    return ssm_scan_pallas(x, dt, b, c, a, d, h0=h0, block_d=block_d,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "interpret"))
+def ssm_scan_scheduled(x, dt, b, c, a, d, h0=None, *, schedule,
+                       interpret: bool = True):
+    """Schedule-as-static-arg entry point: the compiled model step
+    threads a committed :class:`~repro.core.schedule.SSMScanSchedule`
+    (frozen, hashable) straight into the launch — a different committed
+    schedule is a different executable, same schedule is a jit cache
+    hit."""
+    return ssm_scan_pallas(x, dt, b, c, a, d, h0=h0,
+                           block_d=schedule.block_d, interpret=interpret)
 
 
 def traffic_model(bt: int, seq: int, di: int, n: int,
@@ -50,5 +73,5 @@ def ssm_scan_dispatched(x, dt, b, c, a, d, *, service=None,
     return out
 
 
-__all__ = ["ssm_scan", "ssm_scan_dispatched", "ssm_scan_ref",
-           "traffic_model"]
+__all__ = ["ssm_scan", "ssm_scan_with_state", "ssm_scan_scheduled",
+           "ssm_scan_dispatched", "ssm_scan_ref", "traffic_model"]

@@ -20,6 +20,16 @@ def main() -> None:
                     help="route prefill/decode through the adaptive "
                          "dispatch service (per-shape tune -> select -> "
                          "observe; winners written to the registry)")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "pallas"),
+                    help="'reference' lowers the model through XLA as-is;"
+                         " 'pallas' AOT-compiles prefill/decode with the "
+                         "dispatch service's committed schedules as "
+                         "static arguments (re-AOT on commit, bounded "
+                         "by --max-recompiles)")
+    ap.add_argument("--max-recompiles", type=int, default=1,
+                    help="compile budget: max mid-stream decode re-AOTs "
+                         "after a dispatcher commit")
     args = ap.parse_args()
 
     import jax
@@ -50,12 +60,21 @@ def main() -> None:
             get_dispatch_service
         dispatch = (DispatchService(registry) if registry is not None
                     else get_dispatch_service())
+    if args.backend == "pallas" and dispatch is None:
+        from repro.runtime.dispatch import get_dispatch_service
+        dispatch = get_dispatch_service()
     out, stats = generate(model, params, batch,
                           max_new_tokens=args.new_tokens,
                           temperature=args.temperature,
-                          registry=registry, dispatch=dispatch)
+                          registry=registry, dispatch=dispatch,
+                          backend=args.backend,
+                          max_recompiles=args.max_recompiles)
     print(f"generated {out.shape}; prefill {stats.prefill_s*1e3:.1f}ms; "
-          f"decode {stats.decode_tok_s:.0f} tok/s")
+          f"decode {stats.decode_tok_s:.0f} tok/s; "
+          f"backend={stats.backend} recompiles={stats.recompiles}")
+    if stats.schedules is not None:
+        live = {k: v for k, v in stats.schedules.items() if v is not None}
+        print(f"compiled-step schedules: {live}")
     if dispatch is not None:
         for entry in dispatch.report().values():
             committed = entry["committed"]

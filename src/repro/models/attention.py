@@ -31,14 +31,22 @@ def _mask_bias(s_q: int, s_kv: int, *, causal: bool,
 
 def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               causal: bool = True, window: Optional[int] = None,
-              backend: str = "xla") -> jnp.ndarray:
+              backend: str = "xla",
+              schedule=None) -> jnp.ndarray:
     """q [B,HQ,S,D]; k/v [B,HKV,S,D] -> [B,HQ,S,D] (GQA aware).
 
     Backends: "pallas" (flash kernel, TPU), "xla" (naive reference — S^2
     intermediates), "chunked" (pure-jnp online-softmax over KV blocks —
     the thesis' loop-tiling future work (§7.2) applied to attention; no
-    S^2 HBM tensor, bf16 probs)."""
+    S^2 HBM tensor, bf16 probs).  With ``schedule`` (a committed
+    :class:`~repro.core.schedule.FlashAttentionSchedule`), the pallas
+    backend launches with the tuned blocks instead of defaults."""
     if backend == "pallas":
+        if schedule is not None:
+            from repro.kernels.flash_attention import \
+                flash_attention_scheduled
+            return flash_attention_scheduled(q, k, v, schedule=schedule,
+                                             causal=causal, window=window)
         from repro.kernels.flash_attention import flash_attention
         return flash_attention(q, k, v, causal=causal, window=window)
     if backend == "chunked":
@@ -152,14 +160,34 @@ def cross_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray
 
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, pos: jnp.ndarray, *,
-                     window: Optional[int] = None) -> jnp.ndarray:
+                     window: Optional[int] = None,
+                     backend: str = "xla",
+                     schedule=None) -> jnp.ndarray:
     """One-token attention against a cache.
 
     q [B,HQ,1,D]; caches [B,HKV,S,D]; ``pos`` scalar int32 — current
     position (cache entries at indices > pos are invalid).  For local
     attention the cache is a rolling buffer of size ``window`` and all
     (valid) entries are in range by construction.
+
+    ``backend="pallas"`` routes through the single-query flash-decode
+    kernel — the serving memory roofline — streaming the cache in
+    ``schedule.block_kv`` blocks (a committed
+    :class:`~repro.core.schedule.DecodeAttentionSchedule`) and skipping
+    blocks wholly beyond ``pos``.  The kernel's validity mask
+    (``kpos <= pos``) coincides with the rolling-buffer rule for both
+    ``pos < S`` (partial) and ``pos >= S`` (wrapped: every slot valid),
+    so one code path serves global and windowed caches.
     """
+    if backend == "pallas":
+        if schedule is not None:
+            from repro.kernels.decode_attention import \
+                decode_attention_scheduled
+            return decode_attention_scheduled(q, k_cache, v_cache, pos,
+                                              schedule=schedule)
+        from repro.kernels.decode_attention import \
+            decode_attention as decode_attention_kernel
+        return decode_attention_kernel(q, k_cache, v_cache, pos)
     b, hq, _, d = q.shape
     hkv, s = k_cache.shape[1], k_cache.shape[2]
     group = hq // hkv

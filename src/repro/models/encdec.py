@@ -105,7 +105,7 @@ def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray, *,
 def _decoder_body(carry, lp, cfg: ModelConfig, enc_kv, positions,
                   backend: str, shard_fn: Callable,
                   self_cache: Optional[Dict] = None,
-                  pos=None) -> Tuple[jnp.ndarray, Dict]:
+                  pos=None, schedules=None) -> Tuple[jnp.ndarray, Dict]:
     hd = cfg.resolved_head_dim
     h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
     q, k, v = attn.qkv_project(
@@ -118,7 +118,10 @@ def _decoder_body(carry, lp, cfg: ModelConfig, enc_kv, positions,
     else:
         ck, cv = attn.update_kv_cache(self_cache["k"], self_cache["v"],
                                       k, v, pos)
-        ctx = attn.decode_attention(q, ck, cv, pos)
+        ctx = attn.decode_attention(
+            q, ck, cv, pos, backend=backend,
+            schedule=(schedules.decode_attention
+                      if schedules is not None else None))
         out_kv["k"], out_kv["v"] = ck, cv
     carry = shard_fn(carry + attn.attn_out(ctx, lp["self"]))
 
@@ -221,7 +224,8 @@ def prefill(params: Params, cfg: ModelConfig,
 
 def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
                 tokens: jnp.ndarray, pos: jnp.ndarray, *,
-                shard_fn: Callable = Identity
+                shard_fn: Callable = Identity,
+                backend: str = "xla", schedules=None
                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """One decode token against self+cross caches (encoder already run)."""
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -229,8 +233,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
     def body(carry, inp):
         lp, sc, xc = inp
         carry, kv = _decoder_body(
-            carry, lp, cfg, xc, jnp.full((1,), pos), "xla", shard_fn,
-            self_cache=sc, pos=pos)
+            carry, lp, cfg, xc, jnp.full((1,), pos), backend, shard_fn,
+            self_cache=sc, pos=pos, schedules=schedules)
         return carry, kv
 
     x, new_self = _scan(

@@ -52,38 +52,46 @@ class Model:
 
     # -- functional entry points -------------------------------------
     def loss_fn(self, params, batch, *, backend="xla",
-                shard_fn: Callable = Identity, remat="full"):
+                shard_fn: Callable = Identity, remat="full",
+                schedules=None):
         if self.cfg.family == "audio":
             return encdec.loss_fn(params, self.cfg, batch,
                                   backend=backend, shard_fn=shard_fn,
                                   remat=remat)
         return transformer.loss_fn(params, self.cfg, batch,
                                    backend=backend, shard_fn=shard_fn,
-                                   remat=remat)
+                                   remat=remat, schedules=schedules)
 
     def forward(self, params, batch, *, backend="xla",
-                shard_fn: Callable = Identity):
+                shard_fn: Callable = Identity, schedules=None):
         if self.cfg.family == "audio":
             return encdec.forward(params, self.cfg, batch,
                                   backend=backend, shard_fn=shard_fn)
         return transformer.forward(params, self.cfg, batch,
-                                   backend=backend, shard_fn=shard_fn)
+                                   backend=backend, shard_fn=shard_fn,
+                                   schedules=schedules)
 
     def prefill(self, params, batch, *, backend="xla",
-                shard_fn: Callable = Identity):
+                shard_fn: Callable = Identity, schedules=None):
         if self.cfg.family == "audio":
             return encdec.prefill(params, self.cfg, batch,
                                   backend=backend, shard_fn=shard_fn)
         return transformer.prefill(params, self.cfg, batch,
-                                   backend=backend, shard_fn=shard_fn)
+                                   backend=backend, shard_fn=shard_fn,
+                                   schedules=schedules)
 
     def decode_step(self, params, cache, tokens, pos, *,
-                    shard_fn: Callable = Identity):
+                    shard_fn: Callable = Identity, backend="xla",
+                    schedules=None):
         if self.cfg.family == "audio":
             return encdec.decode_step(params, self.cfg, cache, tokens,
-                                      pos, shard_fn=shard_fn)
+                                      pos, shard_fn=shard_fn,
+                                      backend=backend,
+                                      schedules=schedules)
         return transformer.decode_step(params, self.cfg, cache, tokens,
-                                       pos, shard_fn=shard_fn)
+                                       pos, shard_fn=shard_fn,
+                                       backend=backend,
+                                       schedules=schedules)
 
     def init_cache(self, bsz: int, max_len: int, dtype=None):
         if self.cfg.family == "audio":

@@ -80,10 +80,20 @@ def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
 
 def mamba_block(x: jnp.ndarray, p: Params, *, state: int, conv: int,
                 dt_rank: int,
-                cache: Optional[Dict[str, jnp.ndarray]] = None
+                cache: Optional[Dict[str, jnp.ndarray]] = None,
+                backend: str = "xla",
+                schedule=None
                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """x [B,S,D] -> [B,S,D].  With ``cache`` (decode: S==1) the SSM and
-    conv states are carried and returned updated."""
+    conv states are carried and returned updated.
+
+    ``backend="pallas"`` runs the recurrence through the fused
+    selective-scan kernel (state in VMEM, no [B,S,Di,N] HBM tensors),
+    with the channel block taken from ``schedule`` (a committed
+    :class:`~repro.core.schedule.SSMScanSchedule`) when given.  The
+    kernel carries the decode cache as its explicit initial state, so
+    prefill and per-token decode both consume the tuned block size.
+    """
     bsz, seq, d = x.shape
     d_inner = p["in_proj"].shape[-1] // 2
 
@@ -102,26 +112,47 @@ def mamba_block(x: jnp.ndarray, p: Params, *, state: int, conv: int,
         + p["dt_bias"].astype(jnp.float32))             # [B,S,di]
     a = -jnp.exp(p["A_log"].astype(jnp.float32))        # [di,N]
 
-    da = jnp.exp(dt[..., None] * a)                     # [B,S,di,N]
-    dbx = (dt[..., None] * bmat[:, :, None, :]
-           * xc.astype(jnp.float32)[..., None])         # [B,S,di,N]
-
-    if cache is None:
-        h = linear_scan(da, dbx, axis=1)
-        # Final state (consumed by prefill; ignored by training).
-        new_cache = {"ssm": h[:, -1].astype(x.dtype),
-                     "conv": xin[:, -(conv - 1):, :]}
-    else:
-        h_prev = cache["ssm"].astype(jnp.float32)       # [B,di,N]
-        h = da[:, 0] * h_prev + dbx[:, 0]
+    if cache is not None:
         new_conv = jnp.concatenate(
             [conv_state[:, 1:], xin.astype(conv_state.dtype)], axis=1)
-        new_cache = {"ssm": h.astype(cache["ssm"].dtype),
-                     "conv": new_conv}
-        h = h[:, None]                                   # [B,1,di,N]
 
-    y = jnp.einsum("bsdn,bsn->bsd", h, cmat)            # [B,S,di]
-    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    if backend == "pallas":
+        from repro.kernels.ssm_scan import (ssm_scan_scheduled,
+                                            ssm_scan_with_state)
+        h0 = (cache["ssm"].astype(jnp.float32)
+              if cache is not None else None)
+        if schedule is not None:
+            y, h_last = ssm_scan_scheduled(xc, dt, bmat, cmat, a, p["D"],
+                                           h0, schedule=schedule)
+        else:
+            y, h_last = ssm_scan_with_state(xc, dt, bmat, cmat, a,
+                                            p["D"], h0)
+        if cache is None:
+            new_cache = {"ssm": h_last.astype(x.dtype),
+                         "conv": xin[:, -(conv - 1):, :]}
+        else:
+            new_cache = {"ssm": h_last.astype(cache["ssm"].dtype),
+                         "conv": new_conv}
+        y = y.astype(jnp.float32)
+    else:
+        da = jnp.exp(dt[..., None] * a)                 # [B,S,di,N]
+        dbx = (dt[..., None] * bmat[:, :, None, :]
+               * xc.astype(jnp.float32)[..., None])     # [B,S,di,N]
+
+        if cache is None:
+            h = linear_scan(da, dbx, axis=1)
+            # Final state (consumed by prefill; ignored by training).
+            new_cache = {"ssm": h[:, -1].astype(x.dtype),
+                         "conv": xin[:, -(conv - 1):, :]}
+        else:
+            h_prev = cache["ssm"].astype(jnp.float32)   # [B,di,N]
+            h = da[:, 0] * h_prev + dbx[:, 0]
+            new_cache = {"ssm": h.astype(cache["ssm"].dtype),
+                         "conv": new_conv}
+            h = h[:, None]                               # [B,1,di,N]
+
+        y = jnp.einsum("bsdn,bsn->bsd", h, cmat)        # [B,S,di]
+        y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
     y = y * jax.nn.silu(z.astype(jnp.float32))
     out = dense(y.astype(x.dtype), p["out_proj"])
     return out, new_cache

@@ -137,7 +137,8 @@ def init_params(cfg: ModelConfig, rng: jax.Array
 def _attn_body(x: jnp.ndarray, lp: Params, cfg: ModelConfig,
                positions: jnp.ndarray, *, causal: bool,
                window: Optional[int], backend: str,
-               shard_fn: Callable) -> Tuple[jnp.ndarray, Dict]:
+               shard_fn: Callable, schedule=None
+               ) -> Tuple[jnp.ndarray, Dict]:
     """One transformer layer; returns (x, {kv for cache assembly, aux})."""
     hd = cfg.resolved_head_dim
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
@@ -146,7 +147,7 @@ def _attn_body(x: jnp.ndarray, lp: Params, cfg: ModelConfig,
         positions=positions, rope_theta=cfg.rope_theta,
         qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
     ctx = attn.attention(q, k, v, causal=causal, window=window,
-                         backend=backend)
+                         backend=backend, schedule=schedule)
     x = x + attn.attn_out(ctx, lp["attn"])
     x = shard_fn(x)
 
@@ -164,11 +165,13 @@ def _attn_body(x: jnp.ndarray, lp: Params, cfg: ModelConfig,
 
 
 def _mamba_body(x: jnp.ndarray, lp: Params, cfg: ModelConfig,
-                shard_fn: Callable) -> jnp.ndarray:
+                shard_fn: Callable, backend: str = "xla",
+                schedule=None) -> jnp.ndarray:
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
     y, _ = ssm_mod.mamba_block(h, lp["mamba"], state=cfg.ssm_state,
                                conv=cfg.ssm_conv,
-                               dt_rank=cfg.resolved_dt_rank)
+                               dt_rank=cfg.resolved_dt_rank,
+                               backend=backend, schedule=schedule)
     return shard_fn(x + y)
 
 
@@ -199,19 +202,28 @@ def forward(params: Params, cfg: ModelConfig,
             backend: str = "xla",
             shard_fn: Callable = Identity,
             remat: bool = True,
-            collect_kv: bool = False
+            collect_kv: bool = False,
+            schedules=None
             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-    """Teacher-forced logits [B, S, V] (+ aux dict: moe aux loss, kv)."""
+    """Teacher-forced logits [B, S, V] (+ aux dict: moe aux loss, kv).
+
+    ``schedules`` (a :class:`~repro.core.schedule.ScheduleBundle`)
+    carries the committed kernel schedules the pallas backend launches
+    with; None fields (or ``schedules=None``) use kernel defaults."""
     x = embed_inputs(params, cfg, batch)
     bsz, seq, _ = x.shape
     positions = jnp.arange(seq)
     x = shard_fn(x)
 
+    fa_sched = (schedules.flash_attention if schedules is not None
+                else None)
+    ssm_sched = schedules.ssm_scan if schedules is not None else None
     extras: Dict[str, Any] = {}
 
     if cfg.family == "ssm":
         def body(carry, lp):
-            return _mamba_body(carry, lp, cfg, shard_fn), None
+            return _mamba_body(carry, lp, cfg, shard_fn, backend,
+                               ssm_sched), None
         body = _remat(body, remat)
         x, _ = _scan(body, x, params["layers"])
     elif cfg.family == "hybrid":
@@ -226,7 +238,8 @@ def forward(params: Params, cfg: ModelConfig,
                 else:
                     carry, kv = _attn_body(
                         carry, lp, cfg, positions, causal=True,
-                        window=window, backend=backend, shard_fn=shard_fn)
+                        window=window, backend=backend, shard_fn=shard_fn,
+                        schedule=fa_sched)
                     kvs[f"b{i}"] = {"k": kv["k"], "v": kv["v"]}
             return carry, (kvs if collect_kv else None)
         gb = _remat(group_body, remat)
@@ -241,7 +254,7 @@ def forward(params: Params, cfg: ModelConfig,
             else:
                 x, kv = _attn_body(x, lp, cfg, positions, causal=True,
                                    window=window, backend=backend,
-                                   shard_fn=shard_fn)
+                                   shard_fn=shard_fn, schedule=fa_sched)
                 if collect_kv:
                     tail_kv[f"b{i}"] = {"k": kv["k"], "v": kv["v"]}
         extras["tail_kv"] = tail_kv
@@ -249,7 +262,7 @@ def forward(params: Params, cfg: ModelConfig,
         def body(carry, lp):
             carry, kv = _attn_body(carry, lp, cfg, positions, causal=True,
                                    window=None, backend=backend,
-                                   shard_fn=shard_fn)
+                                   shard_fn=shard_fn, schedule=fa_sched)
             ys = {"aux": kv["aux"]}
             if collect_kv:
                 ys["k"] = kv["k"]
@@ -274,9 +287,11 @@ def forward(params: Params, cfg: ModelConfig,
 def loss_fn(params: Params, cfg: ModelConfig,
             batch: Dict[str, jnp.ndarray], *,
             backend: str = "xla", shard_fn: Callable = Identity,
-            remat="full") -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+            remat="full", schedules=None
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     logits, extras = forward(params, cfg, batch, backend=backend,
-                             shard_fn=shard_fn, remat=remat)
+                             shard_fn=shard_fn, remat=remat,
+                             schedules=schedules)
     loss, denom = softmax_xent(logits, batch["labels"])
     metrics = {"xent": loss, "tokens": denom}
     if "aux" in extras:
@@ -341,7 +356,8 @@ def init_cache(cfg: ModelConfig, bsz: int, max_len: int,
 # Decode step (serve_step)
 # ---------------------------------------------------------------------------
 
-def _attn_decode(x, lp, cache, cfg, pos, window):
+def _attn_decode(x, lp, cache, cfg, pos, window, backend="xla",
+                 schedule=None):
     hd = cfg.resolved_head_dim
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
     q, k, v = attn.qkv_project(
@@ -350,7 +366,8 @@ def _attn_decode(x, lp, cache, cfg, pos, window):
         qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
     ck, cv = attn.update_kv_cache(cache["k"], cache["v"], k, v, pos,
                                   window=window)
-    ctx = attn.decode_attention(q, ck, cv, pos, window=window)
+    ctx = attn.decode_attention(q, ck, cv, pos, window=window,
+                                backend=backend, schedule=schedule)
     x = x + attn.attn_out(ctx, lp["attn"])
     h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
     if cfg.n_experts:
@@ -364,12 +381,23 @@ def _attn_decode(x, lp, cache, cfg, pos, window):
 
 def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
                 tokens: jnp.ndarray, pos: jnp.ndarray, *,
-                shard_fn: Callable = Identity
+                shard_fn: Callable = Identity,
+                backend: str = "xla", schedules=None
                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """One decode step.  tokens [B, 1] int32; pos scalar int32.
-    Returns (logits [B, 1, V], new cache)."""
+    Returns (logits [B, 1, V], new cache).
+
+    ``backend="pallas"`` runs the per-token cache attention (or the
+    fused SSM update) through the Pallas serving kernels, launched with
+    the committed schedules in ``schedules`` (a
+    :class:`~repro.core.schedule.ScheduleBundle`) — the compiled step
+    *is* the tuner's output."""
     x = jnp.take(params["embed"], tokens, axis=0)
     x = shard_fn(x)
+
+    da_sched = (schedules.decode_attention if schedules is not None
+                else None)
+    ssm_sched = schedules.ssm_scan if schedules is not None else None
 
     if cfg.family == "ssm":
         def body(carry, inp):
@@ -377,7 +405,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
             h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
             y, nc = ssm_mod.mamba_block(
                 h, lp["mamba"], state=cfg.ssm_state, conv=cfg.ssm_conv,
-                dt_rank=cfg.resolved_dt_rank, cache=lc)
+                dt_rank=cfg.resolved_dt_rank, cache=lc,
+                backend=backend, schedule=ssm_sched)
             return carry + y, nc
         x, new_layers = _scan(body, x,
                                      (params["layers"], cache["layers"]))
@@ -397,7 +426,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
                     h = rmsnorm(carry, lp["ln2"], cfg.norm_eps)
                     carry = carry + mlp(h, lp["mlp"], cfg.mlp_type)
                 else:
-                    carry, nc = _attn_decode(carry, lp, lc, cfg, pos, win)
+                    carry, nc = _attn_decode(carry, lp, lc, cfg, pos, win,
+                                             backend, da_sched)
                 ncs[f"b{i}"] = nc
             return carry, ncs
         x, new_groups = _scan(gbody, x,
@@ -414,13 +444,15 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
                 h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
                 x = x + mlp(h, lp["mlp"], cfg.mlp_type)
             else:
-                x, nc = _attn_decode(x, lp, lc, cfg, pos, win)
+                x, nc = _attn_decode(x, lp, lc, cfg, pos, win,
+                                     backend, da_sched)
             new_tail[f"b{i}"] = nc
         new_cache = {"groups": new_groups, "tail": new_tail}
     else:
         def body(carry, inp):
             lp, lc = inp
-            carry, nc = _attn_decode(carry, lp, lc, cfg, pos, None)
+            carry, nc = _attn_decode(carry, lp, lc, cfg, pos, None,
+                                     backend, da_sched)
             return carry, nc
         x, new_layers = _scan(body, x,
                                      (params["layers"], cache["layers"]))
@@ -458,13 +490,18 @@ def _window_cache(k: jnp.ndarray, seq: int, win: int) -> jnp.ndarray:
 
 def prefill(params: Params, cfg: ModelConfig,
             batch: Dict[str, jnp.ndarray], *,
-            backend: str = "xla", shard_fn: Callable = Identity
+            backend: str = "xla", shard_fn: Callable = Identity,
+            schedules=None
             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Run the full prompt; return (logits [B,S,V], decode caches filled
     up to S).  Attention families collect per-layer K/V; recurrent
     families capture final scan states; hybrid collects both (windowed
-    K/V in rolling-slot order)."""
+    K/V in rolling-slot order).  ``schedules`` carries the committed
+    kernel schedules for the pallas backend (see :func:`forward`)."""
     seq = batch["tokens"].shape[1]
+    fa_sched = (schedules.flash_attention if schedules is not None
+                else None)
+    ssm_sched = schedules.ssm_scan if schedules is not None else None
     if cfg.family == "vlm":
         seq += cfg.num_image_tokens
     if cfg.family == "ssm":
@@ -476,7 +513,9 @@ def prefill(params: Params, cfg: ModelConfig,
             y, st = ssm_mod.mamba_block(h, lp["mamba"],
                                         state=cfg.ssm_state,
                                         conv=cfg.ssm_conv,
-                                        dt_rank=cfg.resolved_dt_rank)
+                                        dt_rank=cfg.resolved_dt_rank,
+                                        backend=backend,
+                                        schedule=ssm_sched)
             return shard_fn(carry + y), st
         x, states = _scan(body, x, params["layers"])
         logits = _head(params, cfg, x)
@@ -505,7 +544,7 @@ def prefill(params: Params, cfg: ModelConfig,
                     carry, kv = _attn_body(
                         carry, lp, cfg, positions, causal=True,
                         window=mask_win, backend=backend,
-                        shard_fn=shard_fn)
+                        shard_fn=shard_fn, schedule=fa_sched)
                     states[f"b{i}"] = {
                         "k": _window_cache(kv["k"], seq, win),
                         "v": _window_cache(kv["v"], seq, win)}
@@ -525,7 +564,7 @@ def prefill(params: Params, cfg: ModelConfig,
             else:
                 x, kv = _attn_body(x, lp, cfg, positions, causal=True,
                                    window=mask_win, backend=backend,
-                                   shard_fn=shard_fn)
+                                   shard_fn=shard_fn, schedule=fa_sched)
                 tail_states[f"b{i}"] = {
                     "k": _window_cache(kv["k"], seq, win),
                     "v": _window_cache(kv["v"], seq, win)}
@@ -534,7 +573,7 @@ def prefill(params: Params, cfg: ModelConfig,
 
     logits, extras = forward(params, cfg, batch, backend=backend,
                              shard_fn=shard_fn, collect_kv=True,
-                             remat=False)
+                             remat=False, schedules=schedules)
     kv = extras["kv"]
     # kv["k"]: [L, B, HKV, S, hd]
     return logits, {"layers": {"k": kv["k"], "v": kv["v"]}}

@@ -282,6 +282,44 @@ class DispatchService:
         skey = self.resolve(kind, problem, elem_bytes)
         return self.selector.committed(skey)
 
+    def committed_or_best(self, kind: str, problem: Dict[str, Any],
+                          elem_bytes: int = 2) -> Any:
+        """The schedule a compiled step should run with, in priority
+        order: this process' committed winner > the registry's persisted
+        measured winner (what an earlier process/host committed) > the
+        offline rank-0 candidate.  Never None: a cold start still gets
+        the cost model's best guess."""
+        skey = self.resolve(kind, problem, elem_bytes)
+        committed = self.selector.committed(skey)
+        if committed is not None:
+            return committed
+        slot = self._slots[skey]
+        rec = self.registry.get(slot.registry_key)
+        if rec is not None and rec.measured:
+            try:
+                sched = reg.schedule_from_dict(rec.measured["best"])
+            except (KeyError, ValueError, TypeError):
+                sched = None
+            if sched is not None:
+                return sched
+        return slot.candidates[0]
+
+    def schedule_bundle(self, problems, elem_bytes: int = 2):
+        """Resolve a :class:`~repro.core.schedule.ScheduleBundle` for a
+        set of ``(kind, problem)`` pairs (e.g. the values of
+        ``serve_loop.serve_dispatch_problems``): each named field is the
+        :meth:`committed_or_best` schedule for its shape.  The bundle is
+        frozen/hashable — it threads through ``jax.jit`` as one static
+        argument, so the compiled step is keyed by the schedules it
+        runs."""
+        from repro.core.schedule import ScheduleBundle
+        fields = {}
+        for kind, problem in problems:
+            if kind in ScheduleBundle.__dataclass_fields__:
+                fields[kind] = self.committed_or_best(kind, problem,
+                                                      elem_bytes)
+        return ScheduleBundle(**fields)
+
     def candidates(self, kind: str, problem: Dict[str, Any],
                    elem_bytes: int = 2) -> List[Any]:
         skey = self.resolve(kind, problem, elem_bytes)

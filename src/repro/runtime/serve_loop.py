@@ -9,12 +9,24 @@ registry-backed top-K candidates across the first steps, commits the
 measured argmin once step times are steady, and writes the winner (with
 its measured step time) back to the tuning registry — so the shapes this
 deployment actually serves tune themselves.
+
+``backend="pallas"`` closes the loop: the prefill and decode steps are
+AOT-compiled with a :class:`~repro.core.schedule.ScheduleBundle` —
+resolved per shape from the dispatch service (committed winner >
+registry measurement > offline rank-0) — threaded through the model as
+a static argument, so the committed schedule IS the launch configuration
+of the compiled step.  When the dispatcher commits a new winner
+mid-stream, the decode step is re-AOT'd once with the new bundle
+(recompile-on-commit), bounded by ``max_recompiles`` so a serving loop
+can never churn compile time; prefill picks up new commits on the next
+call, where the bundle is re-resolved.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +41,17 @@ class ServeStats:
     prefill_s: float
     decode_s: float
     tokens_generated: int
+    backend: str = "reference"
+    # recompile-on-commit accounting (pallas backend): how many times the
+    # decode step was re-AOT'd mid-stream, the wall time those re-AOTs
+    # cost (excluded from decode_s so the throughput numbers and the CI
+    # perf gate measure steps, not XLA), and the schedules the final
+    # executables ran with (serialised ScheduleBundle fields; on a kind
+    # collision — SSM prefill and decode are both "ssm_scan" — the
+    # decode entry wins, since decode dominates serving).
+    recompiles: int = 0
+    recompile_s: float = 0.0
+    schedules: Optional[Dict[str, Any]] = None
 
     @property
     def decode_tok_s(self) -> float:
@@ -72,6 +95,8 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
              rng: Optional[jax.Array] = None,
              registry: Optional[reg.TuningRegistry] = None,
              dispatch=None,
+             backend: str = "reference",
+             max_recompiles: int = 1,
              ) -> tuple[np.ndarray, ServeStats]:
     """Greedy (or sampled) continuation of a batch of prompts.
 
@@ -83,24 +108,54 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
     given, the prefill and each decode step are measured per-step and
     fed to the per-shape adaptive scheduler, which commits the measured
     winner back to its registry.
+
+    ``backend``: "reference" (XLA-lowered jnp kernels — the PR-3
+    behaviour) or "pallas", which compiles the prefill and decode steps
+    with the dispatch service's :class:`ScheduleBundle` as a static
+    argument so committed decode_attention/ssm_scan schedules change the
+    executed code.  While candidates are still being probed, the step
+    runs the bundle's best-known schedule; when the dispatcher commits a
+    different winner, the decode step is re-AOT'd with the new bundle —
+    at most ``max_recompiles`` times per call (the compile-budget
+    guard).  Note the probing semantics in pallas mode: every probe
+    observation times the *deployed* executable (the bundle's schedule),
+    not the round-robined candidate it is attributed to — the commit is
+    therefore a traffic-level signal that only reorders the cost model's
+    top-K (bounded downside), and with a warm registry the bundle
+    already starts at the fleet's measured winner so no recompile
+    happens at all.  Per-candidate probing executables are a ROADMAP
+    direction.
     """
     cfg = model.cfg
     bsz, prompt_len = batch["tokens"].shape
     total = prompt_len + max_new_tokens
     if cfg.family == "vlm":
         total += cfg.num_image_tokens
+    pallas = backend == "pallas"
+    model_backend = "pallas" if pallas else "xla"
 
     problems = (serve_dispatch_problems(cfg, bsz, prompt_len, total)
                 if dispatch is not None else {})
+    prefill_bundle = decode_bundle = None
     if dispatch is not None:
         # Resolve both shapes up front: warm registries answer with zero
         # cost-model evaluations; cold ones pay one batch sweep here,
         # not inside the timed loop.
         for kind, problem in problems.values():
             dispatch.resolve(kind, problem)
+        if pallas:
+            # One bundle per role: SSM prefill and decode share the
+            # kernel kind ("ssm_scan") but are different shapes with
+            # independently committed winners, so a single merged
+            # bundle would let one silently shadow the other.
+            prefill_bundle = dispatch.schedule_bundle(
+                [problems["prefill"]])
+            decode_bundle = dispatch.schedule_bundle(
+                [problems["decode"]])
         dispatch.propose(*problems["prefill"])
 
-    prefill_fn = jax.jit(model.prefill)
+    prefill_fn = jax.jit(functools.partial(
+        model.prefill, backend=model_backend, schedules=prefill_bundle))
     try:
         # AOT-compile outside the timed region: the dispatch observation
         # (and prefill_s) should measure the step, not XLA compilation —
@@ -128,8 +183,6 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
     jax.block_until_ready(cache)
     prefill_s = time.time() - t0
 
-    step_jit = jax.jit(model.decode_step)
-
     def pick(lg, key):
         if temperature <= 0.0:
             return jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
@@ -142,24 +195,36 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
     out: List[np.ndarray] = [np.asarray(tok)]
     pos0 = prompt_len + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
 
-    if max_new_tokens > 1:
-        try:
-            # Same AOT treatment as prefill: keep XLA compilation out of
-            # the first decode step's timing (it would otherwise be
-            # attributed to the dispatcher's first candidate).
-            step_jit = step_jit.lower(params, cache, tok[:, None],
-                                      jnp.int32(pos0)).compile()
-        except Exception:  # pragma: no cover - AOT unsupported
-            pass
+    def compile_step(b):
+        """AOT decode step for one ScheduleBundle; a changed bundle is a
+        different executable (the bundle is the jit static arg)."""
+        fn = jax.jit(functools.partial(model.decode_step,
+                                       backend=model_backend,
+                                       schedules=b))
+        if max_new_tokens > 1:
+            try:
+                # Same AOT treatment as prefill: keep XLA compilation
+                # out of the decode-step timings (a compile-inflated
+                # first probe would poison the dispatcher's medians).
+                fn = fn.lower(params, cache, tok[:, None],
+                              jnp.int32(pos0)).compile()
+            except Exception:  # pragma: no cover - AOT unsupported
+                pass
+        return fn
+
+    step_fn = compile_step(decode_bundle)
+    recompiles = 0
+    recompile_s = 0.0
+    dec = problems.get("decode")
 
     t1 = time.time()
     for i in range(max_new_tokens - 1):
         if dispatch is not None:
-            kind, problem = problems["decode"]
+            kind, problem = dec
             dispatch.propose(kind, problem)
             t_step = time.perf_counter()
-        lg, cache = step_jit(params, cache, tok[:, None],
-                             jnp.int32(pos0 + i))
+        lg, cache = step_fn(params, cache, tok[:, None],
+                            jnp.int32(pos0 + i))
         rng, sub = jax.random.split(rng)
         tok = pick(lg, sub)
         out.append(np.asarray(tok))
@@ -167,10 +232,41 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
             # np.asarray above synchronised the step; feed its wall time
             # to the per-shape scheduler.
             dispatch.observe(kind, problem, time.perf_counter() - t_step)
+            if pallas and recompiles < max_recompiles:
+                committed = dispatch.committed(kind, problem)
+                if (committed is not None
+                        and committed != decode_bundle.get(kind)):
+                    # Recompile-on-commit: the dispatcher just settled
+                    # on a different winner than the step was compiled
+                    # with — re-AOT once so the remaining decode steps
+                    # run it.  The budget guard means a serving loop can
+                    # never thrash compile time, and since a commit is
+                    # final, the new executable matches all later
+                    # commits (no churn).  The re-AOT wall time is kept
+                    # out of decode_s: throughput (and the CI-gated
+                    # pallas-vs-reference ratio) must measure steps,
+                    # not XLA compilation.
+                    decode_bundle = decode_bundle.replace(
+                        **{kind: committed})
+                    t_c = time.perf_counter()
+                    step_fn = compile_step(decode_bundle)
+                    recompile_s += time.perf_counter() - t_c
+                    recompiles += 1
     jax.block_until_ready(tok)
-    decode_s = time.time() - t1
+    decode_s = time.time() - t1 - recompile_s
+    report = None
+    if prefill_bundle is not None:
+        report = {k: v for k, v in prefill_bundle.to_dict().items()
+                  if v is not None}
+        report.update({k: v for k, v
+                       in decode_bundle.to_dict().items()
+                       if v is not None})
+        base = {k: None for k in decode_bundle.to_dict()}
+        report = {**base, **report}
     stats = ServeStats(prefill_s=prefill_s, decode_s=decode_s,
-                       tokens_generated=bsz * max_new_tokens)
+                       tokens_generated=bsz * max_new_tokens,
+                       backend=backend, recompiles=recompiles,
+                       recompile_s=recompile_s, schedules=report)
     if registry is not None:
         key = reg.RegistryKey.make(
             "serve_decode",

@@ -51,8 +51,14 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig,
                     lr_fn: Callable, *, backend: str = "xla",
                     shard_fn: Callable = Identity,
                     remat="full", microbatches: int = 1,
-                    grad_shard_fn: Callable = Identity) -> Callable:
+                    grad_shard_fn: Callable = Identity,
+                    schedules=None) -> Callable:
     """(params, opt_state, batch) -> (params', opt_state', metrics).
+
+    ``schedules`` (a :class:`~repro.core.schedule.ScheduleBundle`) is
+    closed over as a compile-time constant: with ``backend="pallas"``
+    the committed kernel schedules become the train step's launch
+    parameters.
 
     ``microbatches > 1`` splits the batch and accumulates gradients over a
     scan — the live-activation set shrinks by the microbatch factor (the
@@ -64,7 +70,8 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig,
     def grad_of(params, batch):
         def lossf(p):
             return model.loss_fn(p, batch, backend=backend,
-                                 shard_fn=shard_fn, remat=remat)
+                                 shard_fn=shard_fn, remat=remat,
+                                 schedules=schedules)
         return jax.value_and_grad(lossf, has_aux=True)(params)
 
     def train_step(params, opt_state: AdamWState, batch):
@@ -125,12 +132,25 @@ class Trainer:
         # traffic tunes the same record serving and kernel calls consult.
         self.dispatch = None
         self._gemm_problem: Optional[Dict[str, int]] = None
+        schedules = None
         if self.registry is not None:
             from repro.runtime.dispatch import DispatchService
             self.dispatch = DispatchService(self.registry)
             self._gemm_problem = {
                 "m": data_cfg.global_batch * data_cfg.seq_len,
                 "n": model.cfg.d_ff, "k": model.cfg.d_model}
+            if cfg.backend == "pallas":
+                # The committed (or best-known) schedule for the model's
+                # training kernel shape becomes the compiled step's
+                # launch configuration — same resolution the serve loop
+                # uses, so train and serve consult one record.
+                from repro.runtime.serve_loop import \
+                    serve_dispatch_problems
+                problem = serve_dispatch_problems(
+                    model.cfg, data_cfg.global_batch, data_cfg.seq_len,
+                    data_cfg.seq_len)["prefill"]
+                schedules = self.dispatch.schedule_bundle([problem])
+        self.schedules = schedules
         self.history: List[Dict[str, float]] = []
 
         lr_fn = functools.partial(
@@ -141,7 +161,8 @@ class Trainer:
             shard_fn = shd.make_activation_shard_fn(mesh, self.rules)
         self._step_fn = make_train_step(model, cfg.opt, lr_fn,
                                         backend=cfg.backend,
-                                        shard_fn=shard_fn)
+                                        shard_fn=shard_fn,
+                                        schedules=schedules)
 
     # -- state ---------------------------------------------------------
     def init_state(self):

@@ -166,16 +166,30 @@ def cmd_serve_report(args) -> int:
             continue
         # Predicted time of the schedule the measurement belongs to (the
         # committed winner may not be the offline rank-0 pick); fall
-        # back to rank 0 for measurement-free records.
+        # back to rank 0 for measurement-free records.  Measurement-only
+        # records (adaptive write-back on shapes offline tuning never
+        # saw) carry no predicted cost at all, and fleet-merged
+        # registries can carry cost dicts from other writers — neither
+        # may crash the report, so every predicted-side access degrades
+        # to "-" instead of raising.
         pred = None
-        costs = rec.value.get("costs") or []
-        scheds = rec.value.get("schedules") or []
-        best = (rec.measured or {}).get("best")
+        value = rec.value if isinstance(rec.value, dict) else {}
+        meas_rec = rec.measured if isinstance(rec.measured, dict) else {}
+        costs = value.get("costs") or []
+        scheds = value.get("schedules") or []
+        best = meas_rec.get("best")
         if costs:
             idx = scheds.index(best) if best in scheds[:len(costs)] else 0
-            pred = reg.cost_from_dict(costs[idx]).time_s
-        meas = (rec.measured or {}).get("time_s")
-        ratio = (meas / pred) if (pred and meas) else None
+            try:
+                pred = float(reg.cost_from_dict(costs[idx]).time_s)
+            except (TypeError, ValueError, KeyError):
+                pred = None
+        meas = meas_rec.get("time_s")
+        if not isinstance(meas, (int, float)):
+            # legacy writers stored the bare time under ``measured``
+            meas = rec.measured if isinstance(rec.measured,
+                                              (int, float)) else None
+        ratio = (meas / pred) if (pred and meas is not None) else None
         measured += meas is not None
         rows += 1
         fmt = lambda v, f: ("-" if v is None else f % v)  # noqa: E731

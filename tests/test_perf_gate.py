@@ -1,0 +1,77 @@
+"""Perf-trend gate (benchmarks/compare.py): direction-aware regression
+rules, absolute guard bands for near-zero baselines, missing-metric
+detection, and the --update baseline refresh used on main."""
+import json
+
+from benchmarks.compare import POLICIES, compare, main, regression
+
+
+def _write(path, metrics, quick=True):
+    payload = {"quick": quick, "metrics": metrics}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f)
+    return str(path)
+
+
+def test_regression_rules_direction_and_bands():
+    # higher-is-better: 50% band on the wall-derived speedup
+    assert regression("sweep.batch_vs_scalar_speedup", 100.0, 49.0)
+    assert regression("sweep.batch_vs_scalar_speedup", 100.0, 51.0) is None
+    # lower-is-better count with absolute band 1
+    assert regression("adaptive.convergence_steps", 6.0, 8.0)
+    assert regression("adaptive.convergence_steps", 6.0, 7.0) is None
+    # zero baseline: the absolute band keeps the gate meaningful
+    assert regression("adaptive.committed_vs_best_gap", 0.0, 0.06)
+    assert regression("adaptive.committed_vs_best_gap", 0.0, 0.04) is None
+    # machine-absolute metrics are never gated
+    assert regression("sweep.cold_wall_time_s", 0.001, 100.0) is None
+    # unknown metrics default to the 10% higher-is-better budget
+    assert regression("future.metric", 10.0, 8.9)
+    assert regression("future.metric", 10.0, 9.1) is None
+    assert all(p.direction in ("higher", "lower") for p in POLICIES.values())
+
+
+def test_compare_pass_fail_and_missing_metric(tmp_path):
+    base = _write(tmp_path / "base.json",
+                  {"adaptive.convergence_steps": 6.0,
+                   "sweep.batch_vs_scalar_speedup": 100.0})
+    ok = _write(tmp_path / "ok.json",
+                {"adaptive.convergence_steps": 6.0,
+                 "sweep.batch_vs_scalar_speedup": 90.0})
+    assert compare(ok, base) == 0
+    regress = _write(tmp_path / "bad.json",
+                     {"adaptive.convergence_steps": 9.0,
+                      "sweep.batch_vs_scalar_speedup": 100.0})
+    assert compare(regress, base) == 1
+    # a bench that stops reporting a gated metric is itself a failure
+    missing = _write(tmp_path / "missing.json",
+                     {"adaptive.convergence_steps": 6.0})
+    assert compare(missing, base) == 1
+    # new metrics are reported but do not fail the gate
+    extra = _write(tmp_path / "extra.json",
+                   {"adaptive.convergence_steps": 6.0,
+                    "sweep.batch_vs_scalar_speedup": 100.0,
+                    "brand.new_metric": 1.0})
+    assert compare(extra, base) == 0
+
+
+def test_compare_update_refreshes_baseline(tmp_path):
+    fresh = _write(tmp_path / "fresh.json",
+                   {"adaptive.convergence_steps": 5.0})
+    baseline = tmp_path / "baseline.json"
+    # --update bootstraps a missing baseline...
+    assert main([fresh, "--baseline", str(baseline), "--update"]) == 0
+    with open(baseline, encoding="utf-8") as f:
+        assert json.load(f)["metrics"]["adaptive.convergence_steps"] == 5.0
+    # ...and rewrites it after a passing run
+    fresh2 = _write(tmp_path / "fresh2.json",
+                    {"adaptive.convergence_steps": 4.0})
+    assert main([fresh2, "--baseline", str(baseline), "--update"]) == 0
+    with open(baseline, encoding="utf-8") as f:
+        assert json.load(f)["metrics"]["adaptive.convergence_steps"] == 4.0
+    # without --update the baseline is left alone
+    fresh3 = _write(tmp_path / "fresh3.json",
+                    {"adaptive.convergence_steps": 4.0})
+    assert main([fresh3, "--baseline", str(baseline)]) == 0
+    with open(baseline, encoding="utf-8") as f:
+        assert json.load(f)["metrics"]["adaptive.convergence_steps"] == 4.0
