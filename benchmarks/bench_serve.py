@@ -1,0 +1,123 @@
+"""ServeSession benchmark (ISSUE 5): a mixed-shape request stream
+through the persistent serving engine.
+
+Drives a 20-request (40 in full mode, over both model families) stream
+of heterogeneous prompts/budgets through :class:`ServeSession` with a
+warm fleet registry (measured decode times injected for every candidate
+bucket, as a `tune sync` round would deliver), so the dispatch-aware
+batcher settles immediately and the cross-request executable cache does
+its job.  Headline numbers land in ``BENCH_serve.json``:
+
+  serve.cache_hit_rate     executable-cache hits/(hits+misses) — CI
+                           gates the >= 0.5 floor and the trend
+  serve.exec_compiles      distinct XLA lowerings the stream paid
+  serve.recompiles         mid-stream re-AOTs (at most one per commit)
+  serve.queue_p50_ms/p95   admission-queue latency percentiles
+  serve.decode_tok_s       fleet decode throughput (machine-absolute)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, is_quick, record_metric
+
+
+def _inject_fleet_measurements(svc, cfg, batch_sizes, classes):
+    """Simulate a warm fleet: persisted measured step times for every
+    candidate decode bucket, strongly favouring the largest batch (so
+    bucket selection is deterministic and the stream exercises cache
+    reuse, not exploration)."""
+    from repro.core import registry as reg
+    from repro.runtime.dispatch import FAMILIES, canonical_problem
+    from repro.runtime.serve_loop import serve_dispatch_problems
+
+    # Small batches are marked orders of magnitude slower than any real
+    # interpret-mode step, so even after the session's own wall-time
+    # observations replace the injected numbers, the largest batch keeps
+    # winning — the stream measures cache reuse, not bucket exploration.
+    times = {1: 20.0, 2: 10.0, 4: 1e-5, 8: 5e-6}
+    for prompt_bucket, total in classes:
+        for b in batch_sizes:
+            kind, problem = serve_dispatch_problems(
+                cfg, b, prompt_bucket, total)["decode"]
+            best = reg.schedule_to_dict(svc.candidates(kind, problem)[0])
+            rkey = FAMILIES[kind].key(canonical_problem(kind, **problem),
+                                      svc.spec, 2)
+            svc.registry.record_measurement(rkey, best, times[b])
+
+
+def _stream(arch: str, n_requests: int) -> dict:
+    from repro.configs import get_config
+    from repro.core import registry as reg
+    from repro.models import build_model
+    from repro.runtime.dispatch import DispatchService
+    from repro.serving import ServeSession
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    svc = DispatchService(reg.TuningRegistry(None))
+    batch_sizes = (1, 2, 4)
+    bucket_lengths = (8, 16, 24)
+    # Two prompt classes (buckets 8 and 16), budgets bucketing to 8.
+    classes = [(8, 16), (16, 24)]
+    _inject_fleet_measurements(svc, cfg, batch_sizes, classes)
+
+    session = ServeSession(model, params, dispatch=svc, backend="pallas",
+                           batch_sizes=batch_sizes,
+                           bucket_lengths=bucket_lengths)
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        plen = (5 + i % 4) if i % 2 == 0 else (11 + i % 5)
+        session.submit(rng.integers(0, cfg.vocab_size, plen),
+                       max_new_tokens=3 + i % 2)
+    results = session.drain()
+    assert len(results) == n_requests
+    return session.stats.to_dict()
+
+
+def run() -> None:
+    archs = ["phi3-mini-3.8b-smoke"]
+    n = 20
+    if not is_quick():
+        archs.append("falcon-mamba-7b-smoke")
+        n = 40
+
+    hits = misses = compiles = recompiles = 0
+    tokens = decode_s = 0.0
+    queue_p50 = queue_p95 = 0.0
+    for arch in archs:
+        st = _stream(arch, n)
+        hits += st["cache"]["hits"]
+        misses += st["cache"]["misses"]
+        compiles += st["cache"]["compiles"]
+        recompiles += st["recompiles"]
+        tokens += st["tokens_generated"]
+        decode_s += st["tokens_generated"] / max(st["decode_tok_s"], 1e-9)
+        queue_p50 = max(queue_p50, st["queue_p50_s"])
+        queue_p95 = max(queue_p95, st["queue_p95_s"])
+        for name, b in st["buckets"].items():
+            emit(f"serve.bucket.{arch}.{name}", 0.0,
+                 f"tok_s={b['tok_s']:.0f};batches={int(b['batches'])}")
+
+    hit_rate = hits / max(hits + misses, 1)
+    tok_s = tokens / max(decode_s, 1e-9)
+    record_metric("serve.cache_hit_rate", hit_rate)
+    record_metric("serve.exec_compiles", float(compiles))
+    record_metric("serve.recompiles", float(recompiles))
+    record_metric("serve.queue_p50_ms", queue_p50 * 1e3)
+    record_metric("serve.queue_p95_ms", queue_p95 * 1e3)
+    record_metric("serve.decode_tok_s", tok_s)
+    emit("serve.cache_hit_rate", hit_rate * 100.0,
+         f"hits={hits};misses={misses};compiles={compiles}")
+    emit("serve.queue_latency", queue_p50 * 1e6,
+         f"p95_us={queue_p95 * 1e6:.0f}")
+    emit("serve.decode_tok_s", tok_s)
+    assert hit_rate >= 0.5, (
+        f"executable-cache hit rate {hit_rate:.2f} < 0.5: the session "
+        f"is re-lowering instead of reusing")
+
+
+if __name__ == "__main__":
+    run()

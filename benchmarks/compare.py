@@ -50,11 +50,20 @@ POLICIES: Dict[str, Policy] = {
     # interpret-mode pallas vs XLA wall ratio swings with jit-cache
     # warmth; gate only on order-of-magnitude drift
     "adaptive.pallas_vs_reference_step_ratio": Policy("lower", rel=2.0),
+    # serving session: hit rate and compile count are deterministic for
+    # a fixed stream — the 10% trend budget applies (ci.yml holds the
+    # 0.5 hard floor on the hit rate)
+    "serve.cache_hit_rate": Policy("higher", abs_band=0.05),
+    "serve.exec_compiles": Policy("lower", abs_band=2.0),
+    "serve.recompiles": Policy("lower", abs_band=2.0),
     # machine-absolute: tracked for the trajectory, never gated
     "sweep.cold_wall_time_s": Policy("lower", gate=False),
     "sweep.scalar_wall_time_s": Policy("lower", gate=False),
     "sweep.evals_per_sec": Policy("higher", gate=False),
     "registry.warm_wall_time_s": Policy("lower", gate=False),
+    "serve.queue_p50_ms": Policy("lower", gate=False),
+    "serve.queue_p95_ms": Policy("lower", gate=False),
+    "serve.decode_tok_s": Policy("higher", gate=False),
 }
 DEFAULT_POLICY = Policy("higher")
 

@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §6):
     bench_validation       Fig 2.3/6.1       fast-vs-exact simulator
     bench_roofline         (TPU adaptation)  dry-run roofline summary
     bench_registry         (persistence)     warm-vs-cold cached tuning
+    bench_serve            (serving session) mixed-stream cache reuse
 
 ``--quick`` (or env REPRO_BENCH_QUICK=1) shrinks every bench to smoke
 size — tiny shapes, truncated design spaces — and any bench failure makes
@@ -38,7 +39,7 @@ import traceback
 MODULES = [
     "loop_orders", "top_candidates", "cache_hierarchy", "parallel",
     "combinations", "sparsity", "tile_swap", "adaptive", "validation",
-    "roofline", "registry",
+    "roofline", "registry", "serve",
 ]
 
 
@@ -55,6 +56,10 @@ def main(argv=None) -> int:
                     help="where to write the adaptive-dispatch metrics "
                          "(convergence steps, committed-vs-best gap; "
                          "'' disables)")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="where to write the serving-session metrics "
+                         "(cache-hit rate, compiles, queue latency "
+                         "percentiles; '' disables)")
     args = ap.parse_args(argv)
     unknown = [b for b in args.benches if b not in MODULES]
     if unknown:
@@ -99,6 +104,18 @@ def main(argv=None) -> int:
                       f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# adaptive metrics written to {args.adaptive_json}",
+              flush=True)
+    # Serving-session headline (executable-cache hit rate, compiles,
+    # queue latency): its own artifact so CI can gate the >= 0.5
+    # cache-hit floor independently.
+    serve = {k: v for k, v in metrics().items()
+             if k.startswith("serve.")}
+    if args.serve_json and serve:
+        with open(args.serve_json, "w", encoding="utf-8") as f:
+            json.dump({"quick": bool(args.quick), "metrics": serve},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# serve metrics written to {args.serve_json}",
               flush=True)
 
     if failures:

@@ -1,14 +1,19 @@
 """Adaptive serving example: a small model end-to-end through the
-dispatch service.
+dispatch service, on the ServeSession API.
 
 Every prefill and decode step is timed and fed to the process-wide
 per-shape scheduler (tune -> select -> observe); the kernels' dispatched
-wrappers consume the same service directly.  At the end the per-shape
-report shows what the traffic taught the registry.
+wrappers consume the same service directly.  The two ``generate`` calls
+share one persistent :class:`ServeSession`, so the second call reuses
+the first call's compiled executables (watch the cache stats).  At the
+end the per-shape report shows what the traffic taught the registry.
 
 Run:  PYTHONPATH=src python examples/serve_adaptive.py
       PYTHONPATH=src python examples/serve_adaptive.py \
           --arch falcon-mamba-7b-smoke --registry /tmp/tuning.jsonl
+
+See ``examples/serve_session.py`` for the full queue -> bucket ->
+cache serving engine over a mixed-shape request stream.
 """
 import argparse
 import json
@@ -22,6 +27,7 @@ from repro.core.registry import TuningRegistry
 from repro.models import build_model
 from repro.runtime.dispatch import DispatchService
 from repro.runtime.serve_loop import generate
+from repro.serving import ServeSession
 
 
 def main():
@@ -56,11 +62,15 @@ def main():
 
     registry = TuningRegistry(args.registry)   # path=None -> in memory
     service = DispatchService(registry)
+    # One persistent session: generate() is a thin client of it, and the
+    # compiled prefill/decode executables live in its cross-request
+    # cache keyed by (arch, bucket, ScheduleBundle, backend).
+    session = ServeSession(model, params, dispatch=service,
+                           backend=args.backend, registry=registry)
 
     out, stats = generate(model, params, batch,
                           max_new_tokens=args.new_tokens,
-                          registry=registry, dispatch=service,
-                          backend=args.backend)
+                          session=session)
     print(f"arch={cfg.name} generated {out.shape}; "
           f"prefill {stats.prefill_s*1e3:.1f}ms, decode "
           f"{stats.decode_tok_s:.0f} tok/s; backend={stats.backend} "
@@ -69,6 +79,15 @@ def main():
         live = {k: v for k, v in stats.schedules.items()
                 if v is not None}
         print(f"compiled-step schedules: {json.dumps(live)}")
+
+    # Same shape again: a pure executable-cache hit (zero compiles).
+    out2, stats2 = generate(model, params, batch,
+                            max_new_tokens=args.new_tokens,
+                            session=session)
+    cache = session.exec_cache.stats()
+    print(f"repeat call: {stats2.decode_tok_s:.0f} tok/s; session cache "
+          f"hits={cache['hits']} misses={cache['misses']} "
+          f"compiles={cache['compiles']}")
 
     # A direct kernel call shares the same service: the matmul below is
     # dispatched through its own per-shape slot.

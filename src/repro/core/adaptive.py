@@ -213,6 +213,29 @@ class AdaptiveSelector(Generic[S]):
         slot = self._slots.get(key)
         return slot.committed if slot else None
 
+    def measured_median(self, key: str) -> Optional[float]:
+        """Best measured step time for a slot: the committed winner's
+        median when committed, otherwise the fastest candidate median
+        observed so far; None before any observation.  Uses the same
+        first-sample-is-warm-up convention as the commit decision in
+        :meth:`observe_at`, so the number consumers (e.g. the serving
+        batcher) see matches what was committed to the registry."""
+        def med(v):
+            return float(np.median(v[1:] if len(v) > 2 else v))
+
+        slot = self._slots.get(key)
+        if slot is None:
+            return None
+        if slot.committed is not None:
+            try:
+                idx = slot.candidates.index(slot.committed)
+            except ValueError:
+                idx = None
+            if idx is not None and slot.samples.get(idx):
+                return med(slot.samples[idx])
+        medians = [med(v) for v in slot.samples.values() if v]
+        return min(medians) if medians else None
+
     def report(self) -> Dict[str, Dict]:
         out = {}
         for key, slot in self._slots.items():

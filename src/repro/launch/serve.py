@@ -2,8 +2,43 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b-smoke \
         --batch 4 --prompt-len 16 --new-tokens 32
+
+Session mode (persistent engine, queue -> bucket -> executable cache):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b-smoke \
+        --session --requests-file requests.jsonl --backend pallas --dispatch
+
+``--requests-file`` is JSON-lines, one request per line:
+``{"prompt_len": 12, "new_tokens": 8}`` (random tokens) or
+``{"tokens": [1,2,3], "new_tokens": 8}``.  Without a file, ``--session``
+synthesises a small mixed-shape stream.
 """
 import argparse
+import json
+
+
+def _load_requests(path, n_default, prompt_len, new_tokens, vocab, rng):
+    if path:
+        reqs = []
+        with open(path, "r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                d = json.loads(line)
+                if "tokens" in d:
+                    toks = d["tokens"]
+                else:
+                    toks = rng.integers(0, vocab,
+                                        int(d["prompt_len"])).tolist()
+                reqs.append((toks, int(d.get("new_tokens", new_tokens))))
+        return reqs
+    # default synthetic mixed-shape stream around the CLI's shape args
+    lens = [max(2, prompt_len // 2), prompt_len,
+            max(3, (3 * prompt_len) // 4), prompt_len * 2]
+    return [(rng.integers(0, vocab, lens[i % len(lens)]).tolist(),
+             max(1, new_tokens // (1 + i % 2)))
+            for i in range(n_default)]
 
 
 def main() -> None:
@@ -30,6 +65,23 @@ def main() -> None:
     ap.add_argument("--max-recompiles", type=int, default=1,
                     help="compile budget: max mid-stream decode re-AOTs "
                          "after a dispatcher commit")
+    ap.add_argument("--session", action="store_true",
+                    help="serve through a persistent ServeSession "
+                         "(admission queue, dispatch-aware bucketing, "
+                         "cross-request executable cache)")
+    ap.add_argument("--requests-file", default=None,
+                    help="JSONL request stream for --session (one "
+                         "{'prompt_len'|'tokens', 'new_tokens'} per "
+                         "line); default: a synthetic mixed stream")
+    ap.add_argument("--num-requests", type=int, default=12,
+                    help="size of the synthetic --session stream when "
+                         "no --requests-file is given")
+    ap.add_argument("--batch-sizes", default="1,2,4,8",
+                    help="allowed continuous-batching batch dims "
+                         "(--session)")
+    ap.add_argument("--cache-capacity", type=int, default=16,
+                    help="LRU bound on cached compiled executables "
+                         "(--session)")
     args = ap.parse_args()
 
     import jax
@@ -63,6 +115,49 @@ def main() -> None:
     if args.backend == "pallas" and dispatch is None:
         from repro.runtime.dispatch import get_dispatch_service
         dispatch = get_dispatch_service()
+
+    if args.session:
+        import numpy as np
+        from repro.serving import ServeSession
+        session = ServeSession(
+            model, params, dispatch=dispatch, backend=args.backend,
+            registry=registry, max_recompiles=args.max_recompiles,
+            cache_capacity=args.cache_capacity,
+            batch_sizes=tuple(int(b) for b in
+                              args.batch_sizes.split(",") if b.strip()),
+            temperature=args.temperature)
+        rng = np.random.default_rng(0)
+        reqs = _load_requests(args.requests_file, args.num_requests,
+                              args.prompt_len, args.new_tokens,
+                              cfg.vocab_size, rng)
+        for toks, budget in reqs:
+            session.submit(toks, max_new_tokens=budget)
+        results = session.drain()
+        for r in results:
+            print(f"{r.request_id}: {len(r.tokens)} tokens via "
+                  f"bucket(b={r.bucket.batch}, p={r.bucket.prompt_len}, "
+                  f"t={r.bucket.total_len}); queued {r.queue_s*1e3:.1f}ms")
+        summary = session.stats.to_dict()
+        print(f"\nsession: {summary['requests']} requests in "
+              f"{summary['batches']} batches; "
+              f"{summary['decode_tok_s']:.0f} tok/s; cache hit rate "
+              f"{summary['cache_hit_rate']:.2f} "
+              f"({summary['cache']['compiles']} compiles, "
+              f"{summary['cache']['evictions']} evictions); re-AOTs "
+              f"{summary['recompiles']}; queue p50/p95 "
+              f"{summary['queue_p50_s']*1e3:.1f}/"
+              f"{summary['queue_p95_s']*1e3:.1f}ms")
+        for name, b in summary["buckets"].items():
+            print(f"  bucket {name}: {b['tok_s']:.0f} tok/s over "
+                  f"{int(b['batches'])} batches")
+        if dispatch is not None:
+            for entry in dispatch.report().values():
+                committed = entry["committed"]
+                print(f"dispatch {entry['kind']}: "
+                      f"obs={entry['observations']} "
+                      f"committed={committed if committed else '(probing)'}")
+        return
+
     out, stats = generate(model, params, batch,
                           max_new_tokens=args.new_tokens,
                           temperature=args.temperature,

@@ -135,3 +135,56 @@ class Model:
 
 def build_model(cfg: ModelConfig) -> Model:
     return Model(cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# Shape-bucket padding helpers (serving sessions)
+# ---------------------------------------------------------------------------
+#
+# A serving session batches heterogeneous prompts by padding them up to a
+# small set of bucket lengths, so the compiled prefill/decode executables
+# are shared across requests instead of re-lowered per prompt length.
+
+def bucket_length(n: int, lengths: Optional[Tuple[int, ...]] = None,
+                  align: int = 8) -> int:
+    """Smallest padded length that fits ``n`` tokens.
+
+    With an explicit ``lengths`` grid, the smallest grid entry >= n
+    (raises if none fits); otherwise the smallest power of two >= n,
+    floored at ``align``.
+    """
+    if n <= 0:
+        raise ValueError(f"cannot bucket a length of {n}")
+    if lengths:
+        fitting = [int(b) for b in lengths if b >= n]
+        if not fitting:
+            raise ValueError(
+                f"no bucket in {sorted(lengths)} fits length {n}")
+        return min(fitting)
+    m = align
+    while m < n:
+        m *= 2
+    return m
+
+
+def left_pad_prompts(prompts, target_len: int, pad_id: int = 0):
+    """Stack variable-length 1-D token prompts into one [B, target_len]
+    int32 array, left-padded with ``pad_id``.
+
+    Left padding keeps every prompt's *last* token at the same position,
+    so a batch of mixed-length prompts shares one decode position
+    counter (the model's ``decode_step`` takes a scalar ``pos``).  Pad
+    tokens do participate in attention — per-sequence masks are a
+    ROADMAP item — so padding trades a bounded numerics change for
+    executable reuse, exactly like real mask-free bucketed serving.
+    """
+    import numpy as np
+    out = np.full((len(prompts), target_len), int(pad_id), dtype=np.int32)
+    for i, p in enumerate(prompts):
+        p = np.asarray(p, dtype=np.int32).reshape(-1)
+        if len(p) > target_len:
+            raise ValueError(
+                f"prompt of length {len(p)} exceeds bucket {target_len}")
+        if len(p):
+            out[i, target_len - len(p):] = p
+    return out

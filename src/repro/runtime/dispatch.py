@@ -320,6 +320,47 @@ class DispatchService:
                                                       elem_bytes)
         return ScheduleBundle(**fields)
 
+    def _measured_for_slot(self, skey: str) -> Optional[float]:
+        """Priority: this process' observed median (committed winner's
+        when committed, else best candidate so far) > the registry's
+        persisted measurement (what another process/host observed) >
+        None (never measured anywhere)."""
+        m = self.selector.measured_median(skey)
+        if m is not None:
+            return m
+        rec = self.registry.get(self._slots[skey].registry_key)
+        if rec is not None and isinstance(rec.measured, dict):
+            t = rec.measured.get("time_s")
+            if isinstance(t, (int, float)):
+                return float(t)
+        return None
+
+    def measured_time(self, kind: str, problem: Dict[str, Any],
+                      elem_bytes: int = 2) -> Optional[float]:
+        """Measured step time (seconds) for a shape, for consumers that
+        schedule *work* rather than kernels (e.g. the serving session's
+        dispatch-aware batcher)."""
+        return self._measured_for_slot(
+            self.resolve(kind, problem, elem_bytes))
+
+    def measured_table(self) -> Dict[str, Dict[str, Any]]:
+        """Per-shape measured-time table — what dispatch-aware batching
+        consumes: ``{slot key: {kind, problem, measured_s,
+        predicted_best_s, observations}}`` over every shape this service
+        has resolved (``measured_s`` None while unmeasured)."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for skey, slot in self._slots.items():
+            m = self._measured_for_slot(skey)
+            out[skey] = {
+                "kind": slot.kind,
+                "problem": dict(slot.problem),
+                "measured_s": m,
+                "predicted_best_s": (min(slot.predicted)
+                                     if slot.predicted else None),
+                "observations": slot.observations,
+            }
+        return out
+
     def candidates(self, kind: str, problem: Dict[str, Any],
                    elem_bytes: int = 2) -> List[Any]:
         skey = self.resolve(kind, problem, elem_bytes)

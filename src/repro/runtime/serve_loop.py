@@ -17,16 +17,21 @@ registry measurement > offline rank-0) — threaded through the model as
 a static argument, so the committed schedule IS the launch configuration
 of the compiled step.  When the dispatcher commits a new winner
 mid-stream, the decode step is re-AOT'd once with the new bundle
-(recompile-on-commit), bounded by ``max_recompiles`` so a serving loop
-can never churn compile time; prefill picks up new commits on the next
-call, where the bundle is re-resolved.
+(recompile-on-commit), bounded by ``max_recompiles``.
+
+Since the ServeSession subsystem (``repro.serving``), :func:`generate`
+is a thin single-request client: the prefill/decode step functions live
+behind the session's cross-request executable cache
+(:class:`~repro.serving.cache.ExecutableCache`), so passing a persistent
+``session=`` amortises compiles, re-AOTs, and bundle resolution across
+calls, while the default (an ephemeral session per call) reproduces the
+standalone behaviour exactly.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,15 +95,39 @@ def serve_dispatch_problems(cfg, bsz: int, prompt_len: int, total: int,
     }
 
 
+@functools.lru_cache(maxsize=512)
+def resolve_bundle_report(prefill_bundle, decode_bundle
+                          ) -> Dict[str, Any]:
+    """Serialised ``ServeStats.schedules`` for a (prefill, decode)
+    bundle pair — the decode entry wins a kind collision.
+
+    Memoized on the frozen bundles: serving sessions resolve the same
+    pair for every request of a bucket, and re-serialising every
+    schedule per ``generate`` call was profiled waste on short decode
+    budgets (the ISSUE-5 fix).  Callers copy before mutating.
+    """
+    report = {k: v for k, v in prefill_bundle.to_dict().items()
+              if v is not None}
+    report.update({k: v for k, v in decode_bundle.to_dict().items()
+                   if v is not None})
+    base = {k: None for k in decode_bundle.to_dict()}
+    return {**base, **report}
+
+
 def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
-             max_new_tokens: int, temperature: float = 0.0,
+             max_new_tokens: int, temperature: Optional[float] = None,
              rng: Optional[jax.Array] = None,
              registry: Optional[reg.TuningRegistry] = None,
              dispatch=None,
              backend: str = "reference",
              max_recompiles: int = 1,
+             session=None,
              ) -> tuple[np.ndarray, ServeStats]:
     """Greedy (or sampled) continuation of a batch of prompts.
+
+    ``temperature=None`` (the default) defers to the session's
+    configured temperature (0.0 — greedy — for the ephemeral per-call
+    session); an explicit value overrides it for this call.
 
     batch: {"tokens": [B, S_prompt]} plus modality stubs if any.
     Returns generated tokens [B, max_new_tokens].  With ``registry``
@@ -123,159 +152,27 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
     therefore a traffic-level signal that only reorders the cost model's
     top-K (bounded downside), and with a warm registry the bundle
     already starts at the fleet's measured winner so no recompile
-    happens at all.  Per-candidate probing executables are a ROADMAP
-    direction.
+    happens at all.
+
+    ``generate`` is a thin single-request client of
+    :class:`~repro.serving.session.ServeSession`: pass ``session=`` (a
+    persistent session — the session's captured model/params and its
+    ``dispatch``/``backend``/``registry``/``max_recompiles`` then
+    apply, and the same-named arguments here are ignored; passing a
+    *different* model or params than the session owns raises, since the
+    cached executables were compiled against the session's) to share
+    the cross-request executable cache, or leave it None for an
+    ephemeral per-call session.
     """
-    cfg = model.cfg
-    bsz, prompt_len = batch["tokens"].shape
-    total = prompt_len + max_new_tokens
-    if cfg.family == "vlm":
-        total += cfg.num_image_tokens
-    pallas = backend == "pallas"
-    model_backend = "pallas" if pallas else "xla"
-
-    problems = (serve_dispatch_problems(cfg, bsz, prompt_len, total)
-                if dispatch is not None else {})
-    prefill_bundle = decode_bundle = None
-    if dispatch is not None:
-        # Resolve both shapes up front: warm registries answer with zero
-        # cost-model evaluations; cold ones pay one batch sweep here,
-        # not inside the timed loop.
-        for kind, problem in problems.values():
-            dispatch.resolve(kind, problem)
-        if pallas:
-            # One bundle per role: SSM prefill and decode share the
-            # kernel kind ("ssm_scan") but are different shapes with
-            # independently committed winners, so a single merged
-            # bundle would let one silently shadow the other.
-            prefill_bundle = dispatch.schedule_bundle(
-                [problems["prefill"]])
-            decode_bundle = dispatch.schedule_bundle(
-                [problems["decode"]])
-        dispatch.propose(*problems["prefill"])
-
-    prefill_fn = jax.jit(functools.partial(
-        model.prefill, backend=model_backend, schedules=prefill_bundle))
-    try:
-        # AOT-compile outside the timed region: the dispatch observation
-        # (and prefill_s) should measure the step, not XLA compilation —
-        # a compile-inflated median would be committed to the registry.
-        prefill_fn = prefill_fn.lower(params, batch).compile()
-    except Exception:  # pragma: no cover - AOT unsupported: time jit call
-        pass
-    t0 = time.time()
-    logits, cache = prefill_fn(params, batch)
-    jax.block_until_ready(logits)
-    prefill_exec_s = time.time() - t0
-    if dispatch is not None:
-        kind, problem = problems["prefill"]
-        dispatch.observe(kind, problem, prefill_exec_s)
-    # Grow caches to full capacity.
-    full = model.init_cache(bsz, total)
-
-    def fit(dst, src):
-        if dst.shape == src.shape:
-            return src.astype(dst.dtype)
-        sl = tuple(slice(0, s) for s in src.shape)
-        return dst.at[sl].set(src.astype(dst.dtype))
-
-    cache = jax.tree.map(fit, full, cache)
-    jax.block_until_ready(cache)
-    prefill_s = time.time() - t0
-
-    def pick(lg, key):
-        if temperature <= 0.0:
-            return jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, lg[:, -1] / temperature, -1
-                                      ).astype(jnp.int32)
-
-    rng = rng if rng is not None else jax.random.key(0)
-    rng, sub = jax.random.split(rng)
-    tok = pick(logits, sub)
-    out: List[np.ndarray] = [np.asarray(tok)]
-    pos0 = prompt_len + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
-
-    def compile_step(b):
-        """AOT decode step for one ScheduleBundle; a changed bundle is a
-        different executable (the bundle is the jit static arg)."""
-        fn = jax.jit(functools.partial(model.decode_step,
-                                       backend=model_backend,
-                                       schedules=b))
-        if max_new_tokens > 1:
-            try:
-                # Same AOT treatment as prefill: keep XLA compilation
-                # out of the decode-step timings (a compile-inflated
-                # first probe would poison the dispatcher's medians).
-                fn = fn.lower(params, cache, tok[:, None],
-                              jnp.int32(pos0)).compile()
-            except Exception:  # pragma: no cover - AOT unsupported
-                pass
-        return fn
-
-    step_fn = compile_step(decode_bundle)
-    recompiles = 0
-    recompile_s = 0.0
-    dec = problems.get("decode")
-
-    t1 = time.time()
-    for i in range(max_new_tokens - 1):
-        if dispatch is not None:
-            kind, problem = dec
-            dispatch.propose(kind, problem)
-            t_step = time.perf_counter()
-        lg, cache = step_fn(params, cache, tok[:, None],
-                            jnp.int32(pos0 + i))
-        rng, sub = jax.random.split(rng)
-        tok = pick(lg, sub)
-        out.append(np.asarray(tok))
-        if dispatch is not None:
-            # np.asarray above synchronised the step; feed its wall time
-            # to the per-shape scheduler.
-            dispatch.observe(kind, problem, time.perf_counter() - t_step)
-            if pallas and recompiles < max_recompiles:
-                committed = dispatch.committed(kind, problem)
-                if (committed is not None
-                        and committed != decode_bundle.get(kind)):
-                    # Recompile-on-commit: the dispatcher just settled
-                    # on a different winner than the step was compiled
-                    # with — re-AOT once so the remaining decode steps
-                    # run it.  The budget guard means a serving loop can
-                    # never thrash compile time, and since a commit is
-                    # final, the new executable matches all later
-                    # commits (no churn).  The re-AOT wall time is kept
-                    # out of decode_s: throughput (and the CI-gated
-                    # pallas-vs-reference ratio) must measure steps,
-                    # not XLA compilation.
-                    decode_bundle = decode_bundle.replace(
-                        **{kind: committed})
-                    t_c = time.perf_counter()
-                    step_fn = compile_step(decode_bundle)
-                    recompile_s += time.perf_counter() - t_c
-                    recompiles += 1
-    jax.block_until_ready(tok)
-    decode_s = time.time() - t1 - recompile_s
-    report = None
-    if prefill_bundle is not None:
-        report = {k: v for k, v in prefill_bundle.to_dict().items()
-                  if v is not None}
-        report.update({k: v for k, v
-                       in decode_bundle.to_dict().items()
-                       if v is not None})
-        base = {k: None for k in decode_bundle.to_dict()}
-        report = {**base, **report}
-    stats = ServeStats(prefill_s=prefill_s, decode_s=decode_s,
-                       tokens_generated=bsz * max_new_tokens,
-                       backend=backend, recompiles=recompiles,
-                       recompile_s=recompile_s, schedules=report)
-    if registry is not None:
-        key = reg.RegistryKey.make(
-            "serve_decode",
-            {"arch": cfg.name, "batch": int(bsz),
-             "prompt_len": int(prompt_len),
-             "new_tokens": int(max_new_tokens)},
-            reg.runtime_fingerprint(), "measured")
-        registry.record_measurement(
-            key, {"type": "serve_decode", "arch": cfg.name,
-                  "decode_tok_s": stats.decode_tok_s},
-            decode_s / max(max_new_tokens, 1))
-    return np.stack(out, axis=1), stats
+    from repro.serving.session import ServeSession
+    if session is None:
+        session = ServeSession(model, params, dispatch=dispatch,
+                               backend=backend, registry=registry,
+                               max_recompiles=max_recompiles)
+    elif session.model is not model or session.params is not params:
+        raise ValueError(
+            "generate(session=) runs the session's own model/params — "
+            "the cached executables were compiled against them; build a "
+            "new ServeSession for different weights")
+    return session.run_batch(batch, max_new_tokens=max_new_tokens,
+                             temperature=temperature, rng=rng)

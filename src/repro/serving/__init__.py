@@ -1,0 +1,12 @@
+"""Serving sessions: persistent engine with dispatch-aware continuous
+batching and a cross-request compiled-executable cache."""
+from repro.serving.bucketing import Bucket, candidate_buckets, pick_bucket
+from repro.serving.cache import ExecKey, ExecutableCache
+from repro.serving.session import (Request, RequestResult, ServeSession,
+                                   SessionStats)
+
+__all__ = [
+    "Bucket", "candidate_buckets", "pick_bucket",
+    "ExecKey", "ExecutableCache",
+    "Request", "RequestResult", "ServeSession", "SessionStats",
+]

@@ -1,0 +1,103 @@
+"""Shape bucketing + dispatch-aware bucket selection.
+
+The thesis' adaptive argument applied to *batching*: the dispatch
+service has measured per-shape decode step times under real traffic, so
+a serving session should pick the (batch, padded-length) bucket whose
+**measured** tokens/s is best — not simply the largest batch that fits.
+A batch of 8 that doubles the step time of a batch of 4 serves fewer
+tokens per second; only measurements can say so, and the
+:class:`~repro.runtime.dispatch.DispatchService` already holds them
+(``measured_time`` / ``measured_table``).
+
+``pick_bucket`` scores candidate buckets by effective throughput
+``n_real / step_time`` (requests actually served per decode step over
+the measured—or, cold, cost-model-predicted—step time) and falls back
+to a deterministic fit heuristic when no timing source exists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Bucket:
+    """One serving shape class: the executable-cache coordinate.
+
+    ``batch`` rows of prompts padded to ``prompt_len``, decoding into a
+    KV/state capacity of ``total_len``.  Frozen + ordered so buckets key
+    dicts and sort deterministically in reports.
+    """
+
+    batch: int
+    prompt_len: int
+    total_len: int
+
+    @property
+    def new_budget(self) -> int:
+        return self.total_len - self.prompt_len
+
+
+def candidate_buckets(budgets: Sequence[int], prompt_len: int,
+                      batch_sizes: Sequence[int],
+                      ) -> List[Tuple[Bucket, int]]:
+    """All (bucket, n_real) choices for a group of same-prompt-bucket
+    requests with per-request new-token ``budgets`` (FIFO order): one
+    candidate per allowed batch size, each serving ``min(batch,
+    len(budgets))`` real requests (larger batches pad rows — sometimes
+    worth it when the padded batch's measured tok/s wins anyway, or its
+    executable is already compiled).  Each candidate's KV capacity
+    covers only the budgets of the requests it would actually take, so
+    a large-budget straggler deep in the queue cannot inflate a small
+    batch's bucket."""
+    from repro.models.model_zoo import bucket_length
+    if not budgets:
+        raise ValueError("candidate_buckets needs a non-empty group")
+    out = []
+    for b in sorted(set(int(b) for b in batch_sizes)):
+        if b < 1:
+            continue
+        n_real = min(b, len(budgets))
+        nb = bucket_length(max(budgets[:n_real]))
+        out.append((Bucket(b, prompt_len, prompt_len + nb), n_real))
+    if not out:
+        raise ValueError(f"no usable batch sizes in {batch_sizes!r}")
+    return out
+
+
+def pick_bucket(candidates: Sequence[Tuple[Bucket, int]],
+                step_time: Callable[[Bucket], Optional[float]],
+                ) -> Tuple[Bucket, int]:
+    """The bucket whose measured tok/s is best.
+
+    ``step_time(bucket)`` returns the expected decode-step seconds for
+    that bucket's shape (measured > predicted), or None when no timing
+    source exists.  Scored candidates win by effective throughput
+    ``n_real / step_time``; if *no* candidate has a timing, fall back to
+    the smallest batch that serves every pending request (else the
+    largest batch).  Ties break toward the smaller batch — less padding
+    waste for the same throughput.
+    """
+    if not candidates:
+        raise ValueError("pick_bucket needs at least one candidate")
+    scored = []
+    for bucket, n_real in candidates:
+        t = step_time(bucket)
+        if t is not None and t > 0.0:
+            scored.append((n_real / t, -bucket.batch, bucket, n_real))
+    if scored:
+        scored.sort(key=lambda s: (s[0], s[1]), reverse=True)
+        _, _, bucket, n_real = scored[0]
+        return bucket, n_real
+    # No timing anywhere (no dispatch service): deterministic fit —
+    # the smallest batch that serves every pending request, else the
+    # largest batch available.
+    n_pending = max(n for _, n in candidates)
+    fitting = [c for c in candidates if c[0].batch >= n_pending]
+    if fitting:
+        return min(fitting, key=lambda c: c[0].batch)
+    return max(candidates, key=lambda c: c[0].batch)
+
+
+__all__ = ["Bucket", "candidate_buckets", "pick_bucket"]

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import List, Optional
 
@@ -104,6 +105,39 @@ def cmd_export(args) -> int:
     return 0
 
 
+def _stamp_and_evict(registry: reg.TuningRegistry,
+                     arriving_machines, now,
+                     evict_days: Optional[int],
+                     extra_dates=None) -> int:
+    """Shared merge/sync bookkeeping: stamp last-seen dates for machine
+    fingerprints (arriving ones at ``now``; ``extra_dates`` — e.g.
+    sidecars travelling with sync snapshots — merged by max date;
+    resident ones grandfathered to ``now`` if the sidecar predates
+    them) and evict records whose machine has not been seen for
+    ``evict_days`` days.  Compacts."""
+    import datetime
+    seen = reg.load_machine_seen(registry.path)
+    for fp, d in (extra_dates or {}).items():
+        prev = seen.get(fp)
+        seen[fp] = max(prev, d) if prev else d
+    for fp in arriving_machines:
+        prev = seen.get(fp)
+        seen[fp] = max(prev, now.isoformat()) if prev else now.isoformat()
+    for fp in registry.machines():
+        seen.setdefault(fp, now.isoformat())
+
+    evicted = 0
+    if evict_days is not None:
+        cutoff = (now - datetime.timedelta(days=evict_days)).isoformat()
+        doomed = sorted(fp for fp, d in seen.items() if d < cutoff)
+        for fp in doomed:
+            evicted += registry.invalidate(machine=fp, persist=False)
+            del seen[fp]
+    reg.save_machine_seen(registry.path, seen)
+    registry.compact()
+    return evicted
+
+
 def cmd_merge(args) -> int:
     """Content-addressed union with another registry + staleness
     eviction (the fleet-sync story: hosts export their JSONL, any host
@@ -118,30 +152,100 @@ def cmd_merge(args) -> int:
 
     now = (datetime.date.fromisoformat(args.now) if args.now
            else datetime.date.today())
-    seen = reg.load_machine_seen(registry.path)
     # Fingerprints arriving in the merged-in registry were just seen on
     # its host; fingerprints already here keep their stamp (defaulting
     # to today so pre-sidecar registries are grandfathered, not purged).
-    for fp in other.machines():
-        prev = seen.get(fp)
-        seen[fp] = max(prev, now.isoformat()) if prev else now.isoformat()
-    for fp in registry.machines():
-        seen.setdefault(fp, now.isoformat())
-
-    evicted = 0
-    if args.evict_days is not None:
-        cutoff = (now - datetime.timedelta(days=args.evict_days)
-                  ).isoformat()
-        doomed = sorted(fp for fp, d in seen.items() if d < cutoff)
-        for fp in doomed:
-            evicted += registry.invalidate(machine=fp, persist=False)
-            del seen[fp]
-    reg.save_machine_seen(registry.path, seen)
-    registry.compact()
+    evicted = _stamp_and_evict(registry, other.machines(), now,
+                               args.evict_days)
     print(f"merged {args.other}: "
           + ", ".join(f"{k}={v}" for k, v in sorted(stats.items()))
           + f"; evicted {evicted} stale records"
           + f"; registry now has {len(registry)} records")
+    return 0
+
+
+def cmd_sync(args) -> int:
+    """Fleet sync transport (ROADMAP item): one rsync/object-store
+    -friendly round built on the ``merge`` union policy.
+
+    ``--import-dir`` merges every ``*.jsonl`` snapshot found in a shared
+    directory into this registry (content-addressed union, deterministic
+    conflict rule, optional ``--evict-days``); ``--export-dir`` then
+    writes this registry's canonical bytes as
+    ``host-<fingerprint>.jsonl`` — each host owns exactly one
+    deterministic file name, so `rsync`/object-store sync of the
+    directory converges the fleet without coordination.
+
+    Staleness propagates correctly through union snapshots: each host
+    stamps only its OWN live fingerprints at sync time and ships its
+    last-seen sidecar next to the snapshot; importers merge sidecars by
+    max date.  A dead host therefore stops advancing its dates
+    fleet-wide (even though its records keep riding along inside other
+    hosts' union snapshots) and ``--evict-days`` eventually drops it
+    everywhere.  A typical cron/daemon tick is a single command::
+
+        python -m repro.tune sync --import-dir /mnt/fleet \\
+            --export-dir /mnt/fleet --evict-days 30
+    """
+    import datetime
+    import glob
+    import shutil
+
+    registry = _registry(args)
+    if registry.path is None:
+        raise SystemExit("sync needs an on-disk registry (--registry)")
+    if not (args.export_dir or args.import_dir):
+        raise SystemExit("sync needs --export-dir and/or --import-dir")
+    now = (datetime.date.fromisoformat(args.now) if args.now
+           else datetime.date.today())
+
+    own_name = (args.snapshot_name
+                or f"host-{reg.runtime_fingerprint()}.jsonl")
+    merged = {"added": 0, "replaced": 0, "kept": 0, "identical": 0}
+    sidecar_dates: dict = {}
+    imported = 0
+    if args.import_dir:
+        same_dir = (args.export_dir is not None
+                    and os.path.abspath(args.export_dir)
+                    == os.path.abspath(args.import_dir))
+        own = (os.path.abspath(os.path.join(args.import_dir, own_name))
+               if same_dir else None)
+        for path in sorted(glob.glob(os.path.join(args.import_dir,
+                                                  "*.jsonl"))):
+            if own and os.path.abspath(path) == own:
+                continue  # this host's own snapshot: nothing to learn
+            other = reg.TuningRegistry(path)
+            stats = registry.merge(other)
+            for k, v in stats.items():
+                merged[k] = merged.get(k, 0) + v
+            for fp, d in reg.load_machine_seen(path).items():
+                prev = sidecar_dates.get(fp)
+                sidecar_dates[fp] = max(prev, d) if prev else d
+            imported += 1
+    # Stamp only fingerprints this host IS (runtime + current spec) —
+    # blanket-stamping every fingerprint inside a union snapshot would
+    # keep dead hosts alive forever.
+    own_fps = {reg.runtime_fingerprint(), reg.fingerprint(cm.TPUSpec())}
+    evicted = _stamp_and_evict(registry, sorted(own_fps), now,
+                               args.evict_days,
+                               extra_dates=sidecar_dates)
+    if imported or args.evict_days is not None:
+        print(f"imported {imported} snapshot(s): "
+              + ", ".join(f"{k}={v}" for k, v in sorted(merged.items()))
+              + f"; evicted {evicted} stale records"
+              + f"; registry now has {len(registry)} records")
+
+    if args.export_dir:
+        os.makedirs(args.export_dir, exist_ok=True)
+        out = os.path.join(args.export_dir, own_name)
+        # compact() above canonicalised the file: the snapshot bytes are
+        # a pure function of the record set, so an unchanged registry
+        # re-exports byte-identical content (rsync sees a no-op).
+        shutil.copyfile(registry.path, out)
+        sidecar = reg.machine_seen_path(registry.path)
+        if os.path.exists(sidecar):
+            shutil.copyfile(sidecar, reg.machine_seen_path(out))
+        print(f"exported {len(registry)} records to {out}")
     return 0
 
 
@@ -265,6 +369,29 @@ def build_parser() -> argparse.ArgumentParser:
                    help="override today's date (YYYY-MM-DD; for tests "
                         "and replayed merges)")
     m.set_defaults(fn=cmd_merge)
+
+    sy = sub.add_parser("sync", help="fleet sync round: import every "
+                                     "*.jsonl snapshot from a shared "
+                                     "directory and/or export this "
+                                     "registry as host-<fp>.jsonl")
+    sy.add_argument("--export-dir", default=None,
+                    help="write this registry's canonical snapshot here "
+                         "(deterministic per-host file name)")
+    sy.add_argument("--import-dir", default=None,
+                    help="merge every *.jsonl snapshot in this directory "
+                         "(the merge union policy per file)")
+    sy.add_argument("--evict-days", type=int, default=None,
+                    help="drop records whose machine fingerprint has not "
+                         "been seen in this many days")
+    sy.add_argument("--snapshot-name", default=None,
+                    help="override the exported snapshot file name "
+                         "(default host-<runtime fingerprint>.jsonl; "
+                         "needed when several registries on one host "
+                         "share an export directory)")
+    sy.add_argument("--now", default=None,
+                    help="override today's date (YYYY-MM-DD; for tests "
+                         "and replayed syncs)")
+    sy.set_defaults(fn=cmd_sync)
 
     sr = sub.add_parser("serve-report",
                         help="per-shape adaptive-dispatch report: "
