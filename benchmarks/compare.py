@@ -56,6 +56,13 @@ POLICIES: Dict[str, Policy] = {
     "serve.cache_hit_rate": Policy("higher", abs_band=0.05),
     "serve.exec_compiles": Policy("lower", abs_band=2.0),
     "serve.recompiles": Policy("lower", abs_band=2.0),
+    "serve.inflight_admissions": Policy("higher", abs_band=2.0),
+    # queue wait is wall-clock but the in-flight engine's step-boundary
+    # admission cut it by orders of magnitude vs batch-granularity
+    # draining; gate with a wide band + absolute guard so the win can't
+    # silently regress back to batch-sized waits
+    "serve.queue_p50_s": Policy("lower", rel=1.0, abs_band=0.25),
+    "serve.queue_p95_s": Policy("lower", rel=1.0, abs_band=0.25),
     # machine-absolute: tracked for the trajectory, never gated
     "sweep.cold_wall_time_s": Policy("lower", gate=False),
     "sweep.scalar_wall_time_s": Policy("lower", gate=False),

@@ -1,8 +1,11 @@
 from repro.kernels.decode_attention.ops import (
     decode_attention, decode_attention_scheduled,
-    decode_attention_dispatched, decode_attention_ref)
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+    decode_attention_dispatched, decode_attention_ref,
+    paged_decode_attention)
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas)
 
 __all__ = ["decode_attention", "decode_attention_scheduled",
            "decode_attention_dispatched", "decode_attention_ref",
-           "decode_attention_pallas"]
+           "decode_attention_pallas", "paged_decode_attention",
+           "paged_decode_attention_pallas"]

@@ -6,27 +6,43 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas)
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
-def decode_attention(q, k, v, pos, *, block_kv: int = 256,
+def decode_attention(q, k, v, pos, *, starts=None, block_kv: int = 256,
                      interpret: bool = True):
-    return decode_attention_pallas(q, k, v, pos, block_kv=block_kv,
+    """Single-query flash decode; ``pos`` scalar or [B], ``starts``
+    optional [B] first-valid cache index per row (left padding)."""
+    return decode_attention_pallas(q, k, v, pos, starts=starts,
+                                   block_kv=block_kv,
                                    interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("schedule", "interpret"))
-def decode_attention_scheduled(q, k, v, pos, *, schedule,
+def decode_attention_scheduled(q, k, v, pos, *, schedule, starts=None,
                                interpret: bool = True):
     """Schedule-as-static-arg entry point: the compiled decode step
     threads a committed :class:`~repro.core.schedule.
     DecodeAttentionSchedule` (frozen, hashable) straight into the
     launch, so the executable is keyed by the schedule itself."""
-    return decode_attention_pallas(q, k, v, pos,
+    return decode_attention_pallas(q, k, v, pos, starts=starts,
                                    block_kv=schedule.block_kv,
                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, tables, pos, *,
+                           interpret: bool = True):
+    """Block-table-aware flash decode over a paged KV pool.
+
+    q [B,HQ,1,D]; pools [NB,HKV,bs,D]; tables [B,MB] int32; pos [B]
+    int32.  Streaming granularity is the pool block size (paging fixes
+    the KV block; there is no block_kv knob on this path)."""
+    return paged_decode_attention_pallas(q, k_pool, v_pool, tables, pos,
+                                         interpret=interpret)
 
 
 def decode_attention_dispatched(q, k, v, pos, *, service=None,
@@ -49,4 +65,5 @@ def decode_attention_dispatched(q, k, v, pos, *, service=None,
 
 
 __all__ = ["decode_attention", "decode_attention_scheduled",
-           "decode_attention_dispatched", "decode_attention_ref"]
+           "decode_attention_dispatched", "decode_attention_ref",
+           "paged_decode_attention"]

@@ -16,11 +16,15 @@ from repro.kernels.flash_attention.ref import mha_ref
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     block_q: int = 128, block_kv: int = 128,
                     causal: bool = True, window: Optional[int] = None,
-                    interpret: bool = True) -> jnp.ndarray:
-    """Flash attention; q [B,HQ,S,D], k/v [B,HKV,S,D] -> [B,HQ,S,D]."""
+                    starts=None, interpret: bool = True) -> jnp.ndarray:
+    """Flash attention; q [B,HQ,S,D], k/v [B,HKV,S,D] -> [B,HQ,S,D].
+
+    ``starts`` ([B] int32, optional) masks keys below each row's first
+    real token (left-padded batches)."""
     return flash_attention_pallas(q, k, v, block_q=block_q,
                                   block_kv=block_kv, causal=causal,
-                                  window=window, interpret=interpret)
+                                  window=window, starts=starts,
+                                  interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("schedule", "causal",
@@ -29,6 +33,7 @@ def flash_attention_scheduled(q: jnp.ndarray, k: jnp.ndarray,
                               v: jnp.ndarray, *, schedule,
                               causal: bool = True,
                               window: Optional[int] = None,
+                              starts=None,
                               interpret: bool = True) -> jnp.ndarray:
     """Schedule-as-static-arg entry point: a committed
     :class:`~repro.core.schedule.FlashAttentionSchedule` (frozen,
@@ -39,7 +44,7 @@ def flash_attention_scheduled(q: jnp.ndarray, k: jnp.ndarray,
                                   block_q=min(schedule.block_q, s),
                                   block_kv=min(schedule.block_kv, s),
                                   causal=causal, window=window,
-                                  interpret=interpret)
+                                  starts=starts, interpret=interpret)
 
 
 def flash_attention_dispatched(q: jnp.ndarray, k: jnp.ndarray,

@@ -82,6 +82,14 @@ def main() -> None:
     ap.add_argument("--cache-capacity", type=int, default=16,
                     help="LRU bound on cached compiled executables "
                          "(--session)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="token slots per paged-KV pool block "
+                         "(--session, in-flight engine)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged-KV pool size in blocks; default sizes "
+                         "the pool so every engine row reaches full "
+                         "capacity — smaller values throttle admission "
+                         "(--session)")
     args = ap.parse_args()
 
     import jax
@@ -125,7 +133,9 @@ def main() -> None:
             cache_capacity=args.cache_capacity,
             batch_sizes=tuple(int(b) for b in
                               args.batch_sizes.split(",") if b.strip()),
-            temperature=args.temperature)
+            temperature=args.temperature,
+            kv_block_size=args.kv_block_size,
+            kv_blocks=args.kv_blocks)
         rng = np.random.default_rng(0)
         reqs = _load_requests(args.requests_file, args.num_requests,
                               args.prompt_len, args.new_tokens,
@@ -138,6 +148,11 @@ def main() -> None:
                   f"bucket(b={r.bucket.batch}, p={r.bucket.prompt_len}, "
                   f"t={r.bucket.total_len}); queued {r.queue_s*1e3:.1f}ms")
         summary = session.stats.to_dict()
+        if summary["steps"]:
+            print(f"\nengine: {summary['steps']} decode steps, "
+                  f"{summary['inflight_admissions']} in-flight "
+                  f"admissions, {summary['compactions']} pool "
+                  f"compactions")
         print(f"\nsession: {summary['requests']} requests in "
               f"{summary['batches']} batches; "
               f"{summary['decode_tok_s']:.0f} tok/s; cache hit rate "

@@ -32,7 +32,8 @@ def _mask_bias(s_q: int, s_kv: int, *, causal: bool,
 def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               causal: bool = True, window: Optional[int] = None,
               backend: str = "xla",
-              schedule=None) -> jnp.ndarray:
+              schedule=None,
+              starts: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """q [B,HQ,S,D]; k/v [B,HKV,S,D] -> [B,HQ,S,D] (GQA aware).
 
     Backends: "pallas" (flash kernel, TPU), "xla" (naive reference — S^2
@@ -40,16 +41,29 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     the thesis' loop-tiling future work (§7.2) applied to attention; no
     S^2 HBM tensor, bf16 probs).  With ``schedule`` (a committed
     :class:`~repro.core.schedule.FlashAttentionSchedule`), the pallas
-    backend launches with the tuned blocks instead of defaults."""
+    backend launches with the tuned blocks instead of defaults.
+
+    ``starts`` ([B] int32, optional) is the first *real* token index of
+    each left-padded row: keys at positions < starts[b] are masked for
+    every query, so padded rows attend exactly as their unpadded
+    equivalents.  Queries inside the pad prefix end up fully masked;
+    their outputs are garbage by construction and must be discarded by
+    the caller (they never feed a real row's residual stream because
+    their keys are masked too)."""
     if backend == "pallas":
         if schedule is not None:
             from repro.kernels.flash_attention import \
                 flash_attention_scheduled
             return flash_attention_scheduled(q, k, v, schedule=schedule,
-                                             causal=causal, window=window)
+                                             causal=causal, window=window,
+                                             starts=starts)
         from repro.kernels.flash_attention import flash_attention
-        return flash_attention(q, k, v, causal=causal, window=window)
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               starts=starts)
     if backend == "chunked":
+        if starts is not None:
+            raise NotImplementedError(
+                "attention_chunked does not support per-row starts")
         return attention_chunked(q, k, v, causal=causal, window=window)
     if backend == "stub":
         # Calibration stub for the kernel-substitution roofline
@@ -69,6 +83,10 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         k.astype(jnp.float32))
     if causal or window is not None:
         scores = scores + _mask_bias(s, s_kv, causal=causal, window=window)
+    if starts is not None:
+        key_ok = (jnp.arange(s_kv)[None, :]
+                  >= starts[:, None])                 # [B, S_kv]
+        scores = jnp.where(key_ok[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
     return out.reshape(b, hq, s, d).astype(q.dtype)
@@ -162,13 +180,20 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, pos: jnp.ndarray, *,
                      window: Optional[int] = None,
                      backend: str = "xla",
-                     schedule=None) -> jnp.ndarray:
+                     schedule=None,
+                     starts: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """One-token attention against a cache.
 
-    q [B,HQ,1,D]; caches [B,HKV,S,D]; ``pos`` scalar int32 — current
-    position (cache entries at indices > pos are invalid).  For local
-    attention the cache is a rolling buffer of size ``window`` and all
-    (valid) entries are in range by construction.
+    q [B,HQ,1,D]; caches [B,HKV,S,D]; ``pos`` — current position (cache
+    entries at indices > pos are invalid), a scalar int32 shared by the
+    batch or a per-row [B] int32 vector (in-flight batching: each row
+    decodes at its own depth).  For local attention the cache is a
+    rolling buffer of size ``window`` and all (valid) entries are in
+    range by construction.
+
+    ``starts`` ([B] int32, optional) masks cache entries below each
+    row's first real token, completing the left-pad mask in decode:
+    valid keys are ``starts[b] <= kpos <= pos[b]``.
 
     ``backend="pallas"`` routes through the single-query flash-decode
     kernel — the serving memory roofline — streaming the cache in
@@ -184,10 +209,12 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
             from repro.kernels.decode_attention import \
                 decode_attention_scheduled
             return decode_attention_scheduled(q, k_cache, v_cache, pos,
-                                              schedule=schedule)
+                                              schedule=schedule,
+                                              starts=starts)
         from repro.kernels.decode_attention import \
             decode_attention as decode_attention_kernel
-        return decode_attention_kernel(q, k_cache, v_cache, pos)
+        return decode_attention_kernel(q, k_cache, v_cache, pos,
+                                       starts=starts)
     b, hq, _, d = q.shape
     hkv, s = k_cache.shape[1], k_cache.shape[2]
     group = hq // hkv
@@ -196,15 +223,93 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     scores = jnp.einsum("bhgd,bhkd->bhgk", qg * scale,
                         k_cache.astype(jnp.float32))
     kpos = jnp.arange(s)[None, None, None, :]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    pos_b = pos_b[:, None, None, None]
     if window is None:
-        valid = kpos <= pos
+        valid = kpos <= pos_b
     else:
         # rolling buffer: slots written so far
-        valid = kpos <= jnp.minimum(pos, s - 1)
+        valid = kpos <= jnp.minimum(pos_b, s - 1)
+    if starts is not None:
+        valid &= kpos >= starts[:, None, None, None]
     scores = jnp.where(valid, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgk,bhkd->bhgd", probs,
                      v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache primitives (serving: block tables instead of row tensors)
+# ---------------------------------------------------------------------------
+
+def paged_update_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray,
+                    k: jnp.ndarray, v: jnp.ndarray,
+                    tables: jnp.ndarray, pos: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write one decode step's k/v into a block-paged pool.
+
+    pool_k/pool_v [NB, HKV, bs, D] — the shared block pool (``NB``
+    fixed-size blocks of ``bs`` slots each); k/v [B, HKV, 1, D]; tables
+    [B, MB] int32 — each row's logical-block -> pool-block mapping;
+    pos [B] int32 — each row's logical write position.  Row ``b``'s
+    token lands in pool block ``tables[b, pos[b] // bs]`` at offset
+    ``pos[b] % bs``.  Idle rows must point at a reserved garbage block
+    (the allocator never hands out block 0) so their writes cannot
+    corrupt live sequences.
+    """
+    bs = pool_k.shape[2]
+    rows = jnp.arange(tables.shape[0])
+    blk = tables[rows, pos // bs]                     # [B]
+    off = pos % bs                                    # [B]
+    pk = pool_k.at[blk, :, off].set(k[:, :, 0, :].astype(pool_k.dtype))
+    pv = pool_v.at[blk, :, off].set(v[:, :, 0, :].astype(pool_v.dtype))
+    return pk, pv
+
+
+def paged_decode_attention(q: jnp.ndarray, pool_k: jnp.ndarray,
+                           pool_v: jnp.ndarray, tables: jnp.ndarray,
+                           pos: jnp.ndarray, *, backend: str = "xla",
+                           schedule=None) -> jnp.ndarray:
+    """One-token attention against a block-paged KV pool.
+
+    q [B,HQ,1,D]; pools [NB,HKV,bs,D]; tables [B,MB] int32; pos [B]
+    int32 per-row positions.  Row ``b`` attends to logical keys
+    ``0..pos[b]``, gathered through its block table — rows written
+    contiguously from logical 0 need no ``starts`` mask (the in-flight
+    engine stores only real tokens).  Unassigned table slots may point
+    anywhere (conventionally the reserved block 0): their logical
+    positions exceed ``pos`` so the validity mask discards them.
+
+    ``backend="pallas"`` streams one pool block per grid step through
+    the block-table-aware gather kernel, skipping blocks wholly beyond
+    each row's ``pos`` via scalar prefetch; the XLA path materialises
+    the gather (reference semantics).  ``schedule`` is accepted for
+    signature parity but paging fixes the streaming granularity at the
+    block size."""
+    if backend == "pallas":
+        from repro.kernels.decode_attention import paged_decode_attention \
+            as paged_decode_attention_kernel
+        return paged_decode_attention_kernel(q, pool_k, pool_v, tables,
+                                             pos)
+    b, hq, _, d = q.shape
+    nb, hkv, bs, _ = pool_k.shape
+    mb = tables.shape[1]
+    group = hq // hkv
+    # Gather each row's blocks: [B, MB, HKV, bs, D] -> [B, HKV, MB*bs, D]
+    kg = pool_k[tables].transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, mb * bs, d)
+    vg = pool_v[tables].transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, mb * bs, d)
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qg * scale,
+                        kg.astype(jnp.float32))
+    kpos = jnp.arange(mb * bs)[None, None, None, :]
+    valid = kpos <= pos[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, vg.astype(jnp.float32))
     return out.reshape(b, hq, 1, d).astype(q.dtype)
 
 

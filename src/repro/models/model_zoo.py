@@ -63,27 +63,41 @@ class Model:
                                    remat=remat, schedules=schedules)
 
     def forward(self, params, batch, *, backend="xla",
-                shard_fn: Callable = Identity, schedules=None):
+                shard_fn: Callable = Identity, schedules=None,
+                seq_starts=None):
         if self.cfg.family == "audio":
+            if seq_starts is not None:
+                raise ValueError(
+                    "seq_starts is not supported for family 'audio'")
             return encdec.forward(params, self.cfg, batch,
                                   backend=backend, shard_fn=shard_fn)
         return transformer.forward(params, self.cfg, batch,
                                    backend=backend, shard_fn=shard_fn,
-                                   schedules=schedules)
+                                   schedules=schedules,
+                                   seq_starts=seq_starts)
 
     def prefill(self, params, batch, *, backend="xla",
-                shard_fn: Callable = Identity, schedules=None):
+                shard_fn: Callable = Identity, schedules=None,
+                seq_starts=None):
         if self.cfg.family == "audio":
+            if seq_starts is not None:
+                raise ValueError(
+                    "seq_starts is not supported for family 'audio'")
             return encdec.prefill(params, self.cfg, batch,
                                   backend=backend, shard_fn=shard_fn)
         return transformer.prefill(params, self.cfg, batch,
                                    backend=backend, shard_fn=shard_fn,
-                                   schedules=schedules)
+                                   schedules=schedules,
+                                   seq_starts=seq_starts)
 
     def decode_step(self, params, cache, tokens, pos, *,
                     shard_fn: Callable = Identity, backend="xla",
-                    schedules=None):
+                    schedules=None, seq_starts=None, block_tables=None):
         if self.cfg.family == "audio":
+            if seq_starts is not None or block_tables is not None:
+                raise ValueError(
+                    "seq_starts/block_tables are not supported for "
+                    "family 'audio'")
             return encdec.decode_step(params, self.cfg, cache, tokens,
                                       pos, shard_fn=shard_fn,
                                       backend=backend,
@@ -91,12 +105,21 @@ class Model:
         return transformer.decode_step(params, self.cfg, cache, tokens,
                                        pos, shard_fn=shard_fn,
                                        backend=backend,
-                                       schedules=schedules)
+                                       schedules=schedules,
+                                       seq_starts=seq_starts,
+                                       block_tables=block_tables)
 
     def init_cache(self, bsz: int, max_len: int, dtype=None):
         if self.cfg.family == "audio":
             return encdec.init_cache(self.cfg, bsz, max_len, dtype)
         return transformer.init_cache(self.cfg, bsz, max_len, dtype)
+
+    def init_paged_cache(self, n_blocks: int, block_size: int,
+                         dtype=None):
+        """Block-paged KV pools (attention families only); see
+        :func:`repro.models.transformer.init_paged_cache`."""
+        return transformer.init_paged_cache(self.cfg, n_blocks,
+                                            block_size, dtype)
 
     # -- dry-run stand-ins -------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
@@ -173,10 +196,11 @@ def left_pad_prompts(prompts, target_len: int, pad_id: int = 0):
 
     Left padding keeps every prompt's *last* token at the same position,
     so a batch of mixed-length prompts shares one decode position
-    counter (the model's ``decode_step`` takes a scalar ``pos``).  Pad
-    tokens do participate in attention — per-sequence masks are a
-    ROADMAP item — so padding trades a bounded numerics change for
-    executable reuse, exactly like real mask-free bucketed serving.
+    counter (the model's ``decode_step`` takes a scalar ``pos``).  Pass
+    the matching :func:`prompt_starts` vector as ``seq_starts`` to
+    ``prefill``/``decode_step`` so pad tokens are masked out of
+    attention (and out of the SSM recurrence): a padded row then
+    produces logits bit-identical to its unpadded equivalent.
     """
     import numpy as np
     out = np.full((len(prompts), target_len), int(pad_id), dtype=np.int32)
@@ -188,3 +212,18 @@ def left_pad_prompts(prompts, target_len: int, pad_id: int = 0):
         if len(p):
             out[i, target_len - len(p):] = p
     return out
+
+
+def prompt_starts(prompts, target_len: int):
+    """[B] int32 of each left-padded row's first real token index
+    (``target_len - len(prompt)``) — the ``seq_starts`` companion to
+    :func:`left_pad_prompts`."""
+    import numpy as np
+    starts = np.empty((len(prompts),), dtype=np.int32)
+    for i, p in enumerate(prompts):
+        n = int(np.asarray(p).reshape(-1).shape[0])
+        if n > target_len:
+            raise ValueError(
+                f"prompt of length {n} exceeds bucket {target_len}")
+        starts[i] = target_len - n
+    return starts

@@ -82,7 +82,8 @@ def mamba_block(x: jnp.ndarray, p: Params, *, state: int, conv: int,
                 dt_rank: int,
                 cache: Optional[Dict[str, jnp.ndarray]] = None,
                 backend: str = "xla",
-                schedule=None
+                schedule=None,
+                seq_valid: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """x [B,S,D] -> [B,S,D].  With ``cache`` (decode: S==1) the SSM and
     conv states are carried and returned updated.
@@ -93,16 +94,29 @@ def mamba_block(x: jnp.ndarray, p: Params, *, state: int, conv: int,
     :class:`~repro.core.schedule.SSMScanSchedule`) when given.  The
     kernel carries the decode cache as its explicit initial state, so
     prefill and per-token decode both consume the tuned block size.
+
+    ``seq_valid`` ([B,S] bool, optional) marks real tokens in
+    left-padded rows.  Two masks make the recurrence pad-invariant:
+    the conv input is zeroed at pads (matching the zero left-padding an
+    unpadded row's conv sees), and the post-silu conv output is zeroed
+    at pads (the conv *bias* otherwise leaks ``silu(b) != 0`` into
+    ``dt*B*x``, corrupting the scan state before the first real token).
+    Every state contribution carries an ``xc`` factor, so masked pads
+    keep ``h = 0`` through the prefix for both backends.
     """
     bsz, seq, d = x.shape
     d_inner = p["in_proj"].shape[-1] // 2
 
     xz = dense(x, p["in_proj"])
     xin, z = jnp.split(xz, 2, axis=-1)                  # [B,S,di]
+    if seq_valid is not None:
+        xin = jnp.where(seq_valid[..., None], xin, 0)
 
     conv_state = cache["conv"] if cache is not None else None
     xc = _causal_conv1d(xin, p["conv_w"], p["conv_b"], conv_state)
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    if seq_valid is not None:
+        xc = jnp.where(seq_valid[..., None], xc, 0)
 
     xdbl = dense(xc, p["x_proj"])                       # [B,S,dr+2N]
     dt, bmat, cmat = jnp.split(
@@ -193,14 +207,25 @@ def rglru_params(b: ParamBuilder, prefix: str, n_layers: int, d: int,
 
 
 def rglru_block(x: jnp.ndarray, p: Params, *,
-                cache: Optional[Dict[str, jnp.ndarray]] = None
+                cache: Optional[Dict[str, jnp.ndarray]] = None,
+                seq_valid: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
-    """Recurrentgemma recurrent sub-layer.  x [B,S,D] -> [B,S,D]."""
+    """Recurrentgemma recurrent sub-layer.  x [B,S,D] -> [B,S,D].
+
+    ``seq_valid`` ([B,S] bool, optional) zeroes the conv input and the
+    recurrence drive at left-pad positions (same rationale as
+    :func:`mamba_block`: the conv bias otherwise feeds nonzero
+    ``b_term`` during the pad prefix)."""
     gate = jax.nn.gelu(dense(x, p["in_gate"]).astype(jnp.float32))
     xb = dense(x, p["in_x"])
+    if seq_valid is not None:
+        xb = jnp.where(seq_valid[..., None], xb, 0)
 
     conv_state = cache["conv"] if cache is not None else None
     xc = _causal_conv1d(xb, p["conv_w"], p["conv_b"], conv_state)
+    if seq_valid is not None:
+        xc = jnp.where(seq_valid[..., None],
+                       xc, jnp.zeros_like(xc))
 
     r = jax.nn.sigmoid(dense(xc, p["w_r"]).astype(jnp.float32)
                        + p["b_r"].astype(jnp.float32))

@@ -137,7 +137,7 @@ def init_params(cfg: ModelConfig, rng: jax.Array
 def _attn_body(x: jnp.ndarray, lp: Params, cfg: ModelConfig,
                positions: jnp.ndarray, *, causal: bool,
                window: Optional[int], backend: str,
-               shard_fn: Callable, schedule=None
+               shard_fn: Callable, schedule=None, starts=None
                ) -> Tuple[jnp.ndarray, Dict]:
     """One transformer layer; returns (x, {kv for cache assembly, aux})."""
     hd = cfg.resolved_head_dim
@@ -147,7 +147,8 @@ def _attn_body(x: jnp.ndarray, lp: Params, cfg: ModelConfig,
         positions=positions, rope_theta=cfg.rope_theta,
         qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
     ctx = attn.attention(q, k, v, causal=causal, window=window,
-                         backend=backend, schedule=schedule)
+                         backend=backend, schedule=schedule,
+                         starts=starts)
     x = x + attn.attn_out(ctx, lp["attn"])
     x = shard_fn(x)
 
@@ -166,12 +167,13 @@ def _attn_body(x: jnp.ndarray, lp: Params, cfg: ModelConfig,
 
 def _mamba_body(x: jnp.ndarray, lp: Params, cfg: ModelConfig,
                 shard_fn: Callable, backend: str = "xla",
-                schedule=None) -> jnp.ndarray:
+                schedule=None, seq_valid=None) -> jnp.ndarray:
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
     y, _ = ssm_mod.mamba_block(h, lp["mamba"], state=cfg.ssm_state,
                                conv=cfg.ssm_conv,
                                dt_rank=cfg.resolved_dt_rank,
-                               backend=backend, schedule=schedule)
+                               backend=backend, schedule=schedule,
+                               seq_valid=seq_valid)
     return shard_fn(x + y)
 
 
@@ -203,16 +205,35 @@ def forward(params: Params, cfg: ModelConfig,
             shard_fn: Callable = Identity,
             remat: bool = True,
             collect_kv: bool = False,
-            schedules=None
+            schedules=None,
+            seq_starts: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Teacher-forced logits [B, S, V] (+ aux dict: moe aux loss, kv).
 
     ``schedules`` (a :class:`~repro.core.schedule.ScheduleBundle`)
     carries the committed kernel schedules the pallas backend launches
-    with; None fields (or ``schedules=None``) use kernel defaults."""
+    with; None fields (or ``schedules=None``) use kernel defaults.
+
+    ``seq_starts`` ([B] int32, optional) marks the first real token of
+    each left-padded row: rope positions become per-row
+    ``arange(S) - starts`` and pad positions are masked out of attention
+    (or out of the SSM recurrence), so a left-padded row's logits at its
+    real positions are bit-identical to the unpadded row's.  Supported
+    for the dense/moe/ssm families (vlm interleaves image tokens and
+    hybrid's rolling-window caches assume dense prefixes — both raise).
+    """
     x = embed_inputs(params, cfg, batch)
     bsz, seq, _ = x.shape
-    positions = jnp.arange(seq)
+    seq_valid = None
+    if seq_starts is not None:
+        if cfg.family not in ("dense", "moe", "ssm"):
+            raise ValueError(
+                f"seq_starts is not supported for family {cfg.family!r}")
+        positions = (jnp.arange(seq)[None, :]
+                     - seq_starts[:, None])            # [B, S]
+        seq_valid = jnp.arange(seq)[None, :] >= seq_starts[:, None]
+    else:
+        positions = jnp.arange(seq)
     x = shard_fn(x)
 
     fa_sched = (schedules.flash_attention if schedules is not None
@@ -223,7 +244,7 @@ def forward(params: Params, cfg: ModelConfig,
     if cfg.family == "ssm":
         def body(carry, lp):
             return _mamba_body(carry, lp, cfg, shard_fn, backend,
-                               ssm_sched), None
+                               ssm_sched, seq_valid), None
         body = _remat(body, remat)
         x, _ = _scan(body, x, params["layers"])
     elif cfg.family == "hybrid":
@@ -262,7 +283,8 @@ def forward(params: Params, cfg: ModelConfig,
         def body(carry, lp):
             carry, kv = _attn_body(carry, lp, cfg, positions, causal=True,
                                    window=None, backend=backend,
-                                   shard_fn=shard_fn, schedule=fa_sched)
+                                   shard_fn=shard_fn, schedule=fa_sched,
+                                   starts=seq_starts)
             ys = {"aux": kv["aux"]}
             if collect_kv:
                 ys["k"] = kv["k"]
@@ -352,22 +374,44 @@ def init_cache(cfg: ModelConfig, bsz: int, max_len: int,
                        dt)}}
 
 
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=None) -> Dict[str, Any]:
+    """Empty block-paged KV pools: ``n_blocks`` shared fixed-size blocks
+    of ``block_size`` token slots per layer, addressed through per-row
+    block tables instead of per-row cache tensors (attention families
+    only; recurrent caches are O(1) per row and need no paging)."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"paged KV caches need an attention family, got "
+            f"{cfg.family!r}")
+    dt = dtype or dtype_of(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, n_blocks, cfg.n_kv_heads, block_size, hd)
+    return {"layers": {"k": jnp.zeros(shape, dt),
+                       "v": jnp.zeros(shape, dt)}}
+
+
 # ---------------------------------------------------------------------------
 # Decode step (serve_step)
 # ---------------------------------------------------------------------------
 
 def _attn_decode(x, lp, cache, cfg, pos, window, backend="xla",
-                 schedule=None):
+                 schedule=None, starts=None):
     hd = cfg.resolved_head_dim
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if starts is not None:
+        positions = (pos - starts)[:, None]            # [B, 1]
+    else:
+        positions = jnp.full((1,), pos)
     q, k, v = attn.qkv_project(
         h, lp["attn"], n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=hd,
-        positions=jnp.full((1,), pos), rope_theta=cfg.rope_theta,
+        positions=positions, rope_theta=cfg.rope_theta,
         qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
     ck, cv = attn.update_kv_cache(cache["k"], cache["v"], k, v, pos,
                                   window=window)
     ctx = attn.decode_attention(q, ck, cv, pos, window=window,
-                                backend=backend, schedule=schedule)
+                                backend=backend, schedule=schedule,
+                                starts=starts)
     x = x + attn.attn_out(ctx, lp["attn"])
     h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
     if cfg.n_experts:
@@ -379,25 +423,76 @@ def _attn_decode(x, lp, cache, cfg, pos, window, backend="xla",
     return x + y, {"k": ck, "v": cv}
 
 
+def _attn_decode_paged(x, lp, cache, cfg, pos, tables, backend="xla",
+                      schedule=None):
+    """Paged twin of :func:`_attn_decode`: ``cache`` holds pool tensors
+    [NB,HKV,bs,hd], ``pos`` is a per-row [B] vector of logical
+    positions, and the write/attend addressing goes through ``tables``
+    [B,MB].  Rows store only real tokens from logical position 0, so no
+    ``starts`` mask is needed on this path."""
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(
+        h, lp["attn"], n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=hd,
+        positions=pos[:, None], rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
+    pk, pv = attn.paged_update_kv(cache["k"], cache["v"], k, v, tables,
+                                  pos)
+    ctx = attn.paged_decode_attention(q, pk, pv, tables, pos,
+                                      backend=backend, schedule=schedule)
+    x = x + attn.attn_out(ctx, lp["attn"])
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = moe_mod.moe_ffn(h, lp["moe"], n_experts=cfg.n_experts,
+                               top_k=cfg.experts_per_token,
+                               capacity_factor=cfg.capacity_factor)
+    else:
+        y = mlp(h, lp["mlp"], cfg.mlp_type)
+    return x + y, {"k": pk, "v": pv}
+
+
 def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
                 tokens: jnp.ndarray, pos: jnp.ndarray, *,
                 shard_fn: Callable = Identity,
-                backend: str = "xla", schedules=None
+                backend: str = "xla", schedules=None,
+                seq_starts: Optional[jnp.ndarray] = None,
+                block_tables: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-    """One decode step.  tokens [B, 1] int32; pos scalar int32.
+    """One decode step.  tokens [B, 1] int32; pos scalar int32 (shared
+    write position) or, with ``block_tables``, a per-row [B] vector.
     Returns (logits [B, 1, V], new cache).
 
     ``backend="pallas"`` runs the per-token cache attention (or the
     fused SSM update) through the Pallas serving kernels, launched with
     the committed schedules in ``schedules`` (a
     :class:`~repro.core.schedule.ScheduleBundle`) — the compiled step
-    *is* the tuner's output."""
+    *is* the tuner's output.
+
+    ``seq_starts`` ([B] int32, optional) continues the left-pad masks
+    of a :func:`prefill` that was given the same vector: cache entries
+    below each row's start stay masked and rope counts from the row's
+    first real token (dense/moe only; recurrent caches carry no pads).
+
+    ``block_tables`` ([B,MB] int32, optional) switches the attention
+    families to the block-paged cache layout: ``cache`` must be an
+    :func:`init_paged_cache` tree, ``pos`` a per-row vector, and each
+    row reads/writes pool blocks through its table row (the in-flight
+    continuous-batching path)."""
     x = jnp.take(params["embed"], tokens, axis=0)
     x = shard_fn(x)
 
     da_sched = (schedules.decode_attention if schedules is not None
                 else None)
     ssm_sched = schedules.ssm_scan if schedules is not None else None
+
+    if block_tables is not None and cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"block_tables needs an attention family, got "
+            f"{cfg.family!r}")
+    if seq_starts is not None and cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"seq_starts in decode_step needs an attention family, got "
+            f"{cfg.family!r} (recurrent caches carry no pad entries)")
 
     if cfg.family == "ssm":
         def body(carry, inp):
@@ -449,11 +544,20 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
             new_tail[f"b{i}"] = nc
         new_cache = {"groups": new_groups, "tail": new_tail}
     else:
-        def body(carry, inp):
-            lp, lc = inp
-            carry, nc = _attn_decode(carry, lp, lc, cfg, pos, None,
-                                     backend, da_sched)
-            return carry, nc
+        if block_tables is not None:
+            def body(carry, inp):
+                lp, lc = inp
+                carry, nc = _attn_decode_paged(carry, lp, lc, cfg, pos,
+                                               block_tables, backend,
+                                               da_sched)
+                return carry, nc
+        else:
+            def body(carry, inp):
+                lp, lc = inp
+                carry, nc = _attn_decode(carry, lp, lc, cfg, pos, None,
+                                         backend, da_sched,
+                                         starts=seq_starts)
+                return carry, nc
         x, new_layers = _scan(body, x,
                                      (params["layers"], cache["layers"]))
         new_cache = {"layers": new_layers}
@@ -491,22 +595,31 @@ def _window_cache(k: jnp.ndarray, seq: int, win: int) -> jnp.ndarray:
 def prefill(params: Params, cfg: ModelConfig,
             batch: Dict[str, jnp.ndarray], *,
             backend: str = "xla", shard_fn: Callable = Identity,
-            schedules=None
+            schedules=None, seq_starts: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Run the full prompt; return (logits [B,S,V], decode caches filled
     up to S).  Attention families collect per-layer K/V; recurrent
     families capture final scan states; hybrid collects both (windowed
     K/V in rolling-slot order).  ``schedules`` carries the committed
-    kernel schedules for the pallas backend (see :func:`forward`)."""
+    kernel schedules for the pallas backend (see :func:`forward`);
+    ``seq_starts`` enables the left-pad masks (see :func:`forward`)."""
     seq = batch["tokens"].shape[1]
     fa_sched = (schedules.flash_attention if schedules is not None
                 else None)
     ssm_sched = schedules.ssm_scan if schedules is not None else None
     if cfg.family == "vlm":
         seq += cfg.num_image_tokens
+    if seq_starts is not None and cfg.family not in ("dense", "moe",
+                                                     "ssm"):
+        raise ValueError(
+            f"seq_starts is not supported for family {cfg.family!r}")
     if cfg.family == "ssm":
         x = embed_inputs(params, cfg, batch)
         x = shard_fn(x)
+        seq_valid = None
+        if seq_starts is not None:
+            seq_valid = (jnp.arange(seq)[None, :]
+                         >= seq_starts[:, None])
 
         def body(carry, lp):
             h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
@@ -515,7 +628,8 @@ def prefill(params: Params, cfg: ModelConfig,
                                         conv=cfg.ssm_conv,
                                         dt_rank=cfg.resolved_dt_rank,
                                         backend=backend,
-                                        schedule=ssm_sched)
+                                        schedule=ssm_sched,
+                                        seq_valid=seq_valid)
             return shard_fn(carry + y), st
         x, states = _scan(body, x, params["layers"])
         logits = _head(params, cfg, x)
@@ -573,7 +687,8 @@ def prefill(params: Params, cfg: ModelConfig,
 
     logits, extras = forward(params, cfg, batch, backend=backend,
                              shard_fn=shard_fn, collect_kv=True,
-                             remat=False, schedules=schedules)
+                             remat=False, schedules=schedules,
+                             seq_starts=seq_starts)
     kv = extras["kv"]
     # kv["k"]: [L, B, HKV, S, hd]
     return logits, {"layers": {"k": kv["k"], "v": kv["v"]}}

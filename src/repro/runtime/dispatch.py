@@ -63,14 +63,17 @@ class KernelFamily:
 
     def key(self, problem: Dict[str, Any], spec, elem_bytes: int,
             ) -> reg.RegistryKey:
+        """Registry key for ``problem`` on ``spec`` (stable across runs)."""
         return self.key_fn(problem, spec, elem_bytes)
 
     def tune(self, problem: Dict[str, Any], spec, elem_bytes: int,
              top_k: int, registry: reg.TuningRegistry) -> List:
+        """Ranked ``[(schedule, KernelCost), ...]`` via the cached tuner."""
         return self.tune_fn(problem, spec, elem_bytes, top_k, registry)
 
 
 def _conv_layer(p: Dict[str, Any]) -> ConvLayer:
+    """Build the tuner's ConvLayer from a conv-family problem dict."""
     return ConvLayer(p["oc"], p["ic"], p["h"], p["w"], p["kh"], p["kw"])
 
 
@@ -78,6 +81,7 @@ FAMILIES: Dict[str, KernelFamily] = {}
 
 
 def _family(kind: str, dims: tuple, key_fn, tune_fn) -> None:
+    """Register one kernel family in the FAMILIES dispatch table."""
     FAMILIES[kind] = KernelFamily(kind, dims, key_fn, tune_fn)
 
 
@@ -184,6 +188,7 @@ class DispatchService:
                  probes_per_candidate: int = 3,
                  steadiness_threshold: float = 0.2,
                  max_extra_probes: int = 2):
+        """Bind a registry/machine spec and configure the selector."""
         self.registry = (registry if registry is not None
                          else reg.TuningRegistry.default())
         self.spec = spec if spec is not None else cm.TPUSpec()
@@ -363,6 +368,7 @@ class DispatchService:
 
     def candidates(self, kind: str, problem: Dict[str, Any],
                    elem_bytes: int = 2) -> List[Any]:
+        """Top-K candidate schedules for a shape (offline rank order)."""
         skey = self.resolve(kind, problem, elem_bytes)
         return list(self._slots[skey].candidates)
 

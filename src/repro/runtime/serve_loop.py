@@ -122,6 +122,7 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
              backend: str = "reference",
              max_recompiles: int = 1,
              session=None,
+             seq_starts=None,
              ) -> tuple[np.ndarray, ServeStats]:
     """Greedy (or sampled) continuation of a batch of prompts.
 
@@ -130,6 +131,9 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
     session); an explicit value overrides it for this call.
 
     batch: {"tokens": [B, S_prompt]} plus modality stubs if any.
+    ``seq_starts`` ([B] int32, optional) marks each row's first real
+    token in a left-padded batch so pads are masked out of attention
+    and the SSM recurrence (see ``ServeSession.run_batch``).
     Returns generated tokens [B, max_new_tokens].  With ``registry``
     given, the measured prefill/decode throughput is persisted so repeat
     deployments of the same (arch, batch, lengths) know what to expect.
@@ -175,4 +179,5 @@ def generate(model: Model, params, batch: Dict[str, jnp.ndarray], *,
             "the cached executables were compiled against them; build a "
             "new ServeSession for different weights")
     return session.run_batch(batch, max_new_tokens=max_new_tokens,
-                             temperature=temperature, rng=rng)
+                             temperature=temperature, rng=rng,
+                             seq_starts=seq_starts)

@@ -36,6 +36,7 @@ class Bucket:
 
     @property
     def new_budget(self) -> int:
+        """Decode headroom: tokens the bucket can generate per row."""
         return self.total_len - self.prompt_len
 
 

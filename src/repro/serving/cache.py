@@ -31,6 +31,12 @@ class ExecKey:
     keying each role by only the dimension its executable depends on
     maximises sharing (requests with different decode budgets share one
     prefill executable, and vice versa).
+
+    ``detail`` disambiguates executables whose traced shapes differ for
+    reasons the other fields cannot express — the paged decode step keys
+    on ``("paged", block_size, max_blocks)`` so it never collides with a
+    monolithic-cache decode step of the same (batch, length).  It must
+    be hashable; None (the default) keeps legacy keys unchanged.
     """
 
     arch: str
@@ -39,6 +45,7 @@ class ExecKey:
     length: int
     schedules: Optional[Any]  # frozen ScheduleBundle (hashable) or None
     backend: str
+    detail: Optional[Any] = None
 
 
 class ExecutableCache:
@@ -53,6 +60,7 @@ class ExecutableCache:
     """
 
     def __init__(self, capacity: int = 16):
+        """Create an empty cache bounded to ``capacity`` executables."""
         if capacity < 1:
             raise ValueError("ExecutableCache capacity must be >= 1")
         self.capacity = capacity
@@ -65,9 +73,11 @@ class ExecutableCache:
         self.compiled_log: List[ExecKey] = []
 
     def __len__(self) -> int:
+        """Number of cached executables."""
         return len(self._entries)
 
     def __contains__(self, key: ExecKey) -> bool:
+        """Alias for :meth:`contains` (no LRU/counter side effects)."""
         return key in self._entries
 
     def contains(self, key: ExecKey) -> bool:
@@ -77,6 +87,7 @@ class ExecutableCache:
 
     def get(self, key: ExecKey, builder: Callable[[], Any],
             ) -> Tuple[Any, bool]:
+        """Return ``(executable, hit)``, building + inserting on a miss."""
         with self._lock:
             exe = self._entries.get(key)
             if exe is not None:
@@ -106,6 +117,7 @@ class ExecutableCache:
         return out
 
     def stats(self) -> Dict[str, int]:
+        """Counter snapshot (entries/capacity/hits/misses/evictions/compiles)."""
         return {
             "entries": len(self._entries),
             "capacity": self.capacity,
@@ -117,6 +129,7 @@ class ExecutableCache:
 
     @property
     def hit_rate(self) -> float:
+        """hits / (hits + misses), 0.0 before any lookup."""
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 

@@ -13,6 +13,13 @@ amortised *across* them.  The session owns:
   :class:`~repro.runtime.dispatch.DispatchService` per-shape
   observations is best is chosen (cold shapes fall back to the
   cost model's prediction),
+* an **in-flight engine** (dense/MoE/SSM, greedy): decoding runs as a
+  step loop over a fixed set of rows backed by a **block-paged KV
+  cache** (:mod:`repro.serving.paged_kv`); at every step boundary
+  finished sequences retire and free their blocks, and queued requests
+  are admitted — batch-1 masked prefill, prompt KV scattered into pool
+  blocks — while the free-block budget allows, so a short request never
+  waits out a long batchmate's full decode,
 * a **cross-request executable cache**
   (:class:`~repro.serving.cache.ExecutableCache`) keyed by
   ``(arch, bucket, ScheduleBundle, backend)``, so a dispatcher commit
@@ -42,10 +49,11 @@ import numpy as np
 
 from repro.core import registry as reg
 from repro.models.model_zoo import (Model, bucket_length,
-                                    left_pad_prompts)
+                                    left_pad_prompts, prompt_starts)
 from repro.serving.bucketing import (Bucket, candidate_buckets,
                                      pick_bucket)
 from repro.serving.cache import ExecKey, ExecutableCache
+from repro.serving.paged_kv import BlockAllocator, blocks_needed
 
 _REQUEST_IDS = itertools.count()
 
@@ -63,6 +71,8 @@ class Request:
 
 @dataclasses.dataclass
 class RequestResult:
+    """Per-request outcome returned by :meth:`ServeSession.drain`."""
+
     request_id: str
     tokens: np.ndarray              # [max_new_tokens] int32
     bucket: Bucket
@@ -82,6 +92,9 @@ class SessionStats:
     recompiles: int = 0             # mid-stream re-AOTs (compile spent)
     free_switches: int = 0          # bundle switches served from cache
     commits_seen: int = 0
+    steps: int = 0                  # in-flight engine decode steps
+    inflight_admissions: int = 0    # requests admitted at step boundaries
+    compactions: int = 0            # paged-pool defragmentation passes
     queue_s: List[float] = dataclasses.field(default_factory=list)
     per_bucket: Dict[Bucket, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
@@ -95,10 +108,12 @@ class SessionStats:
         return float(np.percentile(a, 50)), float(np.percentile(a, 95))
 
     def bucket_tok_s(self) -> Dict[Bucket, float]:
+        """Goodput tokens/s per bucket (delivered tokens / decode wall)."""
         return {b: e["tokens"] / max(e["decode_s"], 1e-9)
                 for b, e in self.per_bucket.items()}
 
     def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready summary (what ``launch/serve`` and benches print)."""
         p50, p95 = self.queue_percentiles()
         hits = self.cache.get("hits", 0)
         total = hits + self.cache.get("misses", 0)
@@ -111,6 +126,9 @@ class SessionStats:
             "recompiles": self.recompiles,
             "free_switches": self.free_switches,
             "commits_seen": self.commits_seen,
+            "steps": self.steps,
+            "inflight_admissions": self.inflight_admissions,
+            "compactions": self.compactions,
             "queue_p50_s": p50,
             "queue_p95_s": p95,
             "cache": dict(self.cache),
@@ -132,7 +150,11 @@ class ServeSession:
     ``registry``, ``max_recompiles``) plus the session-level knobs:
     ``batch_sizes`` (allowed continuous-batching batch dims),
     ``bucket_lengths`` (explicit padded-length grid; default power-of-2),
-    ``cache_capacity`` (LRU executable bound) and ``pad_id``.
+    ``cache_capacity`` (LRU executable bound), ``pad_id``, and the paged
+    KV geometry — ``kv_block_size`` (token slots per pool block) and
+    ``kv_blocks`` (pool size; None sizes the pool so every engine row can
+    reach its full per-row capacity, a smaller explicit value exercises
+    admission backpressure).
     """
 
     def __init__(self, model: Model, params, *,
@@ -144,7 +166,10 @@ class ServeSession:
                  batch_sizes: Sequence[int] = (1, 2, 4, 8),
                  bucket_lengths: Optional[Sequence[int]] = None,
                  temperature: float = 0.0,
-                 pad_id: int = 0):
+                 pad_id: int = 0,
+                 kv_block_size: int = 16,
+                 kv_blocks: Optional[int] = None):
+        """Validate the knobs and set up an empty queue + caches."""
         self.model = model
         self.params = params
         self.dispatch = dispatch
@@ -159,6 +184,13 @@ class ServeSession:
                                if bucket_lengths else None)
         self.temperature = temperature
         self.pad_id = pad_id
+        if kv_block_size < 1:
+            raise ValueError("kv_block_size must be >= 1")
+        if kv_blocks is not None and kv_blocks < 2:
+            raise ValueError(
+                "kv_blocks must be >= 2 (block 0 is the reserved sink)")
+        self.kv_block_size = int(kv_block_size)
+        self.kv_blocks = None if kv_blocks is None else int(kv_blocks)
         self.exec_cache = ExecutableCache(cache_capacity)
         self.stats = SessionStats()
         self._queue: List[Request] = []
@@ -190,10 +222,12 @@ class ServeSession:
         return rid
 
     def pending(self) -> int:
+        """Requests queued but not yet served."""
         return len(self._queue)
 
     # ------------------------------------------------------- batching
     def _prompt_bucket(self, request: Request) -> int:
+        """Padded prompt length (the request's shape class)."""
         return bucket_length(len(request.tokens), self.bucket_lengths)
 
     def _bucket_step_time(self, bucket: Bucket) -> Optional[float]:
@@ -238,6 +272,7 @@ class ServeSession:
 
     def _form_batch(self, group: List[Request], bucket: Bucket,
                     ) -> Dict[str, jnp.ndarray]:
+        """Left-pad the group to the bucket shape (plus modality rows)."""
         cfg = self.model.cfg
         tokens = left_pad_prompts([r.tokens for r in group],
                                   bucket.prompt_len, self.pad_id)
@@ -248,6 +283,7 @@ class ServeSession:
         batch: Dict[str, jnp.ndarray] = {"tokens": jnp.asarray(tokens)}
         # Modality stubs: stack per-request extras, zero-fill the rest.
         def stack(name, shape, dtype=np.float32):
+            """Stack one extras field across rows, zero-filling gaps."""
             rows = []
             for r in group:
                 e = (r.extras or {}).get(name)
@@ -264,20 +300,56 @@ class ServeSession:
                 "image_embeds", (cfg.num_image_tokens, cfg.d_model))
         return batch
 
-    def drain(self) -> List[RequestResult]:
+    def drain(self, on_step=None) -> List[RequestResult]:
         """Serve every queued request; returns per-request results in
-        completion order."""
+        completion order.
+
+        Dense/MoE/SSM families (greedy decoding) run the **in-flight
+        engine** (:meth:`_drain_inflight`): requests are admitted,
+        retired and their KV blocks recycled at decode *step*
+        boundaries, so a short request never waits for a long batchmate
+        and prefill interleaves with decode.  Other families (and
+        sampled decoding) fall back to the batched path
+        (:meth:`_drain_batched`), which serves whole groups at a time.
+
+        ``on_step(info)`` — engine only — is called after every decode
+        step with ``{"step", "active", "pending", "free_blocks"}``;
+        tests (and latency probes) use it to submit mid-decode and to
+        watch admission backpressure.
+        """
+        if (self.model.cfg.family in ("dense", "moe", "ssm")
+                and self.temperature <= 0.0):
+            results: List[RequestResult] = []
+            while self._queue:
+                results.extend(self._drain_inflight(on_step))
+            return results
+        return self._drain_batched()
+
+    def _drain_batched(self) -> List[RequestResult]:
+        """Admission-granularity serving: form a group, run it to
+        completion, repeat (the pre-engine behaviour; still the path for
+        modality families the paged engine does not cover)."""
         results: List[RequestResult] = []
+        masked = self.model.cfg.family in ("dense", "moe", "ssm")
         while self._queue:
             group, bucket = self._next_group()
             t_start = time.perf_counter()
             waits = [t_start - r.submitted_at for r in group]
             batch = self._form_batch(group, bucket)
             steps = max(r.max_new_tokens for r in group)
+            starts = None
+            if masked:
+                # Pad rows are fully masked (start == prompt_len): their
+                # logits are garbage but finite, and they are discarded.
+                starts = np.full((bucket.batch,), bucket.prompt_len,
+                                 np.int32)
+                starts[:len(group)] = prompt_starts(
+                    [r.tokens for r in group], bucket.prompt_len)
             out, stats = self.run_batch(
                 batch, max_new_tokens=steps,
                 total_len=bucket.total_len,
-                real_tokens=sum(r.max_new_tokens for r in group))
+                real_tokens=sum(r.max_new_tokens for r in group),
+                seq_starts=starts)
             for i, r in enumerate(group):
                 results.append(RequestResult(
                     request_id=r.request_id,
@@ -287,8 +359,395 @@ class ServeSession:
             self.stats.queue_s.extend(waits)
         return results
 
+    # ------------------------------------------- in-flight engine
+    def _drain_inflight(self, on_step=None) -> List[RequestResult]:
+        """One engine *activation*: a fixed (rows, block-table) geometry
+        serving requests at decode-step granularity until the queue and
+        all rows are empty (or a request needs a wider geometry, which
+        defers it to the next activation).
+
+        Per step boundary the engine (1) retires finished rows and frees
+        their KV blocks, (2) compacts the pool when fragmentation passes
+        1/2, (3) admits queued requests FIFO while a row is free and the
+        allocator can fit the request's whole ``prompt + budget - 1``
+        footprint (strict FIFO: the first misfit stops admission — no
+        overtaking), then (4) runs one decode step over all rows.
+        Admission runs a batch-1 masked prefill through the shared
+        executable cache and scatters the prompt KV (or SSM state) into
+        the engine, so tokens are bit-identical to running the request
+        alone (greedy).
+        """
+        from repro.runtime.serve_loop import (ServeStats,
+                                              resolve_bundle_report,
+                                              serve_dispatch_problems)
+        model, params = self.model, self.params
+        dispatch, backend = self.dispatch, self.backend
+        cfg = model.cfg
+        attn_family = cfg.family in ("dense", "moe")
+        pallas = backend == "pallas"
+        model_backend = "pallas" if pallas else "xla"
+
+        # --- activation geometry: rows from the head-of-line class's
+        # measured-best bucket, per-row capacity from the whole queue.
+        head = self._queue[0]
+        s_pad = self._prompt_bucket(head)
+        budgets = [r.max_new_tokens for r in self._queue
+                   if self._prompt_bucket(r) == s_pad]
+        cands = candidate_buckets(budgets, s_pad, self.batch_sizes)
+        picked, _ = pick_bucket(cands, self._bucket_step_time)
+        rows_n = picked.batch
+        cap = max(self._prompt_bucket(r)
+                  + bucket_length(r.max_new_tokens)
+                  for r in self._queue)
+        cap = max(cap, picked.total_len)
+        bs = self.kv_block_size
+        max_blocks = blocks_needed(cap, bs)
+        if attn_family:
+            cap = max_blocks * bs   # gather extent == table reach
+            n_blocks = (1 + rows_n * max_blocks
+                        if self.kv_blocks is None else self.kv_blocks)
+            alloc = BlockAllocator(n_blocks, bs)
+            pool = model.init_paged_cache(n_blocks, bs)
+            tables_np = np.zeros((rows_n, max_blocks), np.int32)
+        else:
+            alloc = None
+            pool = model.init_cache(rows_n, cap)
+            tables_np = None
+        engine_bucket = Bucket(rows_n, s_pad, cap)
+        act_stats = ServeStats(prefill_s=0.0, decode_s=0.0,
+                               tokens_generated=0, backend=backend)
+
+        problems = (serve_dispatch_problems(cfg, rows_n, s_pad, cap)
+                    if dispatch is not None else {})
+        dec = problems.get("decode")
+        decode_bundle = None
+        if dispatch is not None:
+            dispatch.resolve(*dec)
+            if pallas:
+                decode_bundle = dispatch.schedule_bundle([dec])
+        detail = ("paged", bs, max_blocks) if attn_family else None
+
+        def decode_key(bundle) -> ExecKey:
+            """Cache key of the engine's paged/recurrent decode step."""
+            return ExecKey(cfg.name, "decode", rows_n, cap, bundle,
+                           backend, detail)
+
+        # --- per-prompt-bucket prefill executables (batch 1, shared
+        # with every other engine activation and with run_batch).
+        pf_bundles: Dict[int, Any] = {}
+
+        def prefill_fn_for(p_len: int):
+            """Cached batch-1 masked-prefill executable for a class."""
+            bundle = None
+            if dispatch is not None:
+                kind, prob = serve_dispatch_problems(
+                    cfg, 1, p_len, cap)["prefill"]
+                if p_len not in pf_bundles:
+                    dispatch.resolve(kind, prob)
+                    pf_bundles[p_len] = (
+                        dispatch.schedule_bundle([(kind, prob)])
+                        if pallas else None)
+                bundle = pf_bundles[p_len]
+            key = ExecKey(cfg.name, "prefill", 1, p_len, bundle,
+                          backend)
+
+            def build():
+                """AOT-lower the positional prefill wrapper."""
+                def pf(p, b, st):
+                    """Positional prefill (uniform ExecutableCache sig)."""
+                    return model.prefill(p, b, backend=model_backend,
+                                         schedules=bundle,
+                                         seq_starts=st)
+                fn = jax.jit(pf)
+                try:
+                    fn = fn.lower(
+                        params,
+                        {"tokens": jnp.zeros((1, p_len), jnp.int32)},
+                        jnp.zeros((1,), jnp.int32)).compile()
+                except Exception:  # pragma: no cover - AOT unsupported
+                    pass
+                return fn
+            fn, _ = self._compile(key, build)
+            return fn
+
+        # --- mutable engine state (host side).
+        row_req: List[Optional[Request]] = [None] * rows_n
+        row_blocks: List[List[int]] = [[] for _ in range(rows_n)]
+        row_remaining = [0] * rows_n
+        row_out: List[List[int]] = [[] for _ in range(rows_n)]
+        row_wait = [0.0] * rows_n
+        pos_np = np.zeros((rows_n,), np.int32)
+        tok_np = np.full((rows_n,), self.pad_id, np.int32)
+        results: List[RequestResult] = []
+
+        def bucket_entry():
+            """Mutable per-bucket stats slot for this activation."""
+            return self.stats.per_bucket.setdefault(
+                engine_bucket,
+                {"batches": 0, "tokens": 0, "decode_s": 0.0})
+
+        def retire(r: int) -> None:
+            """Finish row r: emit its result, free its KV blocks."""
+            req = row_req[r]
+            results.append(RequestResult(
+                request_id=req.request_id,
+                tokens=np.asarray(row_out[r], np.int32),
+                bucket=engine_bucket, queue_s=row_wait[r],
+                stats=act_stats))
+            delivered = req.max_new_tokens
+            act_stats.tokens_generated += delivered
+            self.stats.tokens_generated += delivered
+            bucket_entry()["tokens"] += delivered
+            self.stats.requests += 1
+            self.stats.queue_s.append(row_wait[r])
+            if attn_family and row_blocks[r]:
+                alloc.free(row_blocks[r])
+                tables_np[r, :] = 0
+            row_req[r] = None
+            row_blocks[r] = []
+            row_out[r] = []
+            pos_np[r] = 0
+            tok_np[r] = self.pad_id
+
+        def admit(req: Request, r: int) -> None:
+            """Prefill req into row r and scatter its KV/state in."""
+            nonlocal pool
+            length = len(req.tokens)
+            p_len = self._prompt_bucket(req)
+            row_wait[r] = time.perf_counter() - req.submitted_at
+            if attn_family:
+                nb = blocks_needed(length + req.max_new_tokens - 1, bs)
+                row_blocks[r] = alloc.alloc(nb)
+                tables_np[r, :] = 0
+                tables_np[r, :nb] = row_blocks[r]
+            toks = left_pad_prompts([req.tokens], p_len, self.pad_id)
+            starts = jnp.asarray([p_len - length], jnp.int32)
+            fn = prefill_fn_for(p_len)
+            if dispatch is not None:
+                kind, prob = serve_dispatch_problems(
+                    cfg, 1, p_len, cap)["prefill"]
+                dispatch.propose(kind, prob)
+            t0 = time.time()
+            logits, pcache = fn(params, {"tokens": jnp.asarray(toks)},
+                                starts)
+            jax.block_until_ready(logits)
+            dt = time.time() - t0
+            if dispatch is not None:
+                dispatch.observe(kind, prob, dt)
+            act_stats.prefill_s += dt
+            self.stats.prefill_s += dt
+            first = int(np.asarray(
+                jnp.argmax(logits[0, -1], axis=-1)))
+            if attn_family:
+                # Scatter the row's real prompt KV into its pool
+                # blocks: positions 0..length-1 land in the first
+                # ceil(length/bs) blocks; the tail of the last block is
+                # zero-filled and overwritten by decode writes.
+                nbp = blocks_needed(length, bs)
+                idx = jnp.asarray(row_blocks[r][:nbp], jnp.int32)
+
+                def place(pool_t, pre):
+                    """Scatter one K/V tensor into the row's blocks."""
+                    real = pre[:, 0, :, p_len - length:, :].astype(
+                        pool_t.dtype)
+                    ln, hkv, _, hd = real.shape
+                    padded = jnp.zeros((ln, hkv, nbp * bs, hd),
+                                       pool_t.dtype)
+                    padded = padded.at[:, :, :length, :].set(real)
+                    blocked = padded.reshape(ln, hkv, nbp, bs, hd)
+                    return pool_t.at[:, idx].set(
+                        blocked.transpose(0, 2, 1, 3, 4))
+
+                pool = {"layers": {
+                    "k": place(pool["layers"]["k"],
+                               pcache["layers"]["k"]),
+                    "v": place(pool["layers"]["v"],
+                               pcache["layers"]["v"])}}
+            else:
+                # Recurrent state is O(1) per row: write row r.
+                pool = jax.tree.map(
+                    lambda e, s: e.at[:, r].set(s[:, 0].astype(e.dtype)),
+                    pool, pcache)
+            row_req[r] = req
+            row_out[r] = [first]
+            row_remaining[r] = req.max_new_tokens - 1
+            pos_np[r] = length
+            tok_np[r] = first
+            self.stats.inflight_admissions += 1
+
+        step_fn = None
+        cur_bundle = decode_bundle
+        recompiles = 0
+        recompile_s = 0.0
+        switch_blocked = False
+
+        def build_decode(bundle):
+            """Builder factory for the engine decode step executable."""
+            def build():
+                """AOT-lower the paged (attn) or batched (ssm) step."""
+                if attn_family:
+                    def step(p, c, t, pv, tb):
+                        """Positional paged decode step (block tables)."""
+                        return model.decode_step(
+                            p, c, t, pv, backend=model_backend,
+                            schedules=bundle, block_tables=tb)
+                    fn = jax.jit(step)
+                    try:
+                        fn = fn.lower(params, pool,
+                                      jnp.asarray(tok_np)[:, None],
+                                      jnp.asarray(pos_np),
+                                      jnp.asarray(tables_np)).compile()
+                    except Exception:  # pragma: no cover
+                        pass
+                    return fn
+                fn = jax.jit(functools.partial(
+                    model.decode_step, backend=model_backend,
+                    schedules=bundle))
+                try:
+                    fn = fn.lower(params, pool,
+                                  jnp.asarray(tok_np)[:, None],
+                                  jnp.int32(0)).compile()
+                except Exception:  # pragma: no cover
+                    pass
+                return fn
+            return build
+
+        step_idx = 0
+        while True:
+            for r in range(rows_n):
+                if row_req[r] is not None and row_remaining[r] <= 0:
+                    retire(r)
+            if (attn_family and alloc.num_live
+                    and alloc.fragmentation() > 0.5):
+                live = [row_blocks[r] for r in range(rows_n)
+                        if row_blocks[r]]
+                perm, moved = alloc.compact_tables(tables_np, live)
+                if moved:
+                    gather = jnp.asarray(perm)
+                    pool = jax.tree.map(lambda p: p[:, gather], pool)
+                    self.stats.compactions += 1
+            while self._queue:
+                free_rows = [r for r in range(rows_n)
+                             if row_req[r] is None]
+                if not free_rows:
+                    break
+                nxt = self._queue[0]
+                if attn_family:
+                    needed = len(nxt.tokens) + nxt.max_new_tokens - 1
+                    if needed > max_blocks * bs:
+                        # Needs a wider table than this activation
+                        # compiled: defer to the next activation, whose
+                        # geometry is recomputed over the queue.
+                        break
+                    if not alloc.can_fit(needed):
+                        if not any(row_req):
+                            raise RuntimeError(
+                                f"request {nxt.request_id!r} needs "
+                                f"{blocks_needed(needed, bs)} KV blocks "
+                                f"but the pool only has "
+                                f"{alloc.num_free} free with every row "
+                                f"idle; raise kv_blocks")
+                        break   # backpressure: wait for retirements
+                admit(self._queue.pop(0), free_rows[0])
+            active = [r for r in range(rows_n)
+                      if row_req[r] is not None]
+            if not active:
+                break
+            if not any(row_remaining[r] > 0 for r in active):
+                continue    # budget-1 admissions retire at loop top
+            if step_fn is None:
+                step_fn, _ = self._compile(decode_key(cur_bundle),
+                                           build_decode(cur_bundle))
+            if dispatch is not None:
+                kind, prob = dec
+                dispatch.propose(kind, prob)
+            t_step = time.perf_counter()
+            if attn_family:
+                lg, pool = step_fn(params, pool,
+                                   jnp.asarray(tok_np)[:, None],
+                                   jnp.asarray(pos_np),
+                                   jnp.asarray(tables_np))
+            else:
+                lg, pool = step_fn(params, pool,
+                                   jnp.asarray(tok_np)[:, None],
+                                   jnp.int32(0))
+            new_tok = np.asarray(
+                jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32))
+            dt = time.perf_counter() - t_step
+            act_stats.decode_s += dt
+            self.stats.decode_s += dt
+            bucket_entry()["decode_s"] += dt
+            if dispatch is not None:
+                dispatch.observe(kind, prob, dt)
+                if pallas and not switch_blocked:
+                    committed = dispatch.committed(kind, prob)
+                    if (committed is not None
+                            and committed != cur_bundle.get(kind)):
+                        new_bundle = cur_bundle.replace(
+                            **{kind: committed})
+                        new_key = decode_key(new_bundle)
+                        if self.exec_cache.contains(new_key):
+                            step_fn, _ = self._compile(
+                                new_key, build_decode(new_bundle))
+                            cur_bundle = new_bundle
+                            self.stats.free_switches += 1
+                            self.stats.commits_seen += 1
+                        elif recompiles < self.max_recompiles:
+                            t_c = time.perf_counter()
+                            step_fn, _ = self._compile(
+                                new_key, build_decode(new_bundle))
+                            recompile_s += time.perf_counter() - t_c
+                            recompiles += 1
+                            cur_bundle = new_bundle
+                            self.stats.commits_seen += 1
+                        else:
+                            switch_blocked = True
+                            self.stats.commits_seen += 1
+            for r in active:
+                if row_remaining[r] > 0:
+                    t = int(new_tok[r])
+                    row_out[r].append(t)
+                    tok_np[r] = t
+                    pos_np[r] += 1
+                    row_remaining[r] -= 1
+            self.stats.steps += 1
+            step_idx += 1
+            if on_step is not None:
+                on_step({"step": step_idx,
+                         "active": [row_req[r].request_id
+                                    for r in range(rows_n)
+                                    if row_req[r] is not None],
+                         "pending": len(self._queue),
+                         "free_blocks": (alloc.num_free
+                                         if attn_family else None)})
+
+        act_stats.recompiles = recompiles
+        act_stats.recompile_s = recompile_s
+        if pallas and cur_bundle is not None:
+            pf_b = next((b for b in pf_bundles.values()
+                         if b is not None), cur_bundle)
+            act_stats.schedules = dict(
+                resolve_bundle_report(pf_b, cur_bundle))
+        self.stats.batches += 1
+        self.stats.recompiles += recompiles
+        bucket_entry()["batches"] += 1
+        self.stats.cache = self.exec_cache.stats()
+        if self.registry is not None and step_idx:
+            key = reg.RegistryKey.make(
+                "serve_decode",
+                {"arch": cfg.name, "batch": int(rows_n),
+                 "prompt_len": int(s_pad),
+                 "new_tokens": int(step_idx)},
+                reg.runtime_fingerprint(), "measured")
+            self.registry.record_measurement(
+                key, {"type": "serve_decode", "arch": cfg.name,
+                      "decode_tok_s": act_stats.decode_tok_s},
+                act_stats.decode_s / max(step_idx, 1))
+        return results
+
     # ------------------------------------------------------ execution
     def _compile(self, key: ExecKey, builder) -> Tuple[Any, bool]:
+        """Executable for key via the shared cache: ``(fn, was_hit)``."""
         return self.exec_cache.get(key, builder)
 
     def run_batch(self, batch: Dict[str, jnp.ndarray], *,
@@ -296,7 +755,8 @@ class ServeSession:
                   temperature: Optional[float] = None,
                   rng: Optional[jax.Array] = None,
                   total_len: Optional[int] = None,
-                  real_tokens: Optional[int] = None):
+                  real_tokens: Optional[int] = None,
+                  seq_starts=None):
         """Greedy (or sampled) continuation of one pre-formed batch —
         the PR-4 ``generate`` body with the prefill/decode step
         functions behind the cross-request executable cache.
@@ -309,6 +769,14 @@ class ServeSession:
         budget sum): session-level throughput counts goodput, not
         pad-row or over-budget tokens, while the per-call ``ServeStats``
         keeps the executable's ``bsz * max_new_tokens`` accounting.
+
+        ``seq_starts`` ([B] int32, optional) marks each row's first
+        real token in a left-padded batch; pad tokens are then masked
+        out of attention (and the SSM recurrence), making padded rows
+        numerically equivalent to unpadded ones.  For the dense/MoE/SSM
+        families the mask vector is ALWAYS threaded through the
+        executables (zeros when not given) so cached step functions
+        have one uniform signature; other families reject it.
         """
         from repro.runtime.serve_loop import (ServeStats, resolve_bundle_report,
                                               serve_dispatch_problems)
@@ -318,6 +786,15 @@ class ServeSession:
         temperature = (self.temperature if temperature is None
                        else temperature)
         bsz, prompt_len = batch["tokens"].shape
+        masked = cfg.family in ("dense", "moe", "ssm")
+        if seq_starts is not None and not masked:
+            raise ValueError(
+                f"seq_starts is not supported for family {cfg.family!r}")
+        starts = None
+        if masked:
+            starts = (jnp.zeros((bsz,), jnp.int32) if seq_starts is None
+                      else jnp.asarray(seq_starts,
+                                       jnp.int32).reshape(bsz))
         base_total = prompt_len + max_new_tokens
         if total_len is not None:
             if total_len < base_total:
@@ -354,21 +831,36 @@ class ServeSession:
                               prefill_bundle, backend)
 
         def build_prefill():
-            fn = jax.jit(functools.partial(
-                model.prefill, backend=model_backend,
-                schedules=prefill_bundle))
+            """AOT-lower the batched prefill (masked when starts set)."""
+            # AOT-compile outside the timed region: the dispatch
+            # observation (and prefill_s) should measure the step,
+            # not XLA compilation.
+            if starts is None:
+                fn = jax.jit(functools.partial(
+                    model.prefill, backend=model_backend,
+                    schedules=prefill_bundle))
+                try:
+                    fn = fn.lower(params, batch).compile()
+                except Exception:  # pragma: no cover - AOT unsupported
+                    pass
+                return fn
+
+            def pf(p, b, st):
+                """Positional prefill (uniform ExecutableCache sig)."""
+                return model.prefill(p, b, backend=model_backend,
+                                     schedules=prefill_bundle,
+                                     seq_starts=st)
+            fn = jax.jit(pf)
             try:
-                # AOT-compile outside the timed region: the dispatch
-                # observation (and prefill_s) should measure the step,
-                # not XLA compilation.
-                fn = fn.lower(params, batch).compile()
+                fn = fn.lower(params, batch, starts).compile()
             except Exception:  # pragma: no cover - AOT unsupported
                 pass
             return fn
 
         prefill_fn, _ = self._compile(prefill_key, build_prefill)
         t0 = time.time()
-        logits, cache = prefill_fn(params, batch)
+        logits, cache = (prefill_fn(params, batch) if starts is None
+                         else prefill_fn(params, batch, starts))
         jax.block_until_ready(logits)
         prefill_exec_s = time.time() - t0
         if dispatch is not None:
@@ -378,6 +870,7 @@ class ServeSession:
         full = model.init_cache(bsz, total)
 
         def fit(dst, src):
+            """Copy the prefill cache into the full-capacity buffer."""
             if dst.shape == src.shape:
                 return src.astype(dst.dtype)
             sl = tuple(slice(0, s) for s in src.shape)
@@ -388,6 +881,7 @@ class ServeSession:
         prefill_s = time.time() - t0
 
         def pick(lg, key):
+            """Next token per row: greedy argmax or sampled."""
             if temperature <= 0.0:
                 return jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
             return jax.random.categorical(key, lg[:, -1] / temperature,
@@ -401,22 +895,43 @@ class ServeSession:
                              if cfg.family == "vlm" else 0)
 
         def decode_key(bundle) -> ExecKey:
+            """Cache key of this batch shape's decode step."""
             return ExecKey(cfg.name, "decode", bsz, total, bundle,
                            backend)
 
+        # Recurrent caches carry no pad entries after a masked prefill,
+        # so only the attention families thread starts through decode.
+        dec_starts = starts if cfg.family in ("dense", "moe") else None
+
         def build_decode(bundle):
+            """Builder factory for the batched decode step executable."""
             def build():
-                fn = jax.jit(functools.partial(model.decode_step,
-                                               backend=model_backend,
-                                               schedules=bundle))
+                """AOT-lower the decode step (masked when starts set)."""
+                # Same AOT treatment as prefill: keep compilation out
+                # of the decode-step timings (a compile-inflated first
+                # probe would poison the dispatcher's medians).
+                if dec_starts is None:
+                    fn = jax.jit(functools.partial(
+                        model.decode_step, backend=model_backend,
+                        schedules=bundle))
+                    try:
+                        fn = fn.lower(params, cache, tok[:, None],
+                                      jnp.int32(pos0)).compile()
+                    except Exception:  # pragma: no cover
+                        pass
+                    return fn
+
+                def st_step(p, c, t, pos, st):
+                    """Positional masked decode step (starts threaded)."""
+                    return model.decode_step(p, c, t, pos,
+                                             backend=model_backend,
+                                             schedules=bundle,
+                                             seq_starts=st)
+                fn = jax.jit(st_step)
                 try:
-                    # Same AOT treatment as prefill: keep compilation
-                    # out of the decode-step timings (a compile-inflated
-                    # first probe would poison the dispatcher's
-                    # medians).
                     fn = fn.lower(params, cache, tok[:, None],
-                                  jnp.int32(pos0)).compile()
-                except Exception:  # pragma: no cover - AOT unsupported
+                                  jnp.int32(pos0), dec_starts).compile()
+                except Exception:  # pragma: no cover
                     pass
                 return fn
             return build
@@ -436,8 +951,12 @@ class ServeSession:
                 kind, problem = dec
                 dispatch.propose(kind, problem)
                 t_step = time.perf_counter()
-            lg, cache = step_fn(params, cache, tok[:, None],
-                                jnp.int32(pos0 + i))
+            if dec_starts is None:
+                lg, cache = step_fn(params, cache, tok[:, None],
+                                    jnp.int32(pos0 + i))
+            else:
+                lg, cache = step_fn(params, cache, tok[:, None],
+                                    jnp.int32(pos0 + i), dec_starts)
             rng, sub = jax.random.split(rng)
             tok = pick(lg, sub)
             out.append(np.asarray(tok))

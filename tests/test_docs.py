@@ -1,0 +1,93 @@
+"""Docs gates, runnable without ruff: D1 docstring presence on the
+documented-API paths (mirrors the ruff config in pyproject.toml) and
+the markdown link checker over README + docs/."""
+import ast
+import importlib.util
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Keep in sync with pyproject.toml: D1 is enforced (not ignored) only
+# on these paths; everything else carries a per-file-ignore.
+D1_PATHS = sorted(
+    list((REPO / "src/repro/serving").glob("*.py"))
+    + [REPO / "src/repro/runtime/dispatch.py"]
+)
+
+DOC_FILES = [
+    REPO / "README.md",
+    REPO / "docs/ARCHITECTURE.md",
+    REPO / "docs/SERVING.md",
+]
+
+
+def _missing_docstrings(path):
+    """(lineno, kind, name) for every def/class/module lacking a
+    docstring — the same surface ruff's D100-D107 presence rules
+    cover, including nested functions."""
+    tree = ast.parse(path.read_text())
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append((1, "module", path.name))
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if ast.get_docstring(node) is None:
+                kind = ("class" if isinstance(node, ast.ClassDef)
+                        else "function")
+                missing.append((node.lineno, kind, node.name))
+    return missing
+
+
+def test_d1_paths_exist():
+    """The gated surface is non-trivial (guards against the glob
+    silently matching nothing after a rename)."""
+    assert len(D1_PATHS) >= 6
+    for p in D1_PATHS:
+        assert p.exists(), p
+
+
+@pytest.mark.parametrize("path", D1_PATHS,
+                         ids=lambda p: str(p.relative_to(REPO)))
+def test_docstring_presence(path):
+    """Every module/class/function on the documented-API paths has a
+    docstring (local mirror of CI's ruff --select D1 gate)."""
+    missing = _missing_docstrings(path)
+    assert not missing, (
+        f"{path.relative_to(REPO)} missing docstrings: "
+        + ", ".join(f"{k} {n} (line {ln})" for ln, k, n in missing))
+
+
+def _load_checker():
+    """Import tools/check_links.py (tools/ is not a package)."""
+    spec = importlib.util.spec_from_file_location(
+        "check_links", REPO / "tools" / "check_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_doc_files_exist():
+    """README and both docs are present and substantive."""
+    for p in DOC_FILES:
+        assert p.exists(), p
+        assert len(p.read_text()) > 1000, p
+
+
+def test_markdown_links():
+    """No broken relative links or anchors in README/docs (local
+    mirror of CI's docs job)."""
+    checker = _load_checker()
+    n, problems = checker.check_paths(
+        [str(p) for p in DOC_FILES], REPO)
+    assert n == len(DOC_FILES)
+    assert not problems, "\n".join(problems)
+
+
+def test_readme_links_docs():
+    """The README points readers at both deep-dive documents."""
+    text = (REPO / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in text
+    assert "docs/SERVING.md" in text

@@ -1,0 +1,110 @@
+"""Markdown link checker for the repo docs (stdlib only).
+
+Validates every inline link/image target in the given markdown files:
+
+* relative paths must exist on disk (resolved against the file's
+  directory);
+* ``#fragment`` anchors must match a heading in the target file
+  (GitHub-style slugs), including same-file ``(#section)`` links;
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI),
+  as are targets that resolve outside the repository root (e.g. the
+  ``../../actions/...`` badge routes GitHub serves site-relative).
+
+Usage::
+
+    python tools/check_links.py README.md docs/*.md
+
+Exits nonzero listing every broken link.  ``tests/test_docs.py`` runs
+the same checks in the tier-1 suite; CI's docs job runs this CLI.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+# Inline links/images: [text](target) — target up to the first ')' not
+# inside the URL.  Good enough for these docs (no nested parens).
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced and inline code spans so code samples containing
+    bracket syntax are not parsed as links."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`\n]*`", "", text)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return re.sub(r" ", "-", h)
+
+
+def _anchors(md_path: Path) -> set:
+    """All heading anchors defined by a markdown file."""
+    return {_slug(m.group(1))
+            for m in _HEADING_RE.finditer(md_path.read_text())}
+
+
+def check_file(md_path: Path, root: Path) -> List[str]:
+    """Broken-link descriptions for one markdown file (empty = clean)."""
+    problems: List[str] = []
+    text = _strip_code(md_path.read_text())
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        if not path_part:                     # same-file #anchor
+            if fragment and _slug(fragment) not in _anchors(md_path):
+                problems.append(f"{md_path}: missing anchor "
+                                f"#{fragment}")
+            continue
+        dest = (md_path.parent / path_part).resolve()
+        try:
+            dest.relative_to(root.resolve())
+        except ValueError:
+            continue    # escapes the repo (e.g. GitHub web routes)
+        if not dest.exists():
+            problems.append(f"{md_path}: broken link -> {target}")
+            continue
+        if fragment and dest.suffix == ".md":
+            if _slug(fragment) not in _anchors(dest):
+                problems.append(f"{md_path}: {path_part} has no "
+                                f"anchor #{fragment}")
+    return problems
+
+
+def check_paths(paths: List[str], root: Path) -> Tuple[int, List[str]]:
+    """Check many files; returns (files checked, problem list)."""
+    problems: List[str] = []
+    n = 0
+    for p in paths:
+        md = Path(p)
+        if not md.exists():
+            problems.append(f"{p}: file not found")
+            continue
+        n += 1
+        problems.extend(check_file(md, root))
+    return n, problems
+
+
+def main(argv: List[str]) -> int:
+    """CLI entry point: check each argument, print problems."""
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]")
+        return 2
+    n, problems = check_paths(argv, Path(__file__).resolve().parent.parent)
+    for p in problems:
+        print(p)
+    print(f"checked {n} file(s): "
+          f"{'OK' if not problems else f'{len(problems)} broken'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
