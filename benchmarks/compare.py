@@ -63,6 +63,16 @@ POLICIES: Dict[str, Policy] = {
     # silently regress back to batch-sized waits
     "serve.queue_p50_s": Policy("lower", rel=1.0, abs_band=0.25),
     "serve.queue_p95_s": Policy("lower", rel=1.0, abs_band=0.25),
+    # chaos bench: survival is a hard invariant (zero tolerance — any
+    # injected single fault killing a bystander request is a bug, not a
+    # trend); the degraded-throughput ratio is wall-clock-derived and
+    # jit-warmth-sensitive, so it gets the wide band; shed rate is
+    # deterministic by construction and tracked report-only
+    "faults.survival_rate": Policy("higher", rel=0.0, abs_band=0.0),
+    "faults.degraded_tok_s_ratio": Policy("higher", rel=0.5,
+                                          abs_band=0.02),
+    "faults.shed_rate": Policy("higher", gate=False),
+    "faults.events_recorded": Policy("higher", gate=False),
     # machine-absolute: tracked for the trajectory, never gated
     "sweep.cold_wall_time_s": Policy("lower", gate=False),
     "sweep.scalar_wall_time_s": Policy("lower", gate=False),

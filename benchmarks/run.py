@@ -39,7 +39,7 @@ import traceback
 MODULES = [
     "loop_orders", "top_candidates", "cache_hierarchy", "parallel",
     "combinations", "sparsity", "tile_swap", "adaptive", "validation",
-    "roofline", "registry", "serve",
+    "roofline", "registry", "serve", "faults",
 ]
 
 
@@ -60,6 +60,10 @@ def main(argv=None) -> int:
                     help="where to write the serving-session metrics "
                          "(cache-hit rate, compiles, queue latency "
                          "percentiles; '' disables)")
+    ap.add_argument("--faults-json", default="BENCH_faults.json",
+                    help="where to write the chaos-bench metrics "
+                         "(survival rate, degraded-throughput ratio, "
+                         "shed rate; '' disables)")
     args = ap.parse_args(argv)
     unknown = [b for b in args.benches if b not in MODULES]
     if unknown:
@@ -116,6 +120,17 @@ def main(argv=None) -> int:
                       f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# serve metrics written to {args.serve_json}",
+              flush=True)
+    # Chaos-bench headline (survival under injected faults, price of
+    # degradation): own artifact so the CI chaos job gates it directly.
+    faults = {k: v for k, v in metrics().items()
+              if k.startswith("faults.")}
+    if args.faults_json and faults:
+        with open(args.faults_json, "w", encoding="utf-8") as f:
+            json.dump({"quick": bool(args.quick), "metrics": faults},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# faults metrics written to {args.faults_json}",
               flush=True)
 
     if failures:

@@ -31,10 +31,13 @@ import dataclasses
 import functools
 import hashlib
 import json
+import logging
 import os
 import tempfile
 import threading
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+
+log = logging.getLogger("repro.registry")
 
 SCHEMA_VERSION = 1
 
@@ -226,6 +229,7 @@ class TuningRegistry:
         self.path = path
         self._records: Dict[str, TuningRecord] = {}
         self._lock = threading.Lock()
+        self.malformed_lines = 0
         if path and autoload:
             self.load()
 
@@ -247,10 +251,13 @@ class TuningRegistry:
     # -- persistence ----------------------------------------------------
     def load(self) -> int:
         """Replay the JSONL log (last write per key wins).  Unknown or
-        future-schema lines are skipped, not fatal."""
+        future-schema lines are skipped, not fatal; torn/malformed lines
+        (e.g. a crash mid-append) are counted in ``malformed_lines`` and
+        reported once via a warning, never raised."""
         if not self.path or not os.path.exists(self.path):
             return 0
         n = 0
+        bad = 0
         with self._lock:
             with open(self.path, "r", encoding="utf-8") as f:
                 for line in f:
@@ -260,12 +267,20 @@ class TuningRegistry:
                     try:
                         d = json.loads(line)
                         if d.get("schema", 0) > SCHEMA_VERSION:
+                            # Future-schema lines are intentional skips
+                            # (forward compat), not corruption.
                             continue
                         rec = TuningRecord.from_dict(d)
                     except (ValueError, KeyError, TypeError):
+                        bad += 1
                         continue
                     self._records[rec.key.canonical()] = rec
                     n += 1
+            self.malformed_lines += bad
+        if bad:
+            log.warning("registry %s: skipped %d malformed line(s) "
+                        "(torn append or corruption); kept %d records",
+                        self.path, bad, n)
         return n
 
     def _append_line(self, rec: TuningRecord) -> None:
@@ -275,11 +290,23 @@ class TuningRegistry:
                     exist_ok=True)
         line = canonical_json(rec.to_dict()) + "\n"
         # One O_APPEND write per record: whole lines interleave across
-        # concurrent writers, bytes never do.
+        # concurrent writers, bytes never do.  If a previous writer died
+        # mid-append the file can end without a newline; lead with one so
+        # this record starts a fresh line instead of extending the torn
+        # tail (load() then skips exactly one malformed line).
+        buf = line.encode("utf-8")
+        try:
+            with open(self.path, "rb") as f:
+                f.seek(-1, os.SEEK_END)
+                if f.read(1) != b"\n":
+                    buf = b"\n" + buf
+        except (OSError, ValueError):
+            pass  # missing or empty file: nothing to repair
         fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND,
                      0o644)
         try:
-            os.write(fd, line.encode("utf-8"))
+            os.write(fd, buf)
+            os.fsync(fd)  # durable before we report the record stored
         finally:
             os.close(fd)
 
@@ -410,7 +437,8 @@ class TuningRegistry:
             by_kind[rec.key.kind] = by_kind.get(rec.key.kind, 0) + 1
             measured += rec.measured is not None
         return {"records": len(self._records), "by_kind": by_kind,
-                "measured": measured, "path": self.path}
+                "measured": measured, "path": self.path,
+                "malformed_lines": self.malformed_lines}
 
 
 _DEFAULT_REGISTRY: Optional[TuningRegistry] = None

@@ -90,6 +90,27 @@ def main() -> None:
                          "the pool so every engine row reaches full "
                          "capacity — smaller values throttle admission "
                          "(--session)")
+    ap.add_argument("--request-deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget from submit; "
+                         "blown requests finish TIMED_OUT with partial "
+                         "tokens instead of stalling the stream "
+                         "(--session)")
+    ap.add_argument("--max-queue-s", type=float, default=None,
+                    help="load shedding: requests queued longer than "
+                         "this are shed (TIMED_OUT) before admission "
+                         "(--session)")
+    ap.add_argument("--fallback-backend", default="reference",
+                    choices=("reference", "none"),
+                    help="after pallas AOT retries are exhausted, "
+                         "'reference' degrades that bucket to the XLA "
+                         "reference backend; 'none' keeps the un-lowered "
+                         "pallas fn (--session)")
+    ap.add_argument("--inject-fault", action="append", default=None,
+                    metavar="KIND@STEP",
+                    help="dev-only deterministic fault injection "
+                         "(kind@step[xTIMES][.ROW]; kinds: compile, nan, "
+                         "alloc, slow, doublefree); repeatable "
+                         "(--session)")
     args = ap.parse_args()
 
     import jax
@@ -126,7 +147,9 @@ def main() -> None:
 
     if args.session:
         import numpy as np
-        from repro.serving import ServeSession
+        from repro.serving import FaultInjector, ServeSession
+        faults = (FaultInjector.from_strings(args.inject_fault)
+                  if args.inject_fault else None)
         session = ServeSession(
             model, params, dispatch=dispatch, backend=args.backend,
             registry=registry, max_recompiles=args.max_recompiles,
@@ -135,7 +158,11 @@ def main() -> None:
                               args.batch_sizes.split(",") if b.strip()),
             temperature=args.temperature,
             kv_block_size=args.kv_block_size,
-            kv_blocks=args.kv_blocks)
+            kv_blocks=args.kv_blocks,
+            request_deadline_s=args.request_deadline_s,
+            max_queue_s=args.max_queue_s,
+            fallback_backend=args.fallback_backend,
+            faults=faults)
         rng = np.random.default_rng(0)
         reqs = _load_requests(args.requests_file, args.num_requests,
                               args.prompt_len, args.new_tokens,
@@ -144,9 +171,12 @@ def main() -> None:
             session.submit(toks, max_new_tokens=budget)
         results = session.drain()
         for r in results:
+            tail = "" if r.state == "COMPLETED" else (
+                f" [{r.state}: {r.reason}]")
             print(f"{r.request_id}: {len(r.tokens)} tokens via "
                   f"bucket(b={r.bucket.batch}, p={r.bucket.prompt_len}, "
-                  f"t={r.bucket.total_len}); queued {r.queue_s*1e3:.1f}ms")
+                  f"t={r.bucket.total_len}); queued {r.queue_s*1e3:.1f}ms"
+                  f"{tail}")
         summary = session.stats.to_dict()
         if summary["steps"]:
             print(f"\nengine: {summary['steps']} decode steps, "
@@ -165,6 +195,14 @@ def main() -> None:
         for name, b in summary["buckets"].items():
             print(f"  bucket {name}: {b['tok_s']:.0f} tok/s over "
                   f"{int(b['batches'])} batches")
+        faulty = {k: summary[k] for k in
+                  ("rejected", "timed_out", "cancelled", "failed", "shed",
+                   "fallbacks", "poisoned_rows", "stragglers")
+                  if summary.get(k)}
+        if faulty or summary.get("degraded"):
+            print(f"faults: {faulty} degraded={summary['degraded']} "
+                  f"({summary['degraded_buckets']} buckets); "
+                  f"{len(summary['events'])} events recorded")
         if dispatch is not None:
             for entry in dispatch.report().values():
                 committed = entry["committed"]

@@ -22,6 +22,8 @@ log = logging.getLogger("repro.ft")
 
 @dataclasses.dataclass
 class StragglerEvent:
+    """One flagged slow step: its duration vs the EWMA it broke."""
+
     step: int
     duration: float
     ewma: float
@@ -29,10 +31,21 @@ class StragglerEvent:
 
 
 class StragglerMonitor:
+    """EWMA step-time outlier detector (train loop and serving engine).
+
+    ``record(step, duration)`` returns a :class:`StragglerEvent` when
+    ``duration`` exceeds ``threshold ×`` the running EWMA (after
+    ``warmup_steps``); outliers never update the EWMA, so one spike does
+    not raise the bar for the next.  ``on_straggler`` is the caller's
+    escalation hook — ``ServeSession`` uses it to count the event into
+    ``SessionStats`` and optionally shrink admission.
+    """
+
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
                  warmup_steps: int = 5,
                  on_straggler: Optional[Callable[[StragglerEvent], None]]
                  = None):
+        """Set the detection knobs; no state until :meth:`record`."""
         self.threshold = threshold
         self.alpha = alpha
         self.warmup = warmup_steps
@@ -42,6 +55,7 @@ class StragglerMonitor:
         self._n = 0
 
     def record(self, step: int, duration: float) -> Optional[StragglerEvent]:
+        """Feed one step time; returns the event if it was an outlier."""
         self._n += 1
         if self.ewma is None:
             self.ewma = duration
@@ -60,6 +74,12 @@ class StragglerMonitor:
             return event
         self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration
         return event
+
+    def summary(self) -> Dict[str, float]:
+        """JSON-ready snapshot: steps seen, current EWMA, event count."""
+        return {"steps": float(self._n),
+                "ewma_s": float(self.ewma or 0.0),
+                "events": float(len(self.events))}
 
 
 def run_with_restart(make_state: Callable[[], Dict],

@@ -57,6 +57,9 @@ class ServeStats:
     recompiles: int = 0
     recompile_s: float = 0.0
     schedules: Optional[Dict[str, Any]] = None
+    # True when a pallas AOT failure downgraded this call's bucket to the
+    # reference backend mid-session (see SessionStats.degraded_buckets).
+    degraded: bool = False
 
     @property
     def decode_tok_s(self) -> float:

@@ -1,12 +1,18 @@
 """Serving sessions: persistent engine with dispatch-aware continuous
-batching and a cross-request compiled-executable cache."""
+batching, a cross-request compiled-executable cache, and fault-tolerant
+request outcomes (deadlines, poison-row isolation, degradation)."""
 from repro.serving.bucketing import Bucket, candidate_buckets, pick_bucket
 from repro.serving.cache import ExecKey, ExecutableCache
-from repro.serving.session import (Request, RequestResult, ServeSession,
-                                   SessionStats)
+from repro.serving.faults import (FaultInjector, FaultSpec, InjectedFault,
+                                  parse_fault)
+from repro.serving.session import (Request, RequestResult, RequestState,
+                                   ServeSession, SessionStats,
+                                   TERMINAL_STATES)
 
 __all__ = [
     "Bucket", "candidate_buckets", "pick_bucket",
     "ExecKey", "ExecutableCache",
-    "Request", "RequestResult", "ServeSession", "SessionStats",
+    "FaultInjector", "FaultSpec", "InjectedFault", "parse_fault",
+    "Request", "RequestResult", "RequestState", "ServeSession",
+    "SessionStats", "TERMINAL_STATES",
 ]

@@ -27,7 +27,21 @@ amortised *across* them.  The session owns:
   ``generate`` call — and a commit whose executable is already cached
   switches for free, without spending compile budget,
 * :class:`SessionStats`: per-bucket tok/s, cache hits/misses/evictions,
-  re-AOTs, and queue-latency percentiles.
+  re-AOTs, queue-latency percentiles, and the fault-tolerance ledger
+  (terminal-state counters, degradation flag, recorded events),
+* **fault tolerance**: every request ends in a terminal
+  :class:`RequestState` with a reason — never-fits requests are
+  REJECTED per-request instead of raising out of :meth:`drain`,
+  ``deadline_s`` / ``max_queue_s`` budgets time out or shed requests,
+  non-finite logits retire only the poisoned row (blocks freed, stream
+  unaffected), AOT-compile failures retry with capped backoff and then
+  degrade per-bucket to the reference backend
+  (``fallback_backend="reference"``), and a
+  :class:`~repro.runtime.ft.StragglerMonitor` watches decode-step times
+  (``on_straggler`` can shrink admission).  ``docs/SERVING.md`` §Failure
+  semantics is the operator contract; :mod:`repro.serving.faults`
+  injects each of these deterministically for tests and the chaos
+  bench.
 
 ``runtime/serve_loop.generate`` is a thin single-request client of this
 class (an ephemeral session per call reproduces the PR-4 behaviour
@@ -40,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import logging
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -50,12 +65,47 @@ import numpy as np
 from repro.core import registry as reg
 from repro.models.model_zoo import (Model, bucket_length,
                                     left_pad_prompts, prompt_starts)
+from repro.runtime.ft import StragglerMonitor
 from repro.serving.bucketing import (Bucket, candidate_buckets,
                                      pick_bucket)
 from repro.serving.cache import ExecKey, ExecutableCache
 from repro.serving.paged_kv import BlockAllocator, blocks_needed
 
+log = logging.getLogger("repro.serving")
+
 _REQUEST_IDS = itertools.count()
+
+# Bucket of results that never reached an engine row (rejected, shed,
+# cancelled while queued): there is no meaningful geometry to report.
+_NULL_BUCKET = Bucket(0, 0, 0)
+
+
+class RequestState:
+    """Request lifecycle states; all but QUEUED/RUNNING are terminal.
+
+    * ``COMPLETED`` — full decode budget delivered.
+    * ``REJECTED`` — can never be served by this session's configuration
+      (e.g. the whole ``prompt + budget`` KV footprint exceeds the pool).
+    * ``TIMED_OUT`` — ``deadline_s`` blown (queued or mid-decode, with
+      partial tokens) or shed by ``max_queue_s`` while queued.
+    * ``CANCELLED`` — :meth:`ServeSession.cancel` (partial tokens when
+      the request was already decoding).
+    * ``FAILED`` — a step-level fault (non-finite logits, kernel
+      exception) retired the row; partial tokens, reason recorded.
+    """
+
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    COMPLETED = "COMPLETED"
+    REJECTED = "REJECTED"
+    TIMED_OUT = "TIMED_OUT"
+    CANCELLED = "CANCELLED"
+    FAILED = "FAILED"
+
+
+TERMINAL_STATES = frozenset({
+    RequestState.COMPLETED, RequestState.REJECTED, RequestState.TIMED_OUT,
+    RequestState.CANCELLED, RequestState.FAILED})
 
 
 @dataclasses.dataclass
@@ -65,19 +115,28 @@ class Request:
     tokens: np.ndarray              # [S] int32 prompt
     max_new_tokens: int
     request_id: str
-    submitted_at: float             # perf_counter at admission
+    submitted_at: float             # session clock at submission
     extras: Optional[Dict[str, np.ndarray]] = None  # per-row modality data
+    deadline_s: Optional[float] = None  # submit -> last token budget
 
 
 @dataclasses.dataclass
 class RequestResult:
-    """Per-request outcome returned by :meth:`ServeSession.drain`."""
+    """Per-request outcome returned by :meth:`ServeSession.drain`.
+
+    ``state`` is a terminal :class:`RequestState`; for anything but
+    ``COMPLETED`` the ``tokens`` may be partial (timed out / cancelled /
+    failed mid-decode) or empty (never admitted) and ``reason`` says
+    why.
+    """
 
     request_id: str
-    tokens: np.ndarray              # [max_new_tokens] int32
+    tokens: np.ndarray              # [<= max_new_tokens] int32
     bucket: Bucket
     queue_s: float                  # admission -> batch start
     stats: Any                      # the group's ServeStats (shared)
+    state: str = RequestState.COMPLETED
+    reason: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -95,6 +154,19 @@ class SessionStats:
     steps: int = 0                  # in-flight engine decode steps
     inflight_admissions: int = 0    # requests admitted at step boundaries
     compactions: int = 0            # paged-pool defragmentation passes
+    # --- fault-tolerance ledger (ISSUE 7) ---
+    fallbacks: int = 0              # AOT lowerings that fell back to jit
+    compile_retries: int = 0        # failed AOT attempts that were retried
+    degraded: bool = False          # any bucket fell back to reference
+    degraded_buckets: int = 0       # buckets running the reference backend
+    rejected: int = 0               # never-fits requests (REJECTED)
+    timed_out: int = 0              # deadline/queue-budget expiries
+    shed: int = 0                   # subset of timed_out: max_queue_s shed
+    cancelled: int = 0              # client cancellations
+    failed: int = 0                 # step-level faults (poison rows, ...)
+    poisoned_rows: int = 0          # rows retired on non-finite logits
+    stragglers: int = 0             # slow-step events from the monitor
+    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     queue_s: List[float] = dataclasses.field(default_factory=list)
     per_bucket: Dict[Bucket, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
@@ -129,6 +201,18 @@ class SessionStats:
             "steps": self.steps,
             "inflight_admissions": self.inflight_admissions,
             "compactions": self.compactions,
+            "fallbacks": self.fallbacks,
+            "compile_retries": self.compile_retries,
+            "degraded": self.degraded,
+            "degraded_buckets": self.degraded_buckets,
+            "rejected": self.rejected,
+            "timed_out": self.timed_out,
+            "shed": self.shed,
+            "cancelled": self.cancelled,
+            "failed": self.failed,
+            "poisoned_rows": self.poisoned_rows,
+            "stragglers": self.stragglers,
+            "events": list(self.events),
             "queue_p50_s": p50,
             "queue_p95_s": p95,
             "cache": dict(self.cache),
@@ -155,6 +239,20 @@ class ServeSession:
     ``kv_blocks`` (pool size; None sizes the pool so every engine row can
     reach its full per-row capacity, a smaller explicit value exercises
     admission backpressure).
+
+    Fault-tolerance knobs (ISSUE 7; see docs/SERVING.md §Failure
+    semantics): ``request_deadline_s`` (default per-request submit →
+    last-token budget; per-request ``submit(deadline_s=)`` overrides),
+    ``max_queue_s`` (load shedding: queued longer than this →
+    TIMED_OUT), ``fallback_backend`` ("reference" degrades a bucket's
+    executables to the reference backend after ``compile_retries``
+    failed AOT attempts; "none" keeps the un-lowered pallas fn),
+    ``compile_retries`` / ``compile_backoff_s`` (capped exponential
+    backoff between AOT attempts), ``nan_check`` (per-step finite-logits
+    screen feeding poison-row isolation), ``straggler_threshold`` +
+    ``on_straggler`` (slow-step hook; returning an int N holds admission
+    for N step boundaries), and ``faults`` (a
+    :class:`~repro.serving.faults.FaultInjector`, dev/test only).
     """
 
     def __init__(self, model: Model, params, *,
@@ -168,7 +266,16 @@ class ServeSession:
                  temperature: float = 0.0,
                  pad_id: int = 0,
                  kv_block_size: int = 16,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None,
+                 request_deadline_s: Optional[float] = None,
+                 max_queue_s: Optional[float] = None,
+                 fallback_backend: str = "reference",
+                 compile_retries: int = 2,
+                 compile_backoff_s: float = 0.01,
+                 nan_check: bool = True,
+                 straggler_threshold: float = 3.0,
+                 on_straggler=None,
+                 faults=None):
         """Validate the knobs and set up an empty queue + caches."""
         self.model = model
         self.params = params
@@ -191,15 +298,47 @@ class ServeSession:
                 "kv_blocks must be >= 2 (block 0 is the reserved sink)")
         self.kv_block_size = int(kv_block_size)
         self.kv_blocks = None if kv_blocks is None else int(kv_blocks)
+        if fallback_backend not in ("reference", "none"):
+            raise ValueError(
+                f"fallback_backend must be 'reference' or 'none', got "
+                f"{fallback_backend!r}")
+        if compile_retries < 0:
+            raise ValueError("compile_retries must be >= 0")
+        self.request_deadline_s = request_deadline_s
+        self.max_queue_s = max_queue_s
+        self.fallback_backend = fallback_backend
+        self.compile_retries = int(compile_retries)
+        self.compile_backoff_s = float(compile_backoff_s)
+        self.nan_check = bool(nan_check)
+        self.on_straggler = on_straggler
         self.exec_cache = ExecutableCache(cache_capacity)
         self.stats = SessionStats()
         self._queue: List[Request] = []
+        self._done: List[RequestResult] = []    # finished outside drain
+        self._cancelled: set = set()            # ids flagged for cancel
+        self._running: set = set()              # ids currently on a row
+        self._admission_hold = 0                # boundaries to skip admit
+        self._step_count = 0                    # session-global step index
+        self._faults = faults
+        # Deadline/shedding decisions read this clock (tests swap in a
+        # fake one for deterministic mid-decode timeouts); step timings
+        # always use the real perf counter.
+        self._clock = time.perf_counter
+        self._straggler = StragglerMonitor(
+            threshold=straggler_threshold,
+            on_straggler=self._straggler_event)
 
     # ------------------------------------------------------ admission
     def submit(self, tokens, max_new_tokens: int,
                request_id: Optional[str] = None,
-               extras: Optional[Dict[str, np.ndarray]] = None) -> str:
-        """Admit one request (a 1-D prompt); returns its id."""
+               extras: Optional[Dict[str, np.ndarray]] = None,
+               deadline_s: Optional[float] = None) -> str:
+        """Admit one request (a 1-D prompt); returns its id.
+
+        ``deadline_s`` (submit → last token, seconds) overrides the
+        session's ``request_deadline_s`` for this request; a blown
+        deadline finishes it TIMED_OUT (partial tokens if decoding).
+        """
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         prompt = np.asarray(tokens, dtype=np.int32).reshape(-1)
@@ -218,12 +357,158 @@ class ServeSession:
         self._queue.append(Request(
             tokens=prompt,
             max_new_tokens=int(max_new_tokens), request_id=rid,
-            submitted_at=time.perf_counter(), extras=extras))
+            submitted_at=self._clock(), extras=extras,
+            deadline_s=(deadline_s if deadline_s is not None
+                        else self.request_deadline_s)))
         return rid
 
     def pending(self) -> int:
         """Requests queued but not yet served."""
         return len(self._queue)
+
+    def cancel(self, request_id: str) -> bool:
+        """Cancel a request.  Queued → finished CANCELLED immediately
+        (empty tokens; the result is flushed by the next :meth:`drain`).
+        Currently decoding → flagged, retired CANCELLED with its partial
+        tokens at the next step boundary.  Unknown ids return False.
+        """
+        for i, req in enumerate(self._queue):
+            if req.request_id == request_id:
+                del self._queue[i]
+                self._finish_unadmitted(req, RequestState.CANCELLED,
+                                        "cancelled while queued",
+                                        self._done)
+                return True
+        if request_id in self._running:
+            self._cancelled.add(request_id)
+            return True
+        return False
+
+    # -------------------------------------- terminal-state accounting
+    def _count_terminal(self, state: str) -> None:
+        """Bump the per-terminal-state session counters."""
+        if state == RequestState.REJECTED:
+            self.stats.rejected += 1
+        elif state == RequestState.TIMED_OUT:
+            self.stats.timed_out += 1
+        elif state == RequestState.CANCELLED:
+            self.stats.cancelled += 1
+        elif state == RequestState.FAILED:
+            self.stats.failed += 1
+
+    def _finish_unadmitted(self, req: Request, state: str, reason: str,
+                           sink: List[RequestResult]) -> None:
+        """Terminal result for a request that never reached a row."""
+        log.warning("request %s finished %s without admission: %s",
+                    req.request_id, state, reason)
+        sink.append(RequestResult(
+            request_id=req.request_id,
+            tokens=np.zeros((0,), np.int32), bucket=_NULL_BUCKET,
+            queue_s=self._clock() - req.submitted_at, stats=None,
+            state=state, reason=reason))
+        self.stats.requests += 1
+        self._count_terminal(state)
+
+    def _sweep_queue(self, sink: List[RequestResult]) -> None:
+        """Queue-level terminal outcomes, applied at every admission
+        boundary: client cancellations, blown deadlines, and
+        ``max_queue_s`` load shedding (both → TIMED_OUT; sheds are also
+        counted in ``stats.shed``)."""
+        if not self._queue:
+            return
+        now = self._clock()
+        kept: List[Request] = []
+        for req in self._queue:
+            wait = now - req.submitted_at
+            if req.request_id in self._cancelled:
+                self._cancelled.discard(req.request_id)
+                self._finish_unadmitted(req, RequestState.CANCELLED,
+                                        "cancelled while queued", sink)
+            elif req.deadline_s is not None and wait > req.deadline_s:
+                self._finish_unadmitted(
+                    req, RequestState.TIMED_OUT,
+                    f"deadline_s={req.deadline_s:g} blown after "
+                    f"{wait:.3f}s in queue", sink)
+            elif self.max_queue_s is not None and wait > self.max_queue_s:
+                self.stats.shed += 1
+                self._finish_unadmitted(
+                    req, RequestState.TIMED_OUT,
+                    f"shed: queued {wait:.3f}s > "
+                    f"max_queue_s={self.max_queue_s:g}", sink)
+            else:
+                kept.append(req)
+        self._queue = kept
+
+    def _flush_done(self) -> List[RequestResult]:
+        """Results finalised outside drain (e.g. queued cancellations)."""
+        out, self._done = self._done, []
+        return out
+
+    def _straggler_event(self, event) -> None:
+        """StragglerMonitor hook: ledger the event, optionally hold
+        admission for the caller-returned number of boundaries."""
+        self.stats.stragglers += 1
+        self.stats.events.append(
+            {"kind": "straggler", "step": int(event.step),
+             "duration_s": float(event.duration),
+             "ratio": float(event.ratio)})
+        if self.on_straggler is not None:
+            hold = self.on_straggler(event)
+            if isinstance(hold, int) and hold > 0:
+                self._admission_hold = max(self._admission_hold, hold)
+
+    # ------------------------------------------- degradable AOT compile
+    def _aot_compile(self, fn, lower_args: tuple, *, what: str):
+        """``fn.lower(*lower_args).compile()`` with ``compile_retries``
+        retries under capped exponential backoff.  Returns
+        ``(compiled_fn, True)`` on success or ``(fn, False)`` after the
+        attempts are exhausted — the un-lowered jit fn still runs, so an
+        AOT-only failure degrades performance, never correctness."""
+        delay = self.compile_backoff_s
+        last: Optional[Exception] = None
+        for attempt in range(1 + self.compile_retries):
+            try:
+                if self._faults is not None:
+                    self._faults.compile_fault(what)
+                return fn.lower(*lower_args).compile(), True
+            except Exception as e:
+                last = e
+                log.warning("AOT compile of %s failed "
+                            "(attempt %d/%d): %s", what, attempt + 1,
+                            1 + self.compile_retries, e)
+                if attempt < self.compile_retries:
+                    self.stats.compile_retries += 1
+                    time.sleep(min(delay, 0.5))
+                    delay *= 2
+        self.stats.fallbacks += 1
+        self.stats.events.append(
+            {"kind": "compile_failure", "what": what,
+             "error": repr(last)})
+        return fn, False
+
+    def _build_step(self, jit_fn, lower_args: tuple, *, what: str,
+                    ref_builder=None):
+        """AOT-compile a step function, degrading gracefully.
+
+        ``ref_builder`` (pallas buckets only) is a zero-arg callable
+        returning the same-signature reference-backend jit fn; after a
+        persistent AOT failure with ``fallback_backend="reference"`` the
+        bucket's executable is rebuilt from it (``degraded`` flagged) —
+        tokens stay bit-identical (reference == pallas), only the kernel
+        path changes.  Otherwise the un-lowered fn is returned
+        (``stats.fallbacks``).
+        """
+        fn, ok = self._aot_compile(jit_fn, lower_args, what=what)
+        if ok or ref_builder is None \
+                or self.fallback_backend != "reference":
+            return fn
+        log.warning("degrading %s to the reference backend", what)
+        self.stats.degraded = True
+        self.stats.degraded_buckets += 1
+        self.stats.events.append({"kind": "degraded", "what": what})
+        ref_fn, _ = self._aot_compile(ref_builder(), lower_args,
+                                      what=what + " [degraded]")
+        return ref_fn
 
     # ------------------------------------------------------- batching
     def _prompt_bucket(self, request: Request) -> int:
@@ -316,14 +601,19 @@ class ServeSession:
         step with ``{"step", "active", "pending", "free_blocks"}``;
         tests (and latency probes) use it to submit mid-decode and to
         watch admission backpressure.
+
+        Every result carries a terminal :class:`RequestState`; faults
+        (poison rows, blown deadlines, never-fits rejections) finish the
+        affected request and leave the rest of the stream running — see
+        docs/SERVING.md §Failure semantics.
         """
+        results = self._flush_done()
         if (self.model.cfg.family in ("dense", "moe", "ssm")
                 and self.temperature <= 0.0):
-            results: List[RequestResult] = []
             while self._queue:
                 results.extend(self._drain_inflight(on_step))
             return results
-        return self._drain_batched()
+        return results + self._drain_batched()
 
     def _drain_batched(self) -> List[RequestResult]:
         """Admission-granularity serving: form a group, run it to
@@ -332,6 +622,12 @@ class ServeSession:
         results: List[RequestResult] = []
         masked = self.model.cfg.family in ("dense", "moe", "ssm")
         while self._queue:
+            # Queue-level outcomes only on this path: a whole group runs
+            # to completion, so mid-decode timeouts/cancellation are an
+            # engine capability (documented limitation).
+            self._sweep_queue(results)
+            if not self._queue:
+                break
             group, bucket = self._next_group()
             t_start = time.perf_counter()
             waits = [t_start - r.submitted_at for r in group]
@@ -416,6 +712,7 @@ class ServeSession:
         engine_bucket = Bucket(rows_n, s_pad, cap)
         act_stats = ServeStats(prefill_s=0.0, decode_s=0.0,
                                tokens_generated=0, backend=backend)
+        deg0 = self.stats.degraded_buckets
 
         problems = (serve_dispatch_problems(cfg, rows_n, s_pad, cap)
                     if dispatch is not None else {})
@@ -452,21 +749,25 @@ class ServeSession:
                           backend)
 
             def build():
-                """AOT-lower the positional prefill wrapper."""
-                def pf(p, b, st):
-                    """Positional prefill (uniform ExecutableCache sig)."""
-                    return model.prefill(p, b, backend=model_backend,
-                                         schedules=bundle,
-                                         seq_starts=st)
-                fn = jax.jit(pf)
-                try:
-                    fn = fn.lower(
-                        params,
-                        {"tokens": jnp.zeros((1, p_len), jnp.int32)},
-                        jnp.zeros((1,), jnp.int32)).compile()
-                except Exception:  # pragma: no cover - AOT unsupported
-                    pass
-                return fn
+                """AOT-lower the positional prefill wrapper (retry +
+                per-bucket reference degradation on failure)."""
+                def make(be, sched):
+                    """Jit the prefill against one backend/schedules."""
+                    def pf(p, b, st):
+                        """Positional prefill (uniform cache sig)."""
+                        return model.prefill(p, b, backend=be,
+                                             schedules=sched,
+                                             seq_starts=st)
+                    return jax.jit(pf)
+                lower_args = (
+                    params,
+                    {"tokens": jnp.zeros((1, p_len), jnp.int32)},
+                    jnp.zeros((1,), jnp.int32))
+                return self._build_step(
+                    make(model_backend, bundle), lower_args,
+                    what=f"prefill[b1,p{p_len}]",
+                    ref_builder=(lambda: make("xla", None)) if pallas
+                    else None)
             fn, _ = self._compile(key, build)
             return fn
 
@@ -476,6 +777,10 @@ class ServeSession:
         row_remaining = [0] * rows_n
         row_out: List[List[int]] = [[] for _ in range(rows_n)]
         row_wait = [0.0] * rows_n
+        # Terminal state a row retires with, when not COMPLETED (poison
+        # rows, deadlines, cancellations): set before forcing
+        # row_remaining to 0, consumed by retire().
+        row_fate: Dict[int, Tuple[str, Optional[str]]] = {}
         pos_np = np.zeros((rows_n,), np.int32)
         tok_np = np.full((rows_n,), self.pad_id, np.int32)
         results: List[RequestResult] = []
@@ -486,35 +791,80 @@ class ServeSession:
                 engine_bucket,
                 {"batches": 0, "tokens": 0, "decode_s": 0.0})
 
+        def free_row_blocks(r: int, rid: str) -> None:
+            """Release row r's pool blocks; an allocator invariant
+            violation (double free) is contained as a recorded event —
+            the row is retiring anyway and the rest of the pool stays
+            live (not a drain abort)."""
+            try:
+                alloc.free(row_blocks[r])
+                if (self._faults is not None
+                        and self._faults.double_free(self._step_count)):
+                    alloc.free(row_blocks[r])
+            except ValueError as e:
+                log.warning("allocator error retiring %s: %s", rid, e)
+                self.stats.events.append(
+                    {"kind": "allocator", "step": self._step_count,
+                     "request_id": rid, "error": str(e)})
+            tables_np[r, :] = 0
+
         def retire(r: int) -> None:
-            """Finish row r: emit its result, free its KV blocks."""
+            """Finish row r in its terminal state (COMPLETED unless
+            row_fate says otherwise), free its KV blocks, emit the
+            result with the tokens actually delivered."""
             req = row_req[r]
+            state, reason = row_fate.pop(
+                r, (RequestState.COMPLETED, None))
             results.append(RequestResult(
                 request_id=req.request_id,
                 tokens=np.asarray(row_out[r], np.int32),
                 bucket=engine_bucket, queue_s=row_wait[r],
-                stats=act_stats))
-            delivered = req.max_new_tokens
+                stats=act_stats, state=state, reason=reason))
+            delivered = len(row_out[r])
             act_stats.tokens_generated += delivered
             self.stats.tokens_generated += delivered
             bucket_entry()["tokens"] += delivered
             self.stats.requests += 1
+            self._count_terminal(state)
             self.stats.queue_s.append(row_wait[r])
+            self._running.discard(req.request_id)
+            self._cancelled.discard(req.request_id)
             if attn_family and row_blocks[r]:
-                alloc.free(row_blocks[r])
-                tables_np[r, :] = 0
+                free_row_blocks(r, req.request_id)
             row_req[r] = None
             row_blocks[r] = []
             row_out[r] = []
             pos_np[r] = 0
             tok_np[r] = self.pad_id
 
-        def admit(req: Request, r: int) -> None:
-            """Prefill req into row r and scatter its KV/state in."""
+        def fail_admission(req: Request, r: int, reason: str) -> None:
+            """Contain a prefill-time fault to the one request: free
+            anything it allocated, emit a FAILED result, leave the row
+            idle for the next admission."""
+            log.warning("admission of %s failed: %s", req.request_id,
+                        reason)
+            self.stats.events.append(
+                {"kind": "admission_failure", "step": self._step_count,
+                 "request_id": req.request_id, "error": reason})
+            if attn_family and row_blocks[r]:
+                free_row_blocks(r, req.request_id)
+                row_blocks[r] = []
+            results.append(RequestResult(
+                request_id=req.request_id,
+                tokens=np.zeros((0,), np.int32), bucket=engine_bucket,
+                queue_s=row_wait[r], stats=act_stats,
+                state=RequestState.FAILED, reason=reason))
+            self.stats.requests += 1
+            self._count_terminal(RequestState.FAILED)
+
+        def admit(req: Request, r: int) -> bool:
+            """Prefill req into row r and scatter its KV/state in;
+            False when the prefill raised or produced non-finite logits
+            (the request fails, the row stays usable)."""
             nonlocal pool
             length = len(req.tokens)
             p_len = self._prompt_bucket(req)
-            row_wait[r] = time.perf_counter() - req.submitted_at
+            row_wait[r] = self._clock() - req.submitted_at
             if attn_family:
                 nb = blocks_needed(length + req.max_new_tokens - 1, bs)
                 row_blocks[r] = alloc.alloc(nb)
@@ -528,14 +878,25 @@ class ServeSession:
                     cfg, 1, p_len, cap)["prefill"]
                 dispatch.propose(kind, prob)
             t0 = time.time()
-            logits, pcache = fn(params, {"tokens": jnp.asarray(toks)},
-                                starts)
-            jax.block_until_ready(logits)
+            try:
+                logits, pcache = fn(params,
+                                    {"tokens": jnp.asarray(toks)},
+                                    starts)
+                jax.block_until_ready(logits)
+            except Exception as e:
+                # Kernel failure during prefill: this request only.
+                fail_admission(req, r, f"prefill raised: {e}")
+                return False
             dt = time.time() - t0
             if dispatch is not None:
                 dispatch.observe(kind, prob, dt)
             act_stats.prefill_s += dt
             self.stats.prefill_s += dt
+            if self.nan_check and not bool(
+                    np.isfinite(np.asarray(logits[0, -1])).all()):
+                self.stats.poisoned_rows += 1
+                fail_admission(req, r, "non-finite prefill logits")
+                return False
             first = int(np.asarray(
                 jnp.argmax(logits[0, -1], axis=-1)))
             if attn_family:
@@ -573,7 +934,9 @@ class ServeSession:
             row_remaining[r] = req.max_new_tokens - 1
             pos_np[r] = length
             tok_np[r] = first
+            self._running.add(req.request_id)
             self.stats.inflight_admissions += 1
+            return True
 
         step_fn = None
         cur_bundle = decode_bundle
@@ -582,40 +945,60 @@ class ServeSession:
         switch_blocked = False
 
         def build_decode(bundle):
-            """Builder factory for the engine decode step executable."""
+            """Builder factory for the engine decode step executable
+            (retry + per-bucket reference degradation on AOT failure)."""
             def build():
                 """AOT-lower the paged (attn) or batched (ssm) step."""
                 if attn_family:
-                    def step(p, c, t, pv, tb):
-                        """Positional paged decode step (block tables)."""
-                        return model.decode_step(
-                            p, c, t, pv, backend=model_backend,
-                            schedules=bundle, block_tables=tb)
-                    fn = jax.jit(step)
-                    try:
-                        fn = fn.lower(params, pool,
-                                      jnp.asarray(tok_np)[:, None],
-                                      jnp.asarray(pos_np),
-                                      jnp.asarray(tables_np)).compile()
-                    except Exception:  # pragma: no cover
-                        pass
-                    return fn
-                fn = jax.jit(functools.partial(
-                    model.decode_step, backend=model_backend,
-                    schedules=bundle))
-                try:
-                    fn = fn.lower(params, pool,
+                    def make(be, sched):
+                        """Jit the paged step for one backend."""
+                        def step(p, c, t, pv, tb):
+                            """Positional paged decode step (tables)."""
+                            return model.decode_step(
+                                p, c, t, pv, backend=be,
+                                schedules=sched, block_tables=tb)
+                        return jax.jit(step)
+                    lower_args = (params, pool,
                                   jnp.asarray(tok_np)[:, None],
-                                  jnp.int32(0)).compile()
-                except Exception:  # pragma: no cover
-                    pass
-                return fn
+                                  jnp.asarray(pos_np),
+                                  jnp.asarray(tables_np))
+                else:
+                    def make(be, sched):
+                        """Jit the recurrent step for one backend."""
+                        return jax.jit(functools.partial(
+                            model.decode_step, backend=be,
+                            schedules=sched))
+                    lower_args = (params, pool,
+                                  jnp.asarray(tok_np)[:, None],
+                                  jnp.int32(0))
+                return self._build_step(
+                    make(model_backend, bundle), lower_args,
+                    what=f"decode[b{rows_n},t{cap}]",
+                    ref_builder=(lambda: make("xla", None)) if pallas
+                    else None)
             return build
 
         step_idx = 0
+        inj_blocked = False
         while True:
+            inj_blocked = False
+            now = self._clock()
             for r in range(rows_n):
-                if row_req[r] is not None and row_remaining[r] <= 0:
+                req = row_req[r]
+                if req is None:
+                    continue
+                if row_remaining[r] <= 0:
+                    retire(r)
+                elif req.request_id in self._cancelled:
+                    row_fate[r] = (RequestState.CANCELLED,
+                                   "cancelled mid-decode")
+                    retire(r)
+                elif (req.deadline_s is not None
+                        and now - req.submitted_at > req.deadline_s):
+                    row_fate[r] = (
+                        RequestState.TIMED_OUT,
+                        f"deadline_s={req.deadline_s:g} blown "
+                        f"mid-decode after {len(row_out[r])} tokens")
                     retire(r)
             if (attn_family and alloc.num_live
                     and alloc.fragmentation() > 0.5):
@@ -626,32 +1009,60 @@ class ServeSession:
                     gather = jnp.asarray(perm)
                     pool = jax.tree.map(lambda p: p[:, gather], pool)
                     self.stats.compactions += 1
-            while self._queue:
-                free_rows = [r for r in range(rows_n)
-                             if row_req[r] is None]
-                if not free_rows:
-                    break
-                nxt = self._queue[0]
-                if attn_family:
-                    needed = len(nxt.tokens) + nxt.max_new_tokens - 1
-                    if needed > max_blocks * bs:
-                        # Needs a wider table than this activation
-                        # compiled: defer to the next activation, whose
-                        # geometry is recomputed over the queue.
+            self._sweep_queue(results)
+            if self._admission_hold > 0:
+                # A straggler hook asked to shrink admission: skip this
+                # boundary, serve only the rows already in flight.
+                self._admission_hold -= 1
+            else:
+                while self._queue:
+                    free_rows = [r for r in range(rows_n)
+                                 if row_req[r] is None]
+                    if not free_rows:
                         break
-                    if not alloc.can_fit(needed):
-                        if not any(row_req):
-                            raise RuntimeError(
-                                f"request {nxt.request_id!r} needs "
-                                f"{blocks_needed(needed, bs)} KV blocks "
-                                f"but the pool only has "
-                                f"{alloc.num_free} free with every row "
-                                f"idle; raise kv_blocks")
-                        break   # backpressure: wait for retirements
-                admit(self._queue.pop(0), free_rows[0])
+                    nxt = self._queue[0]
+                    if attn_family:
+                        needed = (len(nxt.tokens)
+                                  + nxt.max_new_tokens - 1)
+                        nb = blocks_needed(needed, bs)
+                        if nb > alloc.n_blocks - 1:
+                            # Can NEVER fit this pool, even with every
+                            # row idle: reject this request only and
+                            # keep the engine running (pre-ISSUE-7 this
+                            # raised RuntimeError out of drain()).
+                            self._queue.pop(0)
+                            self._finish_unadmitted(
+                                nxt, RequestState.REJECTED,
+                                f"needs {nb} KV blocks but the pool "
+                                f"holds {alloc.n_blocks - 1}; raise "
+                                f"kv_blocks", results)
+                            continue
+                        if needed > max_blocks * bs:
+                            # Needs a wider table than this activation
+                            # compiled: defer to the next activation,
+                            # whose geometry is recomputed.
+                            break
+                        if (self._faults is not None
+                                and self._faults.alloc_blocked(
+                                    self._step_count)):
+                            self.stats.events.append(
+                                {"kind": "alloc_exhausted",
+                                 "step": self._step_count})
+                            inj_blocked = True
+                            break   # injected exhaustion: backpressure
+                        if not alloc.can_fit(needed):
+                            break   # backpressure: wait for retirements
+                    if not admit(self._queue.pop(0), free_rows[0]):
+                        continue    # admission fault: row still free
             active = [r for r in range(rows_n)
                       if row_req[r] is not None]
             if not active:
+                if inj_blocked and self._queue:
+                    # Injected exhaustion with nothing in flight: count
+                    # the stalled boundary so the finite fault window
+                    # expires instead of wedging drain().
+                    self._step_count += 1
+                    continue
                 break
             if not any(row_remaining[r] > 0 for r in active):
                 continue    # budget-1 admissions retire at loop top
@@ -662,17 +1073,42 @@ class ServeSession:
                 kind, prob = dec
                 dispatch.propose(kind, prob)
             t_step = time.perf_counter()
-            if attn_family:
-                lg, pool = step_fn(params, pool,
-                                   jnp.asarray(tok_np)[:, None],
-                                   jnp.asarray(pos_np),
-                                   jnp.asarray(tables_np))
-            else:
-                lg, pool = step_fn(params, pool,
-                                   jnp.asarray(tok_np)[:, None],
-                                   jnp.int32(0))
+            try:
+                if attn_family:
+                    lg, new_pool = step_fn(params, pool,
+                                           jnp.asarray(tok_np)[:, None],
+                                           jnp.asarray(pos_np),
+                                           jnp.asarray(tables_np))
+                else:
+                    lg, new_pool = step_fn(params, pool,
+                                           jnp.asarray(tok_np)[:, None],
+                                           jnp.int32(0))
+            except Exception as e:
+                # A step-level kernel failure is not attributable to one
+                # row: fail the rows that were in flight (their blocks
+                # free, partial tokens delivered) but keep the queue and
+                # the session alive — coarse isolation, not a drain
+                # abort.
+                log.warning("decode step raised: %s", e)
+                self.stats.events.append(
+                    {"kind": "step_exception",
+                     "step": self._step_count, "error": str(e)})
+                for r in active:
+                    row_fate[r] = (RequestState.FAILED,
+                                   f"decode step raised: {e}")
+                    retire(r)
+                self._step_count += 1
+                continue
+            pool = new_pool
+            if self._faults is not None:
+                for rr in self._faults.nan_rows(self._step_count):
+                    if 0 <= rr < rows_n:
+                        lg = lg.at[rr, -1, :].set(jnp.nan)
             new_tok = np.asarray(
                 jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32))
+            finite = (np.asarray(
+                jnp.all(jnp.isfinite(lg[:, -1]), axis=-1))
+                if self.nan_check else None)
             dt = time.perf_counter() - t_step
             act_stats.decode_s += dt
             self.stats.decode_s += dt
@@ -704,6 +1140,22 @@ class ServeSession:
                             switch_blocked = True
                             self.stats.commits_seen += 1
             for r in active:
+                if finite is not None and not finite[r]:
+                    # Poison row: non-finite logits retire ONLY this
+                    # row at the next boundary; batchmates are
+                    # untouched (rows are independent — per-row
+                    # positions/masks), so their tokens stay
+                    # bit-identical to an uninjected run.
+                    self.stats.poisoned_rows += 1
+                    self.stats.events.append(
+                        {"kind": "poison_row",
+                         "step": self._step_count,
+                         "request_id": row_req[r].request_id})
+                    row_fate[r] = (
+                        RequestState.FAILED,
+                        f"non-finite logits at step {self._step_count}")
+                    row_remaining[r] = 0
+                    continue
                 if row_remaining[r] > 0:
                     t = int(new_tok[r])
                     row_out[r].append(t)
@@ -712,6 +1164,10 @@ class ServeSession:
                     row_remaining[r] -= 1
             self.stats.steps += 1
             step_idx += 1
+            extra = (self._faults.slow_extra_s(self._step_count)
+                     if self._faults is not None else 0.0)
+            self._straggler.record(self._step_count, dt + extra)
+            self._step_count += 1
             if on_step is not None:
                 on_step({"step": step_idx,
                          "active": [row_req[r].request_id
@@ -723,6 +1179,7 @@ class ServeSession:
 
         act_stats.recompiles = recompiles
         act_stats.recompile_s = recompile_s
+        act_stats.degraded = self.stats.degraded_buckets > deg0
         if pallas and cur_bundle is not None:
             pf_b = next((b for b in pf_bundles.values()
                          if b is not None), cur_bundle)
@@ -806,6 +1263,7 @@ class ServeSession:
             total += cfg.num_image_tokens
         pallas = backend == "pallas"
         model_backend = "pallas" if pallas else "xla"
+        deg0 = self.stats.degraded_buckets
 
         problems = (serve_dispatch_problems(cfg, bsz, prompt_len, total)
                     if dispatch is not None else {})
@@ -831,31 +1289,36 @@ class ServeSession:
                               prefill_bundle, backend)
 
         def build_prefill():
-            """AOT-lower the batched prefill (masked when starts set)."""
+            """AOT-lower the batched prefill (masked when starts set),
+            with compile retry + per-bucket reference degradation."""
             # AOT-compile outside the timed region: the dispatch
             # observation (and prefill_s) should measure the step,
             # not XLA compilation.
+            what = f"prefill[b{bsz},p{prompt_len}]"
             if starts is None:
-                fn = jax.jit(functools.partial(
-                    model.prefill, backend=model_backend,
-                    schedules=prefill_bundle))
-                try:
-                    fn = fn.lower(params, batch).compile()
-                except Exception:  # pragma: no cover - AOT unsupported
-                    pass
-                return fn
+                def make(be, sched):
+                    """Jit the keyword prefill for one backend."""
+                    return jax.jit(functools.partial(
+                        model.prefill, backend=be, schedules=sched))
+                return self._build_step(
+                    make(model_backend, prefill_bundle),
+                    (params, batch), what=what,
+                    ref_builder=(lambda: make("xla", None)) if pallas
+                    else None)
 
-            def pf(p, b, st):
-                """Positional prefill (uniform ExecutableCache sig)."""
-                return model.prefill(p, b, backend=model_backend,
-                                     schedules=prefill_bundle,
-                                     seq_starts=st)
-            fn = jax.jit(pf)
-            try:
-                fn = fn.lower(params, batch, starts).compile()
-            except Exception:  # pragma: no cover - AOT unsupported
-                pass
-            return fn
+            def make(be, sched):
+                """Jit the positional masked prefill for one backend."""
+                def pf(p, b, st):
+                    """Positional prefill (uniform cache sig)."""
+                    return model.prefill(p, b, backend=be,
+                                         schedules=sched,
+                                         seq_starts=st)
+                return jax.jit(pf)
+            return self._build_step(
+                make(model_backend, prefill_bundle),
+                (params, batch, starts), what=what,
+                ref_builder=(lambda: make("xla", None)) if pallas
+                else None)
 
         prefill_fn, _ = self._compile(prefill_key, build_prefill)
         t0 = time.time()
@@ -906,34 +1369,40 @@ class ServeSession:
         def build_decode(bundle):
             """Builder factory for the batched decode step executable."""
             def build():
-                """AOT-lower the decode step (masked when starts set)."""
+                """AOT-lower the decode step (masked when starts set),
+                with compile retry + per-bucket reference degradation."""
                 # Same AOT treatment as prefill: keep compilation out
                 # of the decode-step timings (a compile-inflated first
                 # probe would poison the dispatcher's medians).
+                what = f"decode[b{bsz},t{total}]"
                 if dec_starts is None:
-                    fn = jax.jit(functools.partial(
-                        model.decode_step, backend=model_backend,
-                        schedules=bundle))
-                    try:
-                        fn = fn.lower(params, cache, tok[:, None],
-                                      jnp.int32(pos0)).compile()
-                    except Exception:  # pragma: no cover
-                        pass
-                    return fn
+                    def make(be, sched):
+                        """Jit the keyword decode step for one backend."""
+                        return jax.jit(functools.partial(
+                            model.decode_step, backend=be,
+                            schedules=sched))
+                    return self._build_step(
+                        make(model_backend, bundle),
+                        (params, cache, tok[:, None], jnp.int32(pos0)),
+                        what=what,
+                        ref_builder=(lambda: make("xla", None)) if pallas
+                        else None)
 
-                def st_step(p, c, t, pos, st):
-                    """Positional masked decode step (starts threaded)."""
-                    return model.decode_step(p, c, t, pos,
-                                             backend=model_backend,
-                                             schedules=bundle,
-                                             seq_starts=st)
-                fn = jax.jit(st_step)
-                try:
-                    fn = fn.lower(params, cache, tok[:, None],
-                                  jnp.int32(pos0), dec_starts).compile()
-                except Exception:  # pragma: no cover
-                    pass
-                return fn
+                def make(be, sched):
+                    """Jit the positional masked decode step."""
+                    def st_step(p, c, t, pos, st):
+                        """Positional decode step (starts threaded)."""
+                        return model.decode_step(p, c, t, pos,
+                                                 backend=be,
+                                                 schedules=sched,
+                                                 seq_starts=st)
+                    return jax.jit(st_step)
+                return self._build_step(
+                    make(model_backend, bundle),
+                    (params, cache, tok[:, None], jnp.int32(pos0),
+                     dec_starts), what=what,
+                    ref_builder=(lambda: make("xla", None)) if pallas
+                    else None)
             return build
 
         step_fn = None
@@ -947,10 +1416,10 @@ class ServeSession:
 
         t1 = time.time()
         for i in range(max_new_tokens - 1):
+            t_step = time.perf_counter()
             if dispatch is not None:
                 kind, problem = dec
                 dispatch.propose(kind, problem)
-                t_step = time.perf_counter()
             if dec_starts is None:
                 lg, cache = step_fn(params, cache, tok[:, None],
                                     jnp.int32(pos0 + i))
@@ -960,11 +1429,15 @@ class ServeSession:
             rng, sub = jax.random.split(rng)
             tok = pick(lg, sub)
             out.append(np.asarray(tok))
+            # np.asarray above synchronised the step; feed its wall time
+            # to the straggler monitor (and the per-shape scheduler).
+            dt = time.perf_counter() - t_step
+            extra = (self._faults.slow_extra_s(self._step_count)
+                     if self._faults is not None else 0.0)
+            self._straggler.record(self._step_count, dt + extra)
+            self._step_count += 1
             if dispatch is not None:
-                # np.asarray above synchronised the step; feed its wall
-                # time to the per-shape scheduler.
-                dispatch.observe(kind, problem,
-                                 time.perf_counter() - t_step)
+                dispatch.observe(kind, problem, dt)
                 if pallas and not switch_blocked:
                     committed = dispatch.committed(kind, problem)
                     if (committed is not None
@@ -1018,7 +1491,8 @@ class ServeSession:
         stats = ServeStats(prefill_s=prefill_s, decode_s=decode_s,
                            tokens_generated=bsz * max_new_tokens,
                            backend=backend, recompiles=recompiles,
-                           recompile_s=recompile_s, schedules=report)
+                           recompile_s=recompile_s, schedules=report,
+                           degraded=self.stats.degraded_buckets > deg0)
         if self.registry is not None:
             key = reg.RegistryKey.make(
                 "serve_decode",

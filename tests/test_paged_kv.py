@@ -228,13 +228,25 @@ def test_out_of_blocks_admission_backpressure():
     assert order.index("q1") < order.index("q3")
 
 
-def test_unservable_request_raises_instead_of_wedging():
+def test_unservable_request_rejected_per_request():
+    """A never-fits request is REJECTED with a reason instead of raising
+    RuntimeError out of drain() (the pre-ISSUE-7 behaviour), and the
+    engine keeps serving requests that do fit."""
     cfg, model, params = _smoke()
     session = ServeSession(model, params, backend="reference",
                            kv_block_size=4, kv_blocks=2)
-    session.submit(_prompts(cfg, [6])[0], 8)
-    with pytest.raises(RuntimeError, match="kv_blocks"):
-        session.drain()
+    big, small = _prompts(cfg, [6, 3])
+    session.submit(big, 8, request_id="big")
+    session.submit(small, 2, request_id="small")
+    res = {r.request_id: r for r in session.drain()}  # must not raise
+    assert res["big"].state == "REJECTED"
+    assert "kv_blocks" in res["big"].reason
+    assert len(res["big"].tokens) == 0
+    assert res["small"].state == "COMPLETED"
+    assert res["small"].tokens.tolist() == _solo_generate(
+        model, params, small, 2, "reference")
+    assert session.stats.rejected == 1
+    assert session.stats.requests == 2
 
 
 def test_compaction_mid_stream_preserves_tokens():
