@@ -21,8 +21,18 @@ batch's full drain.  Headline numbers land in ``BENCH_serve.json``:
                            trend-gates these (the in-flight engine's
                            step-boundary admission is the headline win)
   serve.queue_p50_ms/p95   same numbers in ms (report-only legacy keys)
+  serve.ttft_p50_s/p95_s   time-to-first-token percentiles (queue wait
+                           + prefill) — CI trend-gates these
+  serve.telemetry_overhead_ratio  mean decode-step time with telemetry
+                           on / off (min over repeats) — CI gates the
+                           <= 1.05 budget
   serve.inflight_admissions  requests admitted at step boundaries
   serve.decode_tok_s       fleet decode throughput (machine-absolute)
+
+The telemetry-on rerun also writes the observability artifacts the CI
+bench job uploads and validates: ``trace.json`` (Chrome trace-event /
+Perfetto) and ``metrics.prom`` (Prometheus text exposition), checked
+by ``tools/check_trace.py``.
 """
 from __future__ import annotations
 
@@ -56,7 +66,7 @@ def _inject_fleet_measurements(svc, cfg, batch_sizes, classes):
             svc.registry.record_measurement(rkey, best, times[b])
 
 
-def _stream(arch: str, n_requests: int) -> dict:
+def _stream(arch: str, n_requests: int, telemetry=None) -> dict:
     from repro.configs import get_config
     from repro.core import registry as reg
     from repro.models import build_model
@@ -75,7 +85,8 @@ def _stream(arch: str, n_requests: int) -> dict:
 
     session = ServeSession(model, params, dispatch=svc, backend="pallas",
                            batch_sizes=batch_sizes,
-                           bucket_lengths=bucket_lengths)
+                           bucket_lengths=bucket_lengths,
+                           telemetry=telemetry)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(n_requests):
@@ -117,6 +128,7 @@ def run() -> None:
     hits = misses = compiles = recompiles = admissions = 0
     tokens = decode_s = 0.0
     queue_p50 = queue_p95 = 0.0
+    ttft_p50 = ttft_p95 = 0.0
     for arch in archs:
         st = _stream(arch, n)
         hits += st["cache"]["hits"]
@@ -128,9 +140,35 @@ def run() -> None:
         decode_s += st["tokens_generated"] / max(st["decode_tok_s"], 1e-9)
         queue_p50 = max(queue_p50, st["queue_p50_s"])
         queue_p95 = max(queue_p95, st["queue_p95_s"])
+        ttft_p50 = max(ttft_p50, st["ttft_p50_s"])
+        ttft_p95 = max(ttft_p95, st["ttft_p95_s"])
         for name, b in st["buckets"].items():
             emit(f"serve.bucket.{arch}.{name}", 0.0,
                  f"tok_s={b['tok_s']:.0f};batches={int(b['batches'])}")
+
+    # Telemetry-overhead pair + the trace/metrics artifacts: rerun the
+    # first arch's stream with full telemetry (spans, lifecycle,
+    # histograms) and compare mean decode-step time against the
+    # telemetry-off streams above.  Two pairs, min ratio: overhead is
+    # non-negative, so noise only inflates a single measurement.
+    from repro.obs import Telemetry
+
+    def _mean_step_s(st: dict) -> float:
+        d_s = st["tokens_generated"] / max(st["decode_tok_s"], 1e-9)
+        return d_s / max(st["steps"], 1)
+
+    ratios = []
+    telemetry = None
+    for _ in range(2):
+        off = _stream(archs[0], n)
+        # Default metrics registry: session instruments land next to the
+        # bench.* gauges record_metric mirrors, so one metrics.prom
+        # carries both.
+        telemetry = Telemetry()
+        on = _stream(archs[0], n, telemetry=telemetry)
+        ratios.append(_mean_step_s(on) / max(_mean_step_s(off), 1e-12))
+    overhead = min(ratios)
+    telemetry.tracer.write("trace.json")
 
     hit_rate = hits / max(hits + misses, 1)
     tok_s = tokens / max(decode_s, 1e-9)
@@ -141,13 +179,19 @@ def run() -> None:
     record_metric("serve.queue_p95_s", queue_p95)
     record_metric("serve.queue_p50_ms", queue_p50 * 1e3)
     record_metric("serve.queue_p95_ms", queue_p95 * 1e3)
+    record_metric("serve.ttft_p50_s", ttft_p50)
+    record_metric("serve.ttft_p95_s", ttft_p95)
+    record_metric("serve.telemetry_overhead_ratio", overhead)
     record_metric("serve.inflight_admissions", float(admissions))
     record_metric("serve.decode_tok_s", tok_s)
     emit("serve.cache_hit_rate", hit_rate * 100.0,
          f"hits={hits};misses={misses};compiles={compiles}")
     emit("serve.queue_latency", queue_p50 * 1e6,
          f"p95_us={queue_p95 * 1e6:.0f}")
+    emit("serve.ttft", ttft_p50 * 1e6, f"p95_us={ttft_p95 * 1e6:.0f}")
+    emit("serve.telemetry_overhead", overhead)
     emit("serve.decode_tok_s", tok_s)
+    telemetry.metrics.write_prometheus("metrics.prom")
     assert hit_rate >= 0.5, (
         f"executable-cache hit rate {hit_rate:.2f} < 0.5: the session "
         f"is re-lowering instead of reusing")

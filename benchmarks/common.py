@@ -16,6 +16,12 @@ _METRICS: Dict[str, float] = {}
 
 def record_metric(name: str, value: float) -> None:
     _METRICS[name] = float(value)
+    # Mirror every headline number into the process metrics registry as
+    # a bench.* gauge, so `--metrics-out` exports (and the CI artifact)
+    # carry the same figures BENCH_*.json gates on.
+    from repro.obs.metrics import get_metrics_registry
+    get_metrics_registry().gauge(
+        "bench." + name, help="benchmark headline figure").set(float(value))
 
 
 def metrics() -> Dict[str, float]:

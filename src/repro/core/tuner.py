@@ -24,6 +24,7 @@ import concurrent.futures
 import dataclasses
 import itertools
 import math
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -415,6 +416,14 @@ def tune_sparse_conv(layer: ConvLayer, density: float = 1.0,
 # schedules and costs directly (asserted by tests/test_registry.py against
 # cm.EVAL_COUNTS).
 
+def _tune_counter(name: str):
+    """A counter on the process-default metrics registry (telemetry for
+    the offline tuner: warm hits, sweeps, wall time, model evals)."""
+    from repro.obs.metrics import get_metrics_registry
+    return get_metrics_registry().counter(
+        name, help="offline-tuner sweep accounting")
+
+
 def _ranked_to_value(ranked) -> Dict:
     return {"schedules": [reg.schedule_to_dict(s) for s, _ in ranked],
             "costs": [reg.cost_to_dict(c) for _, c in ranked]}
@@ -452,9 +461,17 @@ def _cached_ranked(key: reg.RegistryKey, tune: Callable[[int], List],
     prev = registry.get(key)
     rec = None if refresh else prev
     if rec is not None and _has_ranked(rec.value, top_k):
+        _tune_counter("tune.warm_hits_total").inc()
         return _value_to_ranked(rec.value, top_k)
     want = max(top_k, 5)
+    evals0 = cm.total_evals()
+    t0 = time.perf_counter()
     ranked = tune(want)
+    _tune_counter("tune.sweeps_total").inc()
+    _tune_counter("tune.sweep_wall_s_total").inc(
+        time.perf_counter() - t0)
+    _tune_counter("tune.cost_model_evals_total").inc(
+        cm.total_evals() - evals0)
     value = _ranked_to_value(ranked)
     if len(ranked) < want:
         value["complete"] = True      # the whole enumeration fits
@@ -561,6 +578,7 @@ def cached_sweep_layer(layer: ConvLayer,
     key = reg.conv_sweep_key(layer, machine, threads)
     rec = None if refresh else registry.get(key)
     if rec is not None:
+        _tune_counter("tune.warm_hits_total").inc()
         v = rec.value
         return SweepResult(layer=layer,
                            cycles=np.asarray(v["cycles"]),
@@ -665,6 +683,8 @@ def warm_registry(layers: Sequence[ConvLayer],
     (sorted by key), so warm output is byte-identical run to run.
     """
     del workers  # batch engine: in-process beats any pool (see above)
+    evals0 = cm.total_evals()
+    t0 = time.perf_counter()
     done = {"conv_sweep": 0, "conv_schedule": 0, "skipped": 0}
     if "conv_sweep" in kinds:
         keys = [reg.conv_sweep_key(l, machine, threads) for l in layers]
@@ -692,4 +712,11 @@ def warm_registry(layers: Sequence[ConvLayer],
                                           source="offline"))
             done["conv_schedule"] += 1
     registry.compact()
+    _tune_counter("tune.warm_hits_total").inc(done["skipped"])
+    _tune_counter("tune.sweeps_total").inc(
+        done["conv_sweep"] + done["conv_schedule"])
+    _tune_counter("tune.sweep_wall_s_total").inc(
+        time.perf_counter() - t0)
+    _tune_counter("tune.cost_model_evals_total").inc(
+        cm.total_evals() - evals0)
     return done

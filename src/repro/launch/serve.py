@@ -111,6 +111,13 @@ def main() -> None:
                          "(kind@step[xTIMES][.ROW]; kinds: compile, nan, "
                          "alloc, slow, doublefree); repeatable "
                          "(--session)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event / Perfetto JSON of "
+                         "the run (engine spans + per-request tracks) "
+                         "to PATH")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry in Prometheus text "
+                         "exposition format to PATH")
     args = ap.parse_args()
 
     import jax
@@ -135,15 +142,35 @@ def main() -> None:
             jax.random.key(2),
             (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
     registry = TuningRegistry(args.registry) if args.registry else None
+    telemetry = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import Telemetry
+        telemetry = Telemetry()
     dispatch = None
     if args.dispatch:
         from repro.runtime.dispatch import DispatchService, \
             get_dispatch_service
-        dispatch = (DispatchService(registry) if registry is not None
-                    else get_dispatch_service())
+        if registry is not None:
+            kw = ({"metrics": telemetry.metrics,
+                   "tracer": telemetry.tracer}
+                  if telemetry is not None else {})
+            dispatch = DispatchService(registry, **kw)
+        else:
+            dispatch = get_dispatch_service()
     if args.backend == "pallas" and dispatch is None:
         from repro.runtime.dispatch import get_dispatch_service
         dispatch = get_dispatch_service()
+
+    def _write_telemetry():
+        if telemetry is None:
+            return
+        if args.trace_out:
+            telemetry.tracer.write(args.trace_out)
+            print(f"trace written to {args.trace_out} "
+                  f"(load in Perfetto or chrome://tracing)")
+        if args.metrics_out:
+            telemetry.metrics.write_prometheus(args.metrics_out)
+            print(f"metrics written to {args.metrics_out}")
 
     if args.session:
         import numpy as np
@@ -162,7 +189,7 @@ def main() -> None:
             request_deadline_s=args.request_deadline_s,
             max_queue_s=args.max_queue_s,
             fallback_backend=args.fallback_backend,
-            faults=faults)
+            faults=faults, telemetry=telemetry)
         rng = np.random.default_rng(0)
         reqs = _load_requests(args.requests_file, args.num_requests,
                               args.prompt_len, args.new_tokens,
@@ -195,20 +222,22 @@ def main() -> None:
         for name, b in summary["buckets"].items():
             print(f"  bucket {name}: {b['tok_s']:.0f} tok/s over "
                   f"{int(b['batches'])} batches")
-        faulty = {k: summary[k] for k in
-                  ("rejected", "timed_out", "cancelled", "failed", "shed",
-                   "fallbacks", "poisoned_rows", "stragglers")
-                  if summary.get(k)}
-        if faulty or summary.get("degraded"):
-            print(f"faults: {faulty} degraded={summary['degraded']} "
-                  f"({summary['degraded_buckets']} buckets); "
-                  f"{len(summary['events'])} events recorded")
+        # Fault/degradation line derived from the unified event log
+        # (repro.obs.events) — the same records exported as telemetry.
+        from repro.obs.events import format_event_summary
+        events = session.stats.events
+        if events or summary.get("degraded"):
+            print(format_event_summary(
+                events,
+                degraded=[e.what for e in events
+                          if e.kind == "degraded"]))
         if dispatch is not None:
             for entry in dispatch.report().values():
                 committed = entry["committed"]
                 print(f"dispatch {entry['kind']}: "
                       f"obs={entry['observations']} "
                       f"committed={committed if committed else '(probing)'}")
+        _write_telemetry()
         return
 
     out, stats = generate(model, params, batch,
@@ -228,6 +257,7 @@ def main() -> None:
             committed = entry["committed"]
             print(f"dispatch {entry['kind']}: obs={entry['observations']}"
                   f" committed={committed if committed else '(probing)'}")
+    _write_telemetry()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""Unified telemetry for the tune → dispatch → compile → serve stack.
+
+Three pillars (see ``docs/OBSERVABILITY.md``):
+
+* :class:`~repro.obs.metrics.MetricsRegistry` — counters, gauges,
+  fixed-bucket histograms, with Prometheus-text and JSON exporters
+  and a process-wide default instance.
+* :class:`~repro.obs.trace.SpanTracer` — context-manager spans with an
+  injected monotonic clock, exported as Chrome trace-event /
+  Perfetto-loadable JSON.
+* :class:`~repro.obs.lifecycle.LifecycleLog` — per-request timelines
+  (queued → admitted → first token → terminal) with derived TTFT and
+  per-token latency.
+
+:class:`~repro.obs.telemetry.Telemetry` bundles the three behind one
+``telemetry=`` parameter; :data:`~repro.obs.telemetry.NULL_TELEMETRY`
+is the shared disabled instance every component defaults to.
+"""
+
+from repro.obs.events import (
+    Event,
+    format_event_summary,
+    summarize_events,
+)
+from repro.obs.lifecycle import LifecycleLog, RequestLifecycle
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_metrics_registry,
+    prom_name,
+    set_metrics_registry,
+)
+from repro.obs.telemetry import NULL_TELEMETRY, Telemetry
+from repro.obs.trace import NullTracer, SpanTracer
+
+__all__ = [
+    "Counter",
+    "Event",
+    "Gauge",
+    "Histogram",
+    "LifecycleLog",
+    "MetricsRegistry",
+    "NULL_TELEMETRY",
+    "NullTracer",
+    "RequestLifecycle",
+    "SpanTracer",
+    "Telemetry",
+    "format_event_summary",
+    "get_metrics_registry",
+    "prom_name",
+    "set_metrics_registry",
+    "summarize_events",
+]

@@ -1,0 +1,95 @@
+"""One structured event schema for the whole serving stack.
+
+Before this module, three ad-hoc formats carried operational events:
+``SessionStats.events`` appended raw dicts, ``FaultInjector.fired``
+logged its own dict shape, and ``StragglerMonitor`` had a private
+``StragglerEvent`` dataclass.  Everything now emits :class:`Event` —
+one dataclass, one ``as_dict`` — so the CLI summary line, the exported
+trace, and ``stats.to_dict()`` all derive from the same records and
+can never disagree.
+
+``kind`` is an open vocabulary; current emitters use:
+
+* engine faults — ``compile_failure``, ``degraded``, ``poison_row``,
+  ``alloc_exhausted``, ``allocator``, ``admission_failure``,
+  ``step_exception``, ``straggler``
+* injected faults (``FaultInjector``) — ``compile``, ``nan``,
+  ``alloc``, ``slow``, ``doublefree``
+
+Extra per-kind fields live in ``data`` and read back as attributes
+(``event.ratio``) or via ``as_dict()`` which flattens them alongside
+the common fields.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter as _Counter
+from typing import Any, Dict, Iterable, List, Optional
+
+__all__ = ["Event", "summarize_events", "format_event_summary"]
+
+
+@dataclasses.dataclass
+class Event:
+    """A single structured operational event.
+
+    ``kind`` names the event type; ``step`` is the engine decode-step
+    index when applicable; ``request_id`` ties the event to a request;
+    ``ts`` is a session-clock timestamp in seconds; ``data`` holds the
+    kind-specific fields.
+    """
+
+    kind: str
+    step: Optional[int] = None
+    request_id: Optional[str] = None
+    ts: Optional[float] = None
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __getattr__(self, name: str) -> Any:
+        """Expose ``data`` entries as attributes (``event.ratio``)."""
+        try:
+            return self.__dict__["data"][name]
+        except KeyError:
+            raise AttributeError(
+                f"{type(self).__name__} has no field {name!r}") from None
+
+    def as_dict(self) -> Dict[str, Any]:
+        """Flat JSON-serialisable dict: common fields + ``data``."""
+        out: Dict[str, Any] = {"kind": self.kind}
+        if self.step is not None:
+            out["step"] = self.step
+        if self.request_id is not None:
+            out["request_id"] = self.request_id
+        if self.ts is not None:
+            out["ts"] = self.ts
+        out.update(self.data)
+        return out
+
+
+def summarize_events(events: Iterable[Event]) -> Dict[str, int]:
+    """Per-kind counts over an event log, sorted by kind."""
+    counts = _Counter(e.kind for e in events)
+    return dict(sorted(counts.items()))
+
+
+def format_event_summary(events: List[Event],
+                         degraded: Iterable[Any] = ()) -> str:
+    """The CLI fault/degradation summary line, derived from the log.
+
+    ``launch/serve`` prints exactly this string and the exported
+    telemetry carries the same events, so the two cannot diverge.
+    Returns e.g. ``"faults: none"`` or
+    ``"faults: compile_failure=2 degraded=1 | degraded buckets: (1, 16)"``.
+    """
+    counts = summarize_events(events)
+    if not counts:
+        body = "none"
+    else:
+        body = " ".join(f"{k}={n}" for k, n in counts.items())
+    line = f"faults: {body}"
+    degraded = list(degraded)
+    if degraded:
+        line += " | degraded buckets: " + ", ".join(
+            str(d) for d in degraded)
+    return line

@@ -47,6 +47,8 @@ from repro.core import registry as reg
 from repro.core import tuner
 from repro.core.adaptive import AdaptiveSelector
 from repro.core.loopnest import ConvLayer
+from repro.obs.metrics import MetricsRegistry, get_metrics_registry
+from repro.obs.trace import NullTracer
 
 
 # ---------------------------------------------------------------------------
@@ -187,13 +189,34 @@ class DispatchService:
                  top_k: int = 3,
                  probes_per_candidate: int = 3,
                  steadiness_threshold: float = 0.2,
-                 max_extra_probes: int = 2):
-        """Bind a registry/machine spec and configure the selector."""
+                 max_extra_probes: int = 2,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Any] = None):
+        """Bind a registry/machine spec and configure the selector.
+
+        ``metrics`` (default: the process metrics registry) receives the
+        ``dispatch.*`` counters; ``tracer`` (default: a
+        :class:`~repro.obs.trace.NullTracer`) gets a
+        ``dispatch.resolve`` span per cold resolution and a
+        ``dispatch.commit`` instant per committed winner."""
         self.registry = (registry if registry is not None
                          else reg.TuningRegistry.default())
         self.spec = spec if spec is not None else cm.TPUSpec()
         self.top_k = top_k
         self.machine = reg.fingerprint(self.spec)
+        self.metrics = (metrics if metrics is not None
+                        else get_metrics_registry())
+        self.tracer = tracer if tracer is not None else NullTracer()
+        hlp = "adaptive-dispatch lifecycle accounting"
+        self._c_resolves = self.metrics.counter(
+            "dispatch.resolves_total", help=hlp)
+        self._c_proposals = self.metrics.counter(
+            "dispatch.proposals_total", help=hlp)
+        self._c_observations = self.metrics.counter(
+            "dispatch.observations_total", help=hlp)
+        self._c_commits = self.metrics.counter(
+            "dispatch.commits_total", help=hlp)
+        self._committed_seen: set = set()
         self.selector: AdaptiveSelector = AdaptiveSelector(
             probes_per_candidate=probes_per_candidate,
             steadiness_threshold=steadiness_threshold,
@@ -230,8 +253,11 @@ class DispatchService:
             if skey in self._slots:
                 self._key_cache[ckey] = skey
                 return skey
-        ranked = fam.tune(problem, self.spec, elem_bytes, self.top_k,
-                          self.registry)
+        with self.tracer.span("dispatch.resolve", kind=kind) \
+                if self.tracer.enabled else contextlib.nullcontext():
+            ranked = fam.tune(problem, self.spec, elem_bytes, self.top_k,
+                              self.registry)
+        self._c_resolves.inc()
         with self._lock:
             if skey not in self._slots:
                 self.selector.register_ranked(skey, ranked,
@@ -248,8 +274,24 @@ class DispatchService:
     def propose(self, kind: str, problem: Dict[str, Any],
                 elem_bytes: int = 2) -> Any:
         """Schedule to use for this call (resolving if needed)."""
+        self._c_proposals.inc()
         return self.selector.propose(self.resolve(kind, problem,
                                                   elem_bytes))
+
+    def _after_observe(self, skey: str) -> None:
+        """Count the observation; on the None → committed transition of
+        this slot, count the commit and emit a ``dispatch.commit``
+        instant (called under the service lock)."""
+        self._c_observations.inc()
+        if (skey not in self._committed_seen
+                and self.selector.committed(skey) is not None):
+            self._committed_seen.add(skey)
+            self._c_commits.inc()
+            if self.tracer.enabled:
+                slot = self._slots[skey]
+                self.tracer.instant(
+                    "dispatch.commit", kind=slot.kind,
+                    observations=slot.observations)
 
     def observe(self, kind: str, problem: Dict[str, Any], dt: float,
                 elem_bytes: int = 2) -> None:
@@ -261,6 +303,7 @@ class DispatchService:
         with self._lock:
             self._slots[skey].observations += 1
             self.selector.observe(skey, dt)
+            self._after_observe(skey)
 
     @contextlib.contextmanager
     def measure(self, kind: str, problem: Dict[str, Any],
@@ -272,6 +315,7 @@ class DispatchService:
         concurrent dispatched calls on the same shape cannot land a
         timing on the wrong candidate."""
         skey = self.resolve(kind, problem, elem_bytes)
+        self._c_proposals.inc()
         with self._lock:
             idx, sched = self.selector.propose_with_index(skey)
         t0 = time.perf_counter()
@@ -280,6 +324,7 @@ class DispatchService:
         with self._lock:
             self._slots[skey].observations += 1
             self.selector.observe_at(skey, idx, dt)
+            self._after_observe(skey)
 
     def committed(self, kind: str, problem: Dict[str, Any],
                   elem_bytes: int = 2) -> Optional[Any]:

@@ -12,28 +12,21 @@ micro-profiling also makes cheap statistical straggler detection sound.
 """
 from __future__ import annotations
 
-import dataclasses
 import logging
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.obs.events import Event
+
 log = logging.getLogger("repro.ft")
-
-
-@dataclasses.dataclass
-class StragglerEvent:
-    """One flagged slow step: its duration vs the EWMA it broke."""
-
-    step: int
-    duration: float
-    ewma: float
-    ratio: float
 
 
 class StragglerMonitor:
     """EWMA step-time outlier detector (train loop and serving engine).
 
-    ``record(step, duration)`` returns a :class:`StragglerEvent` when
+    ``record(step, duration)`` returns a straggler
+    :class:`~repro.obs.events.Event` (the stack-wide structured event
+    schema; ``data`` carries ``duration_s``/``ewma_s``/``ratio``) when
     ``duration`` exceeds ``threshold ×`` the running EWMA (after
     ``warmup_steps``); outliers never update the EWMA, so one spike does
     not raise the bar for the next.  ``on_straggler`` is the caller's
@@ -43,7 +36,7 @@ class StragglerMonitor:
 
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
                  warmup_steps: int = 5,
-                 on_straggler: Optional[Callable[[StragglerEvent], None]]
+                 on_straggler: Optional[Callable[[Event], None]]
                  = None):
         """Set the detection knobs; no state until :meth:`record`."""
         self.threshold = threshold
@@ -51,10 +44,10 @@ class StragglerMonitor:
         self.warmup = warmup_steps
         self.on_straggler = on_straggler
         self.ewma: Optional[float] = None
-        self.events: List[StragglerEvent] = []
+        self.events: List[Event] = []
         self._n = 0
 
-    def record(self, step: int, duration: float) -> Optional[StragglerEvent]:
+    def record(self, step: int, duration: float) -> Optional[Event]:
         """Feed one step time; returns the event if it was an outlier."""
         self._n += 1
         if self.ewma is None:
@@ -62,9 +55,10 @@ class StragglerMonitor:
             return None
         event = None
         if self._n > self.warmup and duration > self.threshold * self.ewma:
-            event = StragglerEvent(step=step, duration=duration,
-                                   ewma=self.ewma,
-                                   ratio=duration / self.ewma)
+            event = Event(kind="straggler", step=step,
+                          data={"duration_s": float(duration),
+                                "ewma_s": float(self.ewma),
+                                "ratio": float(duration / self.ewma)})
             self.events.append(event)
             log.warning("straggler step %d: %.3fs vs ewma %.3fs (x%.1f)",
                         step, duration, self.ewma, event.ratio)
@@ -80,6 +74,13 @@ class StragglerMonitor:
         return {"steps": float(self._n),
                 "ewma_s": float(self.ewma or 0.0),
                 "events": float(len(self.events))}
+
+    def export_metrics(self, registry, prefix: str = "serve.straggler.",
+                       ) -> None:
+        """Publish :meth:`summary` as gauges on a
+        :class:`~repro.obs.metrics.MetricsRegistry`."""
+        registry.set_gauges(self.summary(), prefix=prefix,
+                            help="straggler-monitor snapshot")
 
 
 def run_with_restart(make_state: Callable[[], Dict],

@@ -250,7 +250,7 @@ class Trainer:
         return {"params": params, "opt_state": opt_state,
                 "history": self.history,
                 "wall_time": time.time() - t_total,
-                "stragglers": self.monitor.events}
+                "stragglers": [e.as_dict() for e in self.monitor.events]}
 
     def _write_back_step_time(self) -> None:
         """Persist the measured steady-state step time to the tuning

@@ -26,14 +26,18 @@ reproducible points:
 The CLI form (``launch/serve --inject-fault``) is
 ``kind@step[xTIMES][.ROW]`` — e.g. ``nan@3``, ``compile@0x3``,
 ``nan@2.1`` (row 1 at step 2).  Everything the injector fires is logged
-in :attr:`FaultInjector.fired` for assertions, and the session records a
-matching event in ``SessionStats.events``.
+in :attr:`FaultInjector.fired` as structured
+:class:`~repro.obs.events.Event`\\ s (the same schema
+``SessionStats.events`` uses), and the session records a matching
+event of its own.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
+
+from repro.obs.events import Event
 
 KINDS = ("compile", "nan", "alloc", "slow", "doublefree")
 
@@ -98,7 +102,7 @@ class FaultInjector:
     def __init__(self, specs: Sequence[FaultSpec] = ()):
         """Take the schedule; nothing fires until the session probes."""
         self.specs: List[FaultSpec] = list(specs)
-        self.fired: List[Dict[str, Any]] = []
+        self.fired: List[Event] = []
         self._compile_attempts = 0
 
     @classmethod
@@ -120,7 +124,8 @@ class FaultInjector:
         i = self._compile_attempts
         self._compile_attempts += 1
         if self._match("compile", i) is not None:
-            self.fired.append({"kind": "compile", "at": i, "what": what})
+            self.fired.append(Event(kind="compile", step=i,
+                                    data={"what": what}))
             raise InjectedFault(
                 f"injected compile failure at attempt {i} ({what})")
 
@@ -130,14 +135,14 @@ class FaultInjector:
         for s in self.specs:
             if s.kind == "nan" and s.step <= step < s.step + s.times:
                 rows.append(s.row)
-                self.fired.append(
-                    {"kind": "nan", "at": step, "row": s.row})
+                self.fired.append(Event(kind="nan", step=step,
+                                        data={"row": s.row}))
         return rows
 
     def alloc_blocked(self, step: int) -> bool:
         """True when admission should see an exhausted allocator."""
         if self._match("alloc", step) is not None:
-            self.fired.append({"kind": "alloc", "at": step})
+            self.fired.append(Event(kind="alloc", step=step))
             return True
         return False
 
@@ -146,14 +151,14 @@ class FaultInjector:
         s = self._match("slow", step)
         if s is None:
             return 0.0
-        self.fired.append(
-            {"kind": "slow", "at": step, "extra_s": s.magnitude})
+        self.fired.append(Event(kind="slow", step=step,
+                                data={"extra_s": s.magnitude}))
         return float(s.magnitude)
 
     def double_free(self, step: int) -> bool:
         """True when a retiring row should free its blocks twice."""
         if self._match("doublefree", step) is not None:
-            self.fired.append({"kind": "doublefree", "at": step})
+            self.fired.append(Event(kind="doublefree", step=step))
             return True
         return False
 

@@ -51,6 +51,7 @@ exactly); long-lived servers construct one session and ``submit`` /
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import itertools
@@ -65,6 +66,8 @@ import numpy as np
 from repro.core import registry as reg
 from repro.models.model_zoo import (Model, bucket_length,
                                     left_pad_prompts, prompt_starts)
+from repro.obs.events import Event
+from repro.obs.telemetry import NULL_TELEMETRY
 from repro.runtime.ft import StragglerMonitor
 from repro.serving.bucketing import (Bucket, candidate_buckets,
                                      pick_bucket)
@@ -74,6 +77,10 @@ from repro.serving.paged_kv import BlockAllocator, blocks_needed
 log = logging.getLogger("repro.serving")
 
 _REQUEST_IDS = itertools.count()
+
+# Shared no-op context manager: the telemetry-off span fast path costs
+# one attribute check and this singleton, never a tracer call.
+_NULL_SPAN = contextlib.nullcontext()
 
 # Bucket of results that never reached an engine row (rejected, shed,
 # cancelled while queued): there is no meaningful geometry to report.
@@ -166,8 +173,11 @@ class SessionStats:
     failed: int = 0                 # step-level faults (poison rows, ...)
     poisoned_rows: int = 0          # rows retired on non-finite logits
     stragglers: int = 0             # slow-step events from the monitor
-    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    # Structured operational events (one schema stack-wide; see
+    # repro.obs.events.Event) — faults, degradations, stragglers.
+    events: List[Event] = dataclasses.field(default_factory=list)
     queue_s: List[float] = dataclasses.field(default_factory=list)
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
     per_bucket: Dict[Bucket, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
     cache: Dict[str, int] = dataclasses.field(default_factory=dict)
@@ -179,6 +189,13 @@ class SessionStats:
         a = np.asarray(self.queue_s, dtype=np.float64)
         return float(np.percentile(a, 50)), float(np.percentile(a, 95))
 
+    def ttft_percentiles(self) -> Tuple[float, float]:
+        """(p50, p95) time-to-first-token in seconds (0.0 no samples)."""
+        if not self.ttft_s:
+            return 0.0, 0.0
+        a = np.asarray(self.ttft_s, dtype=np.float64)
+        return float(np.percentile(a, 50)), float(np.percentile(a, 95))
+
     def bucket_tok_s(self) -> Dict[Bucket, float]:
         """Goodput tokens/s per bucket (delivered tokens / decode wall)."""
         return {b: e["tokens"] / max(e["decode_s"], 1e-9)
@@ -187,6 +204,7 @@ class SessionStats:
     def to_dict(self) -> Dict[str, Any]:
         """JSON-ready summary (what ``launch/serve`` and benches print)."""
         p50, p95 = self.queue_percentiles()
+        t50, t95 = self.ttft_percentiles()
         hits = self.cache.get("hits", 0)
         total = hits + self.cache.get("misses", 0)
         return {
@@ -212,9 +230,11 @@ class SessionStats:
             "failed": self.failed,
             "poisoned_rows": self.poisoned_rows,
             "stragglers": self.stragglers,
-            "events": list(self.events),
+            "events": [e.as_dict() for e in self.events],
             "queue_p50_s": p50,
             "queue_p95_s": p95,
+            "ttft_p50_s": t50,
+            "ttft_p95_s": t95,
             "cache": dict(self.cache),
             "cache_hit_rate": hits / total if total else 0.0,
             "buckets": {
@@ -275,7 +295,8 @@ class ServeSession:
                  nan_check: bool = True,
                  straggler_threshold: float = 3.0,
                  on_straggler=None,
-                 faults=None):
+                 faults=None,
+                 telemetry=None):
         """Validate the knobs and set up an empty queue + caches."""
         self.model = model
         self.params = params
@@ -320,6 +341,11 @@ class ServeSession:
         self._admission_hold = 0                # boundaries to skip admit
         self._step_count = 0                    # session-global step index
         self._faults = faults
+        # Telemetry (ISSUE 8): a repro.obs.Telemetry bundle — metrics +
+        # span tracer + per-request lifecycle log.  Defaults to the
+        # shared disabled instance; every instrumentation site guards on
+        # telemetry.enabled, so the off path never touches the tracer.
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
         # Deadline/shedding decisions read this clock (tests swap in a
         # fake one for deterministic mid-decode timeouts); step timings
         # always use the real perf counter.
@@ -327,6 +353,63 @@ class ServeSession:
         self._straggler = StragglerMonitor(
             threshold=straggler_threshold,
             on_straggler=self._straggler_event)
+        if self.telemetry.enabled:
+            self._register_instruments()
+
+    # ------------------------------------------------------ telemetry
+    def _register_instruments(self) -> None:
+        """Pre-create the session's metric families (zero-valued) so
+        exporters always include them, even before traffic or faults."""
+        m = self.telemetry.metrics
+        m.counter("serve.requests_submitted_total",
+                  help="requests submitted to the session")
+        m.counter("serve.inflight_admissions_total",
+                  help="requests admitted at engine step boundaries")
+        m.counter("serve.events_total",
+                  help="structured operational events (faults, "
+                       "degradations, stragglers)")
+        m.counter("serve.exec_cache_hits_total",
+                  help="executable-cache hits")
+        m.counter("serve.exec_cache_misses_total",
+                  help="executable-cache misses")
+        m.counter("serve.aot_fallbacks_total",
+                  help="AOT lowerings that fell back to the jit fn")
+        m.counter("serve.compile_retries_total",
+                  help="failed AOT attempts that were retried")
+        m.histogram("serve.ttft_seconds",
+                    help="submit -> first token latency, seconds")
+        m.histogram("serve.decode_step_seconds",
+                    help="engine decode step wall time, seconds")
+        m.gauge("serve.kv_blocks_live", help="paged-KV blocks in use")
+        m.gauge("serve.kv_blocks_free", help="paged-KV blocks free")
+        m.gauge("serve.kv_fragmentation",
+                help="paged-KV pool fragmentation [0,1]")
+
+    def _span(self, name: str, **args):
+        """Tracer span when telemetry is on; a shared no-op context
+        manager otherwise (the null fast path)."""
+        tel = self.telemetry
+        if tel.enabled:
+            return tel.tracer.span(name, **args)
+        return _NULL_SPAN
+
+    def _event(self, kind: str, step: Optional[int] = None,
+               request_id: Optional[str] = None, **data: Any) -> None:
+        """Record one structured :class:`~repro.obs.events.Event`."""
+        self._record_event(Event(kind=kind, step=step,
+                                 request_id=request_id,
+                                 ts=self._clock(), data=data))
+
+    def _record_event(self, ev: Event) -> None:
+        """Append an event to the ledger and mirror it into telemetry
+        (per-kind counters + a trace instant)."""
+        self.stats.events.append(ev)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.metrics.counter("serve.events_total").inc()
+            tel.metrics.counter(f"serve.events.{ev.kind}_total").inc()
+            tel.tracer.instant(f"event:{ev.kind}", step=ev.step,
+                               request_id=ev.request_id)
 
     # ------------------------------------------------------ admission
     def submit(self, tokens, max_new_tokens: int,
@@ -354,12 +437,18 @@ class ServeSession:
                 f"bucket {max(self.bucket_lengths)}")
         rid = (request_id if request_id is not None
                else f"req-{next(_REQUEST_IDS)}")
+        submitted_at = self._clock()
         self._queue.append(Request(
             tokens=prompt,
             max_new_tokens=int(max_new_tokens), request_id=rid,
-            submitted_at=self._clock(), extras=extras,
+            submitted_at=submitted_at, extras=extras,
             deadline_s=(deadline_s if deadline_s is not None
                         else self.request_deadline_s)))
+        tel = self.telemetry
+        if tel.enabled:
+            tel.metrics.counter("serve.requests_submitted_total").inc()
+            tel.lifecycle.submitted(rid, submitted_at)
+            tel.tracer.async_begin("request", rid, request_id=rid)
         return rid
 
     def pending(self) -> int:
@@ -395,6 +484,10 @@ class ServeSession:
             self.stats.cancelled += 1
         elif state == RequestState.FAILED:
             self.stats.failed += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.metrics.counter(
+                f"serve.requests_{state.lower()}_total").inc()
 
     def _finish_unadmitted(self, req: Request, state: str, reason: str,
                            sink: List[RequestResult]) -> None:
@@ -408,6 +501,11 @@ class ServeSession:
             state=state, reason=reason))
         self.stats.requests += 1
         self._count_terminal(state)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.lifecycle.terminal(req.request_id, self._clock(),
+                                   state, reason)
+            tel.tracer.async_end("request", req.request_id, state=state)
 
     def _sweep_queue(self, sink: List[RequestResult]) -> None:
         """Queue-level terminal outcomes, applied at every admission
@@ -444,14 +542,12 @@ class ServeSession:
         out, self._done = self._done, []
         return out
 
-    def _straggler_event(self, event) -> None:
-        """StragglerMonitor hook: ledger the event, optionally hold
-        admission for the caller-returned number of boundaries."""
+    def _straggler_event(self, event: Event) -> None:
+        """StragglerMonitor hook: ledger the monitor's own structured
+        event, optionally hold admission for the caller-returned number
+        of boundaries."""
         self.stats.stragglers += 1
-        self.stats.events.append(
-            {"kind": "straggler", "step": int(event.step),
-             "duration_s": float(event.duration),
-             "ratio": float(event.ratio)})
+        self._record_event(event)
         if self.on_straggler is not None:
             hold = self.on_straggler(event)
             if isinstance(hold, int) and hold > 0:
@@ -466,24 +562,29 @@ class ServeSession:
         AOT-only failure degrades performance, never correctness."""
         delay = self.compile_backoff_s
         last: Optional[Exception] = None
-        for attempt in range(1 + self.compile_retries):
-            try:
-                if self._faults is not None:
-                    self._faults.compile_fault(what)
-                return fn.lower(*lower_args).compile(), True
-            except Exception as e:
-                last = e
-                log.warning("AOT compile of %s failed "
-                            "(attempt %d/%d): %s", what, attempt + 1,
-                            1 + self.compile_retries, e)
-                if attempt < self.compile_retries:
-                    self.stats.compile_retries += 1
-                    time.sleep(min(delay, 0.5))
-                    delay *= 2
+        tel = self.telemetry
+        with self._span("serve.aot_compile", what=what):
+            for attempt in range(1 + self.compile_retries):
+                try:
+                    if self._faults is not None:
+                        self._faults.compile_fault(what)
+                    return fn.lower(*lower_args).compile(), True
+                except Exception as e:
+                    last = e
+                    log.warning("AOT compile of %s failed "
+                                "(attempt %d/%d): %s", what, attempt + 1,
+                                1 + self.compile_retries, e)
+                    if attempt < self.compile_retries:
+                        self.stats.compile_retries += 1
+                        if tel.enabled:
+                            tel.metrics.counter(
+                                "serve.compile_retries_total").inc()
+                        time.sleep(min(delay, 0.5))
+                        delay *= 2
         self.stats.fallbacks += 1
-        self.stats.events.append(
-            {"kind": "compile_failure", "what": what,
-             "error": repr(last)})
+        if tel.enabled:
+            tel.metrics.counter("serve.aot_fallbacks_total").inc()
+        self._event("compile_failure", what=what, error=repr(last))
         return fn, False
 
     def _build_step(self, jit_fn, lower_args: tuple, *, what: str,
@@ -505,7 +606,7 @@ class ServeSession:
         log.warning("degrading %s to the reference backend", what)
         self.stats.degraded = True
         self.stats.degraded_buckets += 1
-        self.stats.events.append({"kind": "degraded", "what": what})
+        self._event("degraded", what=what)
         ref_fn, _ = self._aot_compile(ref_builder(), lower_args,
                                       what=what + " [degraded]")
         return ref_fn
@@ -621,6 +722,7 @@ class ServeSession:
         modality families the paged engine does not cover)."""
         results: List[RequestResult] = []
         masked = self.model.cfg.family in ("dense", "moe", "ssm")
+        tel = self.telemetry
         while self._queue:
             # Queue-level outcomes only on this path: a whole group runs
             # to completion, so mid-decode timeouts/cancellation are an
@@ -653,6 +755,24 @@ class ServeSession:
                     bucket=bucket, queue_s=waits[i], stats=stats))
             self.stats.requests += len(group)
             self.stats.queue_s.extend(waits)
+            # TTFT on the batched path: the group's first tokens exist
+            # once its shared prefill finishes.
+            ttfts = [w + stats.prefill_s for w in waits]
+            self.stats.ttft_s.extend(ttfts)
+            if tel.enabled:
+                t_done = self._clock()
+                for r, w, tt in zip(group, waits, ttfts):
+                    tel.metrics.histogram(
+                        "serve.ttft_seconds").observe(tt)
+                    tel.lifecycle.admitted(r.request_id,
+                                           r.submitted_at + w)
+                    tel.lifecycle.token(r.request_id,
+                                        r.submitted_at + tt,
+                                        n=r.max_new_tokens)
+                    tel.lifecycle.terminal(r.request_id, t_done,
+                                           RequestState.COMPLETED, None)
+                    tel.tracer.async_end("request", r.request_id,
+                                         state=RequestState.COMPLETED)
         return results
 
     # ------------------------------------------- in-flight engine
@@ -713,6 +833,8 @@ class ServeSession:
         act_stats = ServeStats(prefill_s=0.0, decode_s=0.0,
                                tokens_generated=0, backend=backend)
         deg0 = self.stats.degraded_buckets
+        tel = self.telemetry
+        t_act0 = tel.clock() if tel.enabled else 0.0
 
         problems = (serve_dispatch_problems(cfg, rows_n, s_pad, cap)
                     if dispatch is not None else {})
@@ -803,9 +925,8 @@ class ServeSession:
                     alloc.free(row_blocks[r])
             except ValueError as e:
                 log.warning("allocator error retiring %s: %s", rid, e)
-                self.stats.events.append(
-                    {"kind": "allocator", "step": self._step_count,
-                     "request_id": rid, "error": str(e)})
+                self._event("allocator", step=self._step_count,
+                            request_id=rid, error=str(e))
             tables_np[r, :] = 0
 
         def retire(r: int) -> None:
@@ -827,6 +948,11 @@ class ServeSession:
             self.stats.requests += 1
             self._count_terminal(state)
             self.stats.queue_s.append(row_wait[r])
+            if tel.enabled:
+                tel.lifecycle.terminal(req.request_id, self._clock(),
+                                       state, reason)
+                tel.tracer.async_end("request", req.request_id,
+                                     state=state)
             self._running.discard(req.request_id)
             self._cancelled.discard(req.request_id)
             if attn_family and row_blocks[r]:
@@ -843,9 +969,8 @@ class ServeSession:
             idle for the next admission."""
             log.warning("admission of %s failed: %s", req.request_id,
                         reason)
-            self.stats.events.append(
-                {"kind": "admission_failure", "step": self._step_count,
-                 "request_id": req.request_id, "error": reason})
+            self._event("admission_failure", step=self._step_count,
+                        request_id=req.request_id, error=reason)
             if attn_family and row_blocks[r]:
                 free_row_blocks(r, req.request_id)
                 row_blocks[r] = []
@@ -856,6 +981,11 @@ class ServeSession:
                 state=RequestState.FAILED, reason=reason))
             self.stats.requests += 1
             self._count_terminal(RequestState.FAILED)
+            if tel.enabled:
+                tel.lifecycle.terminal(req.request_id, self._clock(),
+                                       RequestState.FAILED, reason)
+                tel.tracer.async_end("request", req.request_id,
+                                     state=RequestState.FAILED)
 
         def admit(req: Request, r: int) -> bool:
             """Prefill req into row r and scatter its KV/state in;
@@ -865,6 +995,7 @@ class ServeSession:
             length = len(req.tokens)
             p_len = self._prompt_bucket(req)
             row_wait[r] = self._clock() - req.submitted_at
+            t_adm0 = tel.clock() if tel.enabled else 0.0
             if attn_family:
                 nb = blocks_needed(length + req.max_new_tokens - 1, bs)
                 row_blocks[r] = alloc.alloc(nb)
@@ -877,6 +1008,7 @@ class ServeSession:
                 kind, prob = serve_dispatch_problems(
                     cfg, 1, p_len, cap)["prefill"]
                 dispatch.propose(kind, prob)
+            t_pf0 = tel.clock() if tel.enabled else 0.0
             t0 = time.time()
             try:
                 logits, pcache = fn(params,
@@ -888,6 +1020,10 @@ class ServeSession:
                 fail_admission(req, r, f"prefill raised: {e}")
                 return False
             dt = time.time() - t0
+            if tel.enabled:
+                tel.tracer.complete("serve.prefill", t_pf0, tel.clock(),
+                                    request_id=req.request_id,
+                                    prompt_len=int(p_len))
             if dispatch is not None:
                 dispatch.observe(kind, prob, dt)
             act_stats.prefill_s += dt
@@ -936,6 +1072,20 @@ class ServeSession:
             tok_np[r] = first
             self._running.add(req.request_id)
             self.stats.inflight_admissions += 1
+            # TTFT: the engine's batch-1 prefill produced the first
+            # token right here — submit -> now on the session clock.
+            now = self._clock()
+            self.stats.ttft_s.append(now - req.submitted_at)
+            if tel.enabled:
+                tel.metrics.counter(
+                    "serve.inflight_admissions_total").inc()
+                tel.metrics.histogram("serve.ttft_seconds").observe(
+                    now - req.submitted_at)
+                tel.lifecycle.admitted(req.request_id,
+                                       req.submitted_at + row_wait[r])
+                tel.lifecycle.token(req.request_id, now)
+                tel.tracer.complete("serve.admit", t_adm0, tel.clock(),
+                                    request_id=req.request_id)
             return True
 
         step_fn = None
@@ -981,201 +1131,217 @@ class ServeSession:
         step_idx = 0
         inj_blocked = False
         while True:
-            inj_blocked = False
-            now = self._clock()
-            for r in range(rows_n):
-                req = row_req[r]
-                if req is None:
-                    continue
-                if row_remaining[r] <= 0:
-                    retire(r)
-                elif req.request_id in self._cancelled:
-                    row_fate[r] = (RequestState.CANCELLED,
-                                   "cancelled mid-decode")
-                    retire(r)
-                elif (req.deadline_s is not None
-                        and now - req.submitted_at > req.deadline_s):
-                    row_fate[r] = (
-                        RequestState.TIMED_OUT,
-                        f"deadline_s={req.deadline_s:g} blown "
-                        f"mid-decode after {len(row_out[r])} tokens")
-                    retire(r)
-            if (attn_family and alloc.num_live
-                    and alloc.fragmentation() > 0.5):
-                live = [row_blocks[r] for r in range(rows_n)
-                        if row_blocks[r]]
-                perm, moved = alloc.compact_tables(tables_np, live)
-                if moved:
-                    gather = jnp.asarray(perm)
-                    pool = jax.tree.map(lambda p: p[:, gather], pool)
-                    self.stats.compactions += 1
-            self._sweep_queue(results)
-            if self._admission_hold > 0:
-                # A straggler hook asked to shrink admission: skip this
-                # boundary, serve only the rows already in flight.
-                self._admission_hold -= 1
-            else:
-                while self._queue:
-                    free_rows = [r for r in range(rows_n)
-                                 if row_req[r] is None]
-                    if not free_rows:
-                        break
-                    nxt = self._queue[0]
-                    if attn_family:
-                        needed = (len(nxt.tokens)
-                                  + nxt.max_new_tokens - 1)
-                        nb = blocks_needed(needed, bs)
-                        if nb > alloc.n_blocks - 1:
-                            # Can NEVER fit this pool, even with every
-                            # row idle: reject this request only and
-                            # keep the engine running (pre-ISSUE-7 this
-                            # raised RuntimeError out of drain()).
-                            self._queue.pop(0)
-                            self._finish_unadmitted(
-                                nxt, RequestState.REJECTED,
-                                f"needs {nb} KV blocks but the pool "
-                                f"holds {alloc.n_blocks - 1}; raise "
-                                f"kv_blocks", results)
-                            continue
-                        if needed > max_blocks * bs:
-                            # Needs a wider table than this activation
-                            # compiled: defer to the next activation,
-                            # whose geometry is recomputed.
+            with self._span("serve.step", step=self._step_count):
+                inj_blocked = False
+                now = self._clock()
+                for r in range(rows_n):
+                    req = row_req[r]
+                    if req is None:
+                        continue
+                    if row_remaining[r] <= 0:
+                        retire(r)
+                    elif req.request_id in self._cancelled:
+                        row_fate[r] = (RequestState.CANCELLED,
+                                       "cancelled mid-decode")
+                        retire(r)
+                    elif (req.deadline_s is not None
+                            and now - req.submitted_at > req.deadline_s):
+                        row_fate[r] = (
+                            RequestState.TIMED_OUT,
+                            f"deadline_s={req.deadline_s:g} blown "
+                            f"mid-decode after {len(row_out[r])} tokens")
+                        retire(r)
+                if (attn_family and alloc.num_live
+                        and alloc.fragmentation() > 0.5):
+                    with self._span("serve.compact", step=self._step_count):
+                        live = [row_blocks[r] for r in range(rows_n)
+                                if row_blocks[r]]
+                        perm, moved = alloc.compact_tables(tables_np, live)
+                        if moved:
+                            gather = jnp.asarray(perm)
+                            pool = jax.tree.map(lambda p: p[:, gather], pool)
+                            self.stats.compactions += 1
+                self._sweep_queue(results)
+                if self._admission_hold > 0:
+                    # A straggler hook asked to shrink admission: skip this
+                    # boundary, serve only the rows already in flight.
+                    self._admission_hold -= 1
+                else:
+                    while self._queue:
+                        free_rows = [r for r in range(rows_n)
+                                     if row_req[r] is None]
+                        if not free_rows:
                             break
-                        if (self._faults is not None
-                                and self._faults.alloc_blocked(
-                                    self._step_count)):
-                            self.stats.events.append(
-                                {"kind": "alloc_exhausted",
-                                 "step": self._step_count})
-                            inj_blocked = True
-                            break   # injected exhaustion: backpressure
-                        if not alloc.can_fit(needed):
-                            break   # backpressure: wait for retirements
-                    if not admit(self._queue.pop(0), free_rows[0]):
-                        continue    # admission fault: row still free
-            active = [r for r in range(rows_n)
-                      if row_req[r] is not None]
-            if not active:
-                if inj_blocked and self._queue:
-                    # Injected exhaustion with nothing in flight: count
-                    # the stalled boundary so the finite fault window
-                    # expires instead of wedging drain().
+                        nxt = self._queue[0]
+                        if attn_family:
+                            needed = (len(nxt.tokens)
+                                      + nxt.max_new_tokens - 1)
+                            nb = blocks_needed(needed, bs)
+                            if nb > alloc.n_blocks - 1:
+                                # Can NEVER fit this pool, even with every
+                                # row idle: reject this request only and
+                                # keep the engine running (pre-ISSUE-7 this
+                                # raised RuntimeError out of drain()).
+                                self._queue.pop(0)
+                                self._finish_unadmitted(
+                                    nxt, RequestState.REJECTED,
+                                    f"needs {nb} KV blocks but the pool "
+                                    f"holds {alloc.n_blocks - 1}; raise "
+                                    f"kv_blocks", results)
+                                continue
+                            if needed > max_blocks * bs:
+                                # Needs a wider table than this activation
+                                # compiled: defer to the next activation,
+                                # whose geometry is recomputed.
+                                break
+                            if (self._faults is not None
+                                    and self._faults.alloc_blocked(
+                                        self._step_count)):
+                                self._event("alloc_exhausted",
+                                            step=self._step_count)
+                                inj_blocked = True
+                                break   # injected exhaustion: backpressure
+                            if not alloc.can_fit(needed):
+                                break   # backpressure: wait for retirements
+                        if not admit(self._queue.pop(0), free_rows[0]):
+                            continue    # admission fault: row still free
+                active = [r for r in range(rows_n)
+                          if row_req[r] is not None]
+                if not active:
+                    if inj_blocked and self._queue:
+                        # Injected exhaustion with nothing in flight: count
+                        # the stalled boundary so the finite fault window
+                        # expires instead of wedging drain().
+                        self._step_count += 1
+                        continue
+                    break
+                if not any(row_remaining[r] > 0 for r in active):
+                    continue    # budget-1 admissions retire at loop top
+                if step_fn is None:
+                    step_fn, _ = self._compile(decode_key(cur_bundle),
+                                               build_decode(cur_bundle))
+                if dispatch is not None:
+                    kind, prob = dec
+                    dispatch.propose(kind, prob)
+                t_dec0 = tel.clock() if tel.enabled else 0.0
+                t_step = time.perf_counter()
+                try:
+                    if attn_family:
+                        lg, new_pool = step_fn(params, pool,
+                                               jnp.asarray(tok_np)[:, None],
+                                               jnp.asarray(pos_np),
+                                               jnp.asarray(tables_np))
+                    else:
+                        lg, new_pool = step_fn(params, pool,
+                                               jnp.asarray(tok_np)[:, None],
+                                               jnp.int32(0))
+                except Exception as e:
+                    # A step-level kernel failure is not attributable to one
+                    # row: fail the rows that were in flight (their blocks
+                    # free, partial tokens delivered) but keep the queue and
+                    # the session alive — coarse isolation, not a drain
+                    # abort.
+                    log.warning("decode step raised: %s", e)
+                    self._event("step_exception", step=self._step_count,
+                                error=str(e))
+                    for r in active:
+                        row_fate[r] = (RequestState.FAILED,
+                                       f"decode step raised: {e}")
+                        retire(r)
                     self._step_count += 1
                     continue
-                break
-            if not any(row_remaining[r] > 0 for r in active):
-                continue    # budget-1 admissions retire at loop top
-            if step_fn is None:
-                step_fn, _ = self._compile(decode_key(cur_bundle),
-                                           build_decode(cur_bundle))
-            if dispatch is not None:
-                kind, prob = dec
-                dispatch.propose(kind, prob)
-            t_step = time.perf_counter()
-            try:
-                if attn_family:
-                    lg, new_pool = step_fn(params, pool,
-                                           jnp.asarray(tok_np)[:, None],
-                                           jnp.asarray(pos_np),
-                                           jnp.asarray(tables_np))
-                else:
-                    lg, new_pool = step_fn(params, pool,
-                                           jnp.asarray(tok_np)[:, None],
-                                           jnp.int32(0))
-            except Exception as e:
-                # A step-level kernel failure is not attributable to one
-                # row: fail the rows that were in flight (their blocks
-                # free, partial tokens delivered) but keep the queue and
-                # the session alive — coarse isolation, not a drain
-                # abort.
-                log.warning("decode step raised: %s", e)
-                self.stats.events.append(
-                    {"kind": "step_exception",
-                     "step": self._step_count, "error": str(e)})
+                pool = new_pool
+                if self._faults is not None:
+                    for rr in self._faults.nan_rows(self._step_count):
+                        if 0 <= rr < rows_n:
+                            lg = lg.at[rr, -1, :].set(jnp.nan)
+                new_tok = np.asarray(
+                    jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32))
+                finite = (np.asarray(
+                    jnp.all(jnp.isfinite(lg[:, -1]), axis=-1))
+                    if self.nan_check else None)
+                dt = time.perf_counter() - t_step
+                act_stats.decode_s += dt
+                self.stats.decode_s += dt
+                bucket_entry()["decode_s"] += dt
+                if tel.enabled:
+                    tel.tracer.complete("serve.decode_step", t_dec0,
+                                        tel.clock(), step=self._step_count,
+                                        rows=len(active))
+                    tel.metrics.histogram(
+                        "serve.decode_step_seconds").observe(dt)
+                if dispatch is not None:
+                    dispatch.observe(kind, prob, dt)
+                    if pallas and not switch_blocked:
+                        committed = dispatch.committed(kind, prob)
+                        if (committed is not None
+                                and committed != cur_bundle.get(kind)):
+                            new_bundle = cur_bundle.replace(
+                                **{kind: committed})
+                            new_key = decode_key(new_bundle)
+                            if self.exec_cache.contains(new_key):
+                                step_fn, _ = self._compile(
+                                    new_key, build_decode(new_bundle))
+                                cur_bundle = new_bundle
+                                self.stats.free_switches += 1
+                                self.stats.commits_seen += 1
+                            elif recompiles < self.max_recompiles:
+                                t_c = time.perf_counter()
+                                step_fn, _ = self._compile(
+                                    new_key, build_decode(new_bundle))
+                                recompile_s += time.perf_counter() - t_c
+                                recompiles += 1
+                                cur_bundle = new_bundle
+                                self.stats.commits_seen += 1
+                            else:
+                                switch_blocked = True
+                                self.stats.commits_seen += 1
+                t_tok = self._clock() if tel.enabled else 0.0
                 for r in active:
-                    row_fate[r] = (RequestState.FAILED,
-                                   f"decode step raised: {e}")
-                    retire(r)
+                    if finite is not None and not finite[r]:
+                        # Poison row: non-finite logits retire ONLY this
+                        # row at the next boundary; batchmates are
+                        # untouched (rows are independent — per-row
+                        # positions/masks), so their tokens stay
+                        # bit-identical to an uninjected run.
+                        self.stats.poisoned_rows += 1
+                        self._event("poison_row", step=self._step_count,
+                                    request_id=row_req[r].request_id)
+                        row_fate[r] = (
+                            RequestState.FAILED,
+                            f"non-finite logits at step {self._step_count}")
+                        row_remaining[r] = 0
+                        continue
+                    if row_remaining[r] > 0:
+                        t = int(new_tok[r])
+                        row_out[r].append(t)
+                        tok_np[r] = t
+                        pos_np[r] += 1
+                        row_remaining[r] -= 1
+                        if tel.enabled:
+                            tel.lifecycle.token(row_req[r].request_id, t_tok)
+                            tel.lifecycle.decode_step(row_req[r].request_id)
+                self.stats.steps += 1
+                step_idx += 1
+                extra = (self._faults.slow_extra_s(self._step_count)
+                         if self._faults is not None else 0.0)
+                self._straggler.record(self._step_count, dt + extra)
                 self._step_count += 1
-                continue
-            pool = new_pool
-            if self._faults is not None:
-                for rr in self._faults.nan_rows(self._step_count):
-                    if 0 <= rr < rows_n:
-                        lg = lg.at[rr, -1, :].set(jnp.nan)
-            new_tok = np.asarray(
-                jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32))
-            finite = (np.asarray(
-                jnp.all(jnp.isfinite(lg[:, -1]), axis=-1))
-                if self.nan_check else None)
-            dt = time.perf_counter() - t_step
-            act_stats.decode_s += dt
-            self.stats.decode_s += dt
-            bucket_entry()["decode_s"] += dt
-            if dispatch is not None:
-                dispatch.observe(kind, prob, dt)
-                if pallas and not switch_blocked:
-                    committed = dispatch.committed(kind, prob)
-                    if (committed is not None
-                            and committed != cur_bundle.get(kind)):
-                        new_bundle = cur_bundle.replace(
-                            **{kind: committed})
-                        new_key = decode_key(new_bundle)
-                        if self.exec_cache.contains(new_key):
-                            step_fn, _ = self._compile(
-                                new_key, build_decode(new_bundle))
-                            cur_bundle = new_bundle
-                            self.stats.free_switches += 1
-                            self.stats.commits_seen += 1
-                        elif recompiles < self.max_recompiles:
-                            t_c = time.perf_counter()
-                            step_fn, _ = self._compile(
-                                new_key, build_decode(new_bundle))
-                            recompile_s += time.perf_counter() - t_c
-                            recompiles += 1
-                            cur_bundle = new_bundle
-                            self.stats.commits_seen += 1
-                        else:
-                            switch_blocked = True
-                            self.stats.commits_seen += 1
-            for r in active:
-                if finite is not None and not finite[r]:
-                    # Poison row: non-finite logits retire ONLY this
-                    # row at the next boundary; batchmates are
-                    # untouched (rows are independent — per-row
-                    # positions/masks), so their tokens stay
-                    # bit-identical to an uninjected run.
-                    self.stats.poisoned_rows += 1
-                    self.stats.events.append(
-                        {"kind": "poison_row",
-                         "step": self._step_count,
-                         "request_id": row_req[r].request_id})
-                    row_fate[r] = (
-                        RequestState.FAILED,
-                        f"non-finite logits at step {self._step_count}")
-                    row_remaining[r] = 0
-                    continue
-                if row_remaining[r] > 0:
-                    t = int(new_tok[r])
-                    row_out[r].append(t)
-                    tok_np[r] = t
-                    pos_np[r] += 1
-                    row_remaining[r] -= 1
-            self.stats.steps += 1
-            step_idx += 1
-            extra = (self._faults.slow_extra_s(self._step_count)
-                     if self._faults is not None else 0.0)
-            self._straggler.record(self._step_count, dt + extra)
-            self._step_count += 1
-            if on_step is not None:
-                on_step({"step": step_idx,
-                         "active": [row_req[r].request_id
-                                    for r in range(rows_n)
-                                    if row_req[r] is not None],
-                         "pending": len(self._queue),
-                         "free_blocks": (alloc.num_free
-                                         if attn_family else None)})
+                if tel.enabled and attn_family:
+                    tel.metrics.gauge("serve.kv_blocks_live").set(
+                        alloc.num_live)
+                    tel.metrics.gauge("serve.kv_blocks_free").set(
+                        alloc.num_free)
+                    tel.metrics.gauge("serve.kv_fragmentation").set(
+                        alloc.fragmentation())
+                if on_step is not None:
+                    on_step({"step": step_idx,
+                             "active": [row_req[r].request_id
+                                        for r in range(rows_n)
+                                        if row_req[r] is not None],
+                             "pending": len(self._queue),
+                             "free_blocks": (alloc.num_free
+                                             if attn_family else None)})
 
         act_stats.recompiles = recompiles
         act_stats.recompile_s = recompile_s
@@ -1189,6 +1355,16 @@ class ServeSession:
         self.stats.recompiles += recompiles
         bucket_entry()["batches"] += 1
         self.stats.cache = self.exec_cache.stats()
+        if tel.enabled:
+            tel.metrics.set_gauges(
+                {k: v for k, v in self.stats.cache.items()},
+                prefix="serve.exec_cache.",
+                help="executable-cache snapshot")
+            self._straggler.export_metrics(tel.metrics)
+            tel.tracer.complete("serve.activation", t_act0, tel.clock(),
+                                rows=int(rows_n),
+                                prompt_bucket=int(s_pad),
+                                steps=int(step_idx))
         if self.registry is not None and step_idx:
             key = reg.RegistryKey.make(
                 "serve_decode",
@@ -1205,7 +1381,13 @@ class ServeSession:
     # ------------------------------------------------------ execution
     def _compile(self, key: ExecKey, builder) -> Tuple[Any, bool]:
         """Executable for key via the shared cache: ``(fn, was_hit)``."""
-        return self.exec_cache.get(key, builder)
+        fn, hit = self.exec_cache.get(key, builder)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.metrics.counter(
+                "serve.exec_cache_hits_total" if hit
+                else "serve.exec_cache_misses_total").inc()
+        return fn, hit
 
     def run_batch(self, batch: Dict[str, jnp.ndarray], *,
                   max_new_tokens: int,
@@ -1264,6 +1446,7 @@ class ServeSession:
         pallas = backend == "pallas"
         model_backend = "pallas" if pallas else "xla"
         deg0 = self.stats.degraded_buckets
+        tel = self.telemetry
 
         problems = (serve_dispatch_problems(cfg, bsz, prompt_len, total)
                     if dispatch is not None else {})
@@ -1321,6 +1504,7 @@ class ServeSession:
                 else None)
 
         prefill_fn, _ = self._compile(prefill_key, build_prefill)
+        t_pf0 = tel.clock() if tel.enabled else 0.0
         t0 = time.time()
         logits, cache = (prefill_fn(params, batch) if starts is None
                          else prefill_fn(params, batch, starts))
@@ -1342,6 +1526,10 @@ class ServeSession:
         cache = jax.tree.map(fit, full, cache)
         jax.block_until_ready(cache)
         prefill_s = time.time() - t0
+        if tel.enabled:
+            tel.tracer.complete("serve.prefill", t_pf0, tel.clock(),
+                                batch=int(bsz),
+                                prompt_len=int(prompt_len))
 
         def pick(lg, key):
             """Next token per row: greedy argmax or sampled."""
@@ -1414,6 +1602,7 @@ class ServeSession:
         switch_blocked = False  # budget spent on an uncached commit
         dec = problems.get("decode")
 
+        t_dec0 = tel.clock() if tel.enabled else 0.0
         t1 = time.time()
         for i in range(max_new_tokens - 1):
             t_step = time.perf_counter()
@@ -1480,6 +1669,10 @@ class ServeSession:
                             self.stats.commits_seen += 1
         jax.block_until_ready(tok)
         decode_s = time.time() - t1 - recompile_s
+        if tel.enabled:
+            tel.tracer.complete("serve.decode", t_dec0, tel.clock(),
+                                batch=int(bsz),
+                                steps=int(max_new_tokens - 1))
         report = None
         if prefill_bundle is not None:
             # Resolved once per (prefill, decode) bundle pair and

@@ -306,6 +306,38 @@ def cmd_serve_report(args) -> int:
     return 0
 
 
+def cmd_metrics(args) -> int:
+    """Export the process metrics registry (``repro.obs.metrics``).
+
+    Registry-snapshot gauges (record counts per kind/source, from
+    ``TuningRegistry.stats()``) are folded in first, so the command is
+    useful even in a fresh process where no tuner/dispatch counters
+    have fired yet.  ``--format prom`` prints Prometheus text
+    exposition; ``--format json`` prints the snapshot dict.
+    """
+    from repro.obs.metrics import get_metrics_registry
+    registry = _registry(args)
+    met = get_metrics_registry()
+    stats = registry.stats()
+    met.set_gauges({k: v for k, v in stats.items()
+                    if isinstance(v, (int, float))},
+                   prefix="registry.", help="tuning-registry snapshot")
+    for group in ("by_kind", "by_source"):
+        sub = stats.get(group)
+        if isinstance(sub, dict):
+            met.set_gauges(sub, prefix=f"registry.{group}.",
+                           help="tuning-registry snapshot")
+    text = (met.to_prometheus() if args.format == "prom"
+            else json.dumps(met.snapshot(), indent=2, sort_keys=True))
+    if args.out and args.out != "-":
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(text if text.endswith("\n") else text + "\n")
+        print(f"wrote {args.format} metrics to {args.out}")
+    else:
+        print(text, end="" if text.endswith("\n") else "\n")
+    return 0
+
+
 def cmd_invalidate(args) -> int:
     registry = _registry(args)
     if not (args.all or args.kind or args.machine or args.cost_model):
@@ -401,6 +433,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="restrict to one kind (e.g. "
                          "decode_attention_schedule)")
     sr.set_defaults(fn=cmd_serve_report)
+
+    mt = sub.add_parser("metrics",
+                        help="export process metrics (+ registry "
+                             "snapshot gauges) as Prometheus text or "
+                             "JSON")
+    mt.add_argument("--format", default="prom", choices=("prom", "json"),
+                    help="output format (default: Prometheus text)")
+    mt.add_argument("--out", default="-",
+                    help="output path ('-' = stdout)")
+    mt.set_defaults(fn=cmd_metrics)
 
     v = sub.add_parser("invalidate", help="drop records by filter")
     v.add_argument("--kind", default=None)

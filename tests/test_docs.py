@@ -13,6 +13,7 @@ REPO = Path(__file__).resolve().parent.parent
 # on these paths; everything else carries a per-file-ignore.
 D1_PATHS = sorted(
     list((REPO / "src/repro/serving").glob("*.py"))
+    + list((REPO / "src/repro/obs").glob("*.py"))
     + [REPO / "src/repro/runtime/dispatch.py"]
 )
 
@@ -20,6 +21,7 @@ DOC_FILES = [
     REPO / "README.md",
     REPO / "docs/ARCHITECTURE.md",
     REPO / "docs/SERVING.md",
+    REPO / "docs/OBSERVABILITY.md",
 ]
 
 

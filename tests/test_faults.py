@@ -75,7 +75,7 @@ def test_injector_window_and_fired_log():
     assert not fi.alloc_blocked(1)
     assert fi.alloc_blocked(2) and fi.alloc_blocked(3)
     assert not fi.alloc_blocked(4)
-    assert [f["at"] for f in fi.fired] == [2, 3]
+    assert [f.step for f in fi.fired] == [2, 3]
 
 
 # ------------------------------------------------------- poison-row faults
@@ -94,7 +94,7 @@ def test_nan_poison_row_isolated_survivors_bit_identical(smoke):
         assert res[rid].state == RequestState.COMPLETED
         assert res[rid].tokens.tolist() == clean[rid].tokens.tolist()
     assert s.stats.poisoned_rows == 1 and s.stats.failed == 1
-    assert any(e["kind"] == "poison_row" for e in s.stats.events)
+    assert any(e.kind == "poison_row" for e in s.stats.events)
     assert fi.fired  # the injector really fired
     # the session stays serviceable after the poison event
     s.submit(prompts[0], 3, request_id="after")
@@ -111,7 +111,7 @@ def test_double_free_contained_as_allocator_event(smoke):
     s, res = _run(model, params, prompts, budgets, faults=fi)
     assert _tokens(res) == _tokens(clean)  # no drain abort, no damage
     assert all(r.state == RequestState.COMPLETED for r in res.values())
-    assert any(e["kind"] == "allocator" for e in s.stats.events)
+    assert any(e.kind == "allocator" for e in s.stats.events)
 
 
 def test_compaction_under_partially_failed_batch(smoke):
@@ -168,7 +168,7 @@ def test_persistent_compile_failure_degrades_pallas_bucket(smoke):
     assert _tokens(res) == _tokens(clean)
     assert s.stats.degraded and s.stats.degraded_buckets >= 1
     assert s.stats.fallbacks >= 1
-    assert any(e["kind"] == "degraded" for e in s.stats.events)
+    assert any(e.kind == "degraded" for e in s.stats.events)
     assert s.stats.to_dict()["degraded"] is True
 
 
@@ -203,7 +203,7 @@ def test_injected_alloc_exhaustion_is_backpressure(smoke):
     s, res = _run(model, params, prompts, budgets, faults=fi)
     assert _tokens(res) == _tokens(clean)  # delayed, never dropped
     assert all(r.state == RequestState.COMPLETED for r in res.values())
-    assert any(e["kind"] == "alloc_exhausted" for e in s.stats.events)
+    assert any(e.kind == "alloc_exhausted" for e in s.stats.events)
 
 
 # --------------------------------------------------------- stragglers
@@ -227,7 +227,7 @@ def test_straggler_detected_and_hook_can_hold_admission(smoke):
     res = {r.request_id: r for r in s.drain()}
     assert s.stats.stragglers == 1 and len(hooks) == 1
     assert hooks[0].ratio > 3.0  # the 10s spike vs a ms-scale EWMA
-    assert any(e["kind"] == "straggler" for e in s.stats.events)
+    assert any(e.kind == "straggler" for e in s.stats.events)
     # the stream still completes; the hold only delays admission
     assert all(r.state == RequestState.COMPLETED for r in res.values())
     assert s._admission_hold == 0

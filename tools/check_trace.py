@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Validate the observability artifacts the bench job emits.
+
+    python tools/check_trace.py --trace trace.json --metrics metrics.prom \
+        --require serve_ttft_seconds --require serve_events_total
+
+Checks, in order:
+
+* ``--trace`` parses as Chrome trace-event JSON (``{"traceEvents":
+  [...]}``), every event carries the fields its phase requires, and the
+  complete ("X") spans on each ``(pid, tid)`` track nest properly — a
+  span that partially overlaps its neighbour means the emitting code
+  recorded bad timestamps and Perfetto will render garbage.
+* Async ``"b"``/``"e"`` request-track events pair up per ``(cat, id,
+  name)`` with begin before end.
+* ``--metrics`` parses line-by-line as Prometheus text exposition
+  format (``# HELP``/``# TYPE`` comments, ``name{labels} value``
+  samples, histogram ``_bucket`` series with cumulative counts).
+* Every ``--require NAME`` (a sanitised metric-family prefix, e.g.
+  ``serve_exec_cache_hits_total``) appears in the metrics file.
+
+Exit status 0 = all good; 1 = any violation, with one line per problem.
+CI runs this as a hard gate after the quick benches, so a change that
+breaks span nesting or the exposition grammar fails the build, not the
+first person who opens the trace.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Any, Dict, List, Tuple
+
+# Two adjacent spans produced from one rounded clock reading can differ
+# by one rounding ULP of the microsecond timestamps; containment is
+# checked with this epsilon (µs).
+EPS_US = 0.01
+
+_REQUIRED_BY_PHASE = {
+    "X": ("name", "ts", "dur", "pid", "tid"),
+    "i": ("name", "ts", "pid", "tid"),
+    "b": ("name", "ts", "pid", "tid", "id"),
+    "e": ("name", "ts", "pid", "tid", "id"),
+    "M": ("name", "pid"),
+}
+
+# Prometheus text grammar, one line at a time.
+_HELP_RE = re.compile(r"^# HELP [a-zA-Z_:][a-zA-Z0-9_:]* .*$")
+_TYPE_RE = re.compile(
+    r"^# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* (counter|gauge|histogram|summary|"
+    r"untyped)$")
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?P<labels>\{[^{}]*\})?"
+    r" (?P<value>[^ ]+)( [0-9]+)?$")
+
+
+def check_trace(path: str) -> List[str]:
+    """Problems found in a Chrome trace-event JSON file (empty = ok)."""
+    problems: List[str] = []
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: cannot parse as JSON: {e}"]
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return [f"{path}: not a trace-event document "
+                f"(missing 'traceEvents')"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return [f"{path}: 'traceEvents' is not a list"]
+
+    spans: Dict[Tuple[Any, Any], List[Tuple[float, float, str]]] = {}
+    opens: Dict[Tuple[Any, Any, Any], List[float]] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event[{i}]: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _REQUIRED_BY_PHASE:
+            problems.append(f"event[{i}]: unknown phase {ph!r}")
+            continue
+        missing = [k for k in _REQUIRED_BY_PHASE[ph] if k not in ev]
+        if missing:
+            problems.append(
+                f"event[{i}] ({ph} {ev.get('name')!r}): missing {missing}")
+            continue
+        if ph == "X":
+            if ev["dur"] < 0:
+                problems.append(
+                    f"event[{i}] ({ev['name']!r}): negative dur")
+                continue
+            spans.setdefault((ev["pid"], ev["tid"]), []).append(
+                (float(ev["ts"]), float(ev["ts"]) + float(ev["dur"]),
+                 str(ev["name"])))
+        elif ph == "b":
+            opens.setdefault(
+                (ev.get("cat"), ev["id"], ev["name"]), []).append(
+                float(ev["ts"]))
+        elif ph == "e":
+            key = (ev.get("cat"), ev["id"], ev["name"])
+            starts = opens.get(key)
+            if not starts:
+                problems.append(
+                    f"event[{i}]: async end without begin for id="
+                    f"{ev['id']!r} name={ev['name']!r}")
+                continue
+            t0 = starts.pop()
+            if float(ev["ts"]) + EPS_US < t0:
+                problems.append(
+                    f"event[{i}]: async end before begin for id="
+                    f"{ev['id']!r} name={ev['name']!r}")
+
+    for key, starts in opens.items():
+        if starts:
+            problems.append(
+                f"async begin without end: cat={key[0]!r} id={key[1]!r} "
+                f"name={key[2]!r} ({len(starts)} open)")
+
+    # Span nesting per track: sweep spans sorted by (start, -end); each
+    # span must either nest inside the enclosing open span or start at
+    # or after its end.  Partial overlap is the failure mode.
+    for (pid, tid), track in spans.items():
+        track.sort(key=lambda s: (s[0], -s[1]))
+        stack: List[Tuple[float, float, str]] = []
+        for start, end, name in track:
+            while stack and start >= stack[-1][1] - EPS_US:
+                stack.pop()
+            if stack and end > stack[-1][1] + EPS_US:
+                outer = stack[-1]
+                problems.append(
+                    f"pid={pid} tid={tid}: span {name!r} "
+                    f"[{start}, {end}] partially overlaps "
+                    f"{outer[2]!r} [{outer[0]}, {outer[1]}]")
+                continue
+            stack.append((start, end, name))
+    return problems
+
+
+def check_metrics(path: str, require: List[str]) -> List[str]:
+    """Problems found in a Prometheus text exposition file."""
+    problems: List[str] = []
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            text = f.read()
+    except OSError as e:
+        return [f"{path}: cannot read: {e}"]
+
+    seen: set = set()
+    for n, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP"):
+            if not _HELP_RE.match(line):
+                problems.append(f"{path}:{n}: malformed HELP line")
+            continue
+        if line.startswith("# TYPE"):
+            if not _TYPE_RE.match(line):
+                problems.append(f"{path}:{n}: malformed TYPE line")
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            problems.append(f"{path}:{n}: malformed sample: {line!r}")
+            continue
+        try:
+            float(m.group("value").replace("+Inf", "inf")
+                  .replace("-Inf", "-inf").replace("NaN", "nan"))
+        except ValueError:
+            problems.append(
+                f"{path}:{n}: non-numeric value {m.group('value')!r}")
+        seen.add(m.group("name"))
+
+    for family in require:
+        if not any(s == family or s.startswith(family + "_")
+                   for s in seen):
+            problems.append(
+                f"{path}: required metric family {family!r} absent")
+    return problems
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit status."""
+    ap = argparse.ArgumentParser(
+        prog="python tools/check_trace.py",
+        description="validate trace.json / metrics.prom artifacts")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event JSON to validate")
+    ap.add_argument("--metrics", default=None,
+                    help="Prometheus text exposition file to validate")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="FAMILY",
+                    help="metric family (sanitised name, e.g. "
+                         "serve_ttft_seconds) that must be present; "
+                         "repeatable")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to check: pass --trace and/or --metrics")
+
+    problems: List[str] = []
+    if args.trace:
+        problems += check_trace(args.trace)
+    if args.metrics:
+        problems += check_metrics(args.metrics, args.require)
+
+    if problems:
+        for p in problems:
+            print(f"FAIL {p}")
+        print(f"{len(problems)} problem(s)")
+        return 1
+    checked = [p for p in (args.trace, args.metrics) if p]
+    print(f"ok: {', '.join(checked)} valid"
+          + (f"; {len(args.require)} required families present"
+             if args.require else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
