@@ -1,0 +1,75 @@
+"""ECM tier benchmark: one-array-computation batch scoring of the full
+216-layer x 720-permutation synthetic design space, its speedup over the
+trace-driven exact path, and the disagreement-triggered exact
+consultation rate of the three-tier sweep (docs/TUNING.md)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, is_quick, record_metric
+from repro.core import cost_model as cm
+from repro.core import ecm, tuner
+from repro.configs.squeezenet_layers import synthetic_design_space
+
+
+def bench_batch_scoring():
+    """Score L x 720 permutations in one ecm_predict call (cold tables
+    included) and extrapolate tracesim's per-candidate cost over the
+    same space.  ISSUE acceptance: >= 10x over the forkserver path."""
+    layers = synthetic_design_space()
+    if is_quick():
+        layers = layers[:24]
+    t0 = time.perf_counter()
+    res = ecm.ecm_predict(layers, tuner.ALL_PERMS)
+    dt = time.perf_counter() - t0
+    evals = len(layers) * len(tuner.ALL_PERMS)
+    assert np.all(np.isfinite(res.cycles))
+    eps = evals / max(dt, 1e-12)
+    record_metric("ecm.evals_per_sec", eps)
+
+    # Exact-tier reference: a handful of truncated traces through the
+    # same pool path exact_sweep uses, scaled to the full space.
+    n_ref = 2 if is_quick() else 4
+    sample = [tuner.ALL_PERMS[i] for i in (0, 246, 400, 650)][:n_ref]
+    max_iters = 20_000 if is_quick() else 100_000
+    t0 = time.perf_counter()
+    tuner.exact_sweep(layers[0], sample, workers=n_ref,
+                      max_iters=max_iters)
+    per_trace = (time.perf_counter() - t0) / n_ref
+    speedup = (per_trace * evals) / max(dt, 1e-12)
+    record_metric("ecm.vs_tracesim_speedup", speedup)
+    emit("ecm.batch_scoring", dt / evals * 1e6,
+         f"evals={evals};evals_per_sec={eps:.0f};"
+         f"vs_tracesim={speedup:.0f}x")
+    # Margin is astronomical (traces cost ms-s, ECM costs us/candidate),
+    # so the acceptance bar holds even in quick mode.
+    assert speedup >= 10, f"ECM batch scoring only {speedup:.1f}x"
+
+
+def bench_consultation_rate():
+    """Three-tier sweep over Table 4.2-style layers: tracesim must be
+    consulted for < 20% of candidates (ISSUE acceptance)."""
+    layers = synthetic_design_space()
+    layers = layers[:6] if is_quick() else layers[:36]
+    t0 = time.perf_counter()
+    res = tuner.ecm_sweep(layers, top_k=8, tolerance=0.25,
+                          max_exact_iters=50_000, workers=4)
+    dt = time.perf_counter() - t0
+    rate = res.consultation_rate
+    record_metric("ecm.exact_consultation_rate", rate)
+    n_exact = sum(1 for t in res.tiers if t == "exact")
+    emit("ecm.sweep", dt / len(layers) * 1e6,
+         f"layers={len(layers)};exact_layers={n_exact};"
+         f"consultation_rate={rate:.4f}")
+    if not is_quick():
+        assert rate < 0.20, f"exact consultation rate {rate:.3f}"
+
+
+def run():
+    """Entry point for benchmarks.run."""
+    bench_batch_scoring()
+    bench_consultation_rate()
+
+
+if __name__ == "__main__":
+    run()

@@ -81,10 +81,16 @@ POLICIES: Dict[str, Policy] = {
                                           abs_band=0.02),
     "faults.shed_rate": Policy("higher", gate=False),
     "faults.events_recorded": Policy("higher", gate=False),
+    # ECM tier: the consultation rate is deterministic for a fixed
+    # layer set + tolerance, so it gets a tight absolute band (the
+    # ISSUE 9 acceptance holds it under 0.20 in the bench itself)
+    "ecm.exact_consultation_rate": Policy("lower", abs_band=0.05),
     # machine-absolute: tracked for the trajectory, never gated
     "sweep.cold_wall_time_s": Policy("lower", gate=False),
     "sweep.scalar_wall_time_s": Policy("lower", gate=False),
     "sweep.evals_per_sec": Policy("higher", gate=False),
+    "ecm.evals_per_sec": Policy("higher", gate=False),
+    "ecm.vs_tracesim_speedup": Policy("higher", gate=False),
     "registry.warm_wall_time_s": Policy("lower", gate=False),
     "serve.queue_p50_ms": Policy("lower", gate=False),
     "serve.queue_p95_ms": Policy("lower", gate=False),

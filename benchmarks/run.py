@@ -39,7 +39,7 @@ import traceback
 MODULES = [
     "loop_orders", "top_candidates", "cache_hierarchy", "parallel",
     "combinations", "sparsity", "tile_swap", "adaptive", "validation",
-    "roofline", "registry", "serve", "faults",
+    "roofline", "registry", "serve", "faults", "ecm",
 ]
 
 

@@ -61,6 +61,8 @@ def microprofile(candidates: Sequence[S],
 
 @dataclasses.dataclass
 class _Slot(Generic[S]):
+    """Per-shape probing state: candidates, timings, committed winner."""
+
     candidates: List[S]
     samples: Dict[int, List[float]]
     committed: Optional[S] = None
@@ -93,6 +95,7 @@ class AdaptiveSelector(Generic[S]):
                  steadiness_threshold: float = 0.2,
                  max_extra_probes: int = 2,
                  registry: Optional[reg.TuningRegistry] = None):
+        """Configure probe counts, the steadiness gate, and write-back."""
         self.probes = probes_per_candidate
         self.threshold = steadiness_threshold
         self.max_extra = max_extra_probes
@@ -101,6 +104,7 @@ class AdaptiveSelector(Generic[S]):
 
     def register(self, key: str, candidates: Sequence[S],
                  registry_key: Optional[reg.RegistryKey] = None) -> None:
+        """Create a slot for ``key`` with its candidate list (idempotent)."""
         if key not in self._slots:
             self._slots[key] = _Slot(list(candidates),
                                      {i: [] for i in
@@ -151,6 +155,7 @@ class AdaptiveSelector(Generic[S]):
                       registry_key=registry_key)
 
     def propose(self, key: str) -> S:
+        """Schedule to use this step: committed winner or next probe."""
         slot = self._slots[key]
         if slot.committed is not None:
             return slot.committed
@@ -173,6 +178,7 @@ class AdaptiveSelector(Generic[S]):
         return idx, slot.candidates[idx]
 
     def observe(self, key: str, dt: float) -> None:
+        """Feed a step time to the candidate last proposed for ``key``."""
         slot = self._slots[key]
         self.observe_at(key, slot.next_candidate, dt)
 
@@ -202,6 +208,7 @@ class AdaptiveSelector(Generic[S]):
 
     def _commit(self, slot: _Slot, index: int,
                 median_s: Optional[float]) -> None:
+        """Freeze the winner and write the measurement to the registry."""
         slot.committed = slot.candidates[index]
         if (self.registry is not None and slot.registry_key is not None
                 and median_s is not None):
@@ -210,6 +217,7 @@ class AdaptiveSelector(Generic[S]):
                 median_s)
 
     def committed(self, key: str) -> Optional[S]:
+        """The committed schedule for ``key`` (None while probing)."""
         slot = self._slots.get(key)
         return slot.committed if slot else None
 
@@ -221,6 +229,7 @@ class AdaptiveSelector(Generic[S]):
         :meth:`observe_at`, so the number consumers (e.g. the serving
         batcher) see matches what was committed to the registry."""
         def med(v):
+            """Median with the first sample dropped as jit warm-up."""
             return float(np.median(v[1:] if len(v) > 2 else v))
 
         slot = self._slots.get(key)
@@ -237,6 +246,7 @@ class AdaptiveSelector(Generic[S]):
         return min(medians) if medians else None
 
     def report(self) -> Dict[str, Dict]:
+        """Per-slot committed winner + raw samples (for diagnostics)."""
         out = {}
         for key, slot in self._slots.items():
             out[key] = {

@@ -50,15 +50,23 @@ EVAL_COUNTS: Dict[str, int] = {"simulate": 0, "conv_schedule_cost": 0,
                                "flash_attention_schedule_cost_batch": 0,
                                "decode_attention_schedule_cost_batch": 0,
                                "ssm_scan_schedule_cost_batch": 0,
-                               "sparse_conv_schedule_cost_batch": 0}
+                               "sparse_conv_schedule_cost_batch": 0,
+                               # tier-2 analytic ECM (one per (layer, perm)
+                               # scored) and tier-3 exact traces (one per
+                               # in-process simulate_trace call) — the
+                               # consultation-rate tests count these.
+                               "ecm_batch": 0,
+                               "tracesim": 0}
 
 
 def reset_eval_counts() -> None:
+    """Zero every counter in :data:`EVAL_COUNTS` (test/bench setup)."""
     for k in EVAL_COUNTS:
         EVAL_COUNTS[k] = 0
 
 
 def total_evals() -> int:
+    """Total cost-model queries so far, summed across every entry point."""
     return sum(EVAL_COUNTS.values())
 
 
@@ -68,6 +76,8 @@ def total_evals() -> int:
 
 @dataclasses.dataclass(frozen=True)
 class CacheLevel:
+    """One level of the modelled cache hierarchy (thesis Table 2.1 row)."""
+
     name: str
     size_bytes: int
     block_bytes: int
@@ -89,6 +99,7 @@ class MachineModel:
     atomic_cost: float = 10.0  # extra cycles per atomic out[] update (§3.4)
 
     def with_caches(self, l1_kb: int, l2_kb: int) -> "MachineModel":
+        """This machine with resized L1/L2 (the §5.1 hierarchy knob)."""
         lv = (CacheLevel("L1", l1_kb * 1024, 32, 3),
               CacheLevel("L2", l2_kb * 1024, 32, 10, associativity=8))
         return dataclasses.replace(self, levels=lv)
@@ -104,6 +115,8 @@ HIERARCHIES: Dict[str, MachineModel] = {
 
 @dataclasses.dataclass(frozen=True)
 class CacheSimResult:
+    """One permutation's predicted cycles, accesses and per-level misses."""
+
     cycles: float
     accesses: float
     misses: Dict[str, float]          # per level name
@@ -276,6 +289,7 @@ class BatchSimResult:
     working_set_blocks: Dict[str, float]    # level -> capacity in blocks
 
     def __len__(self) -> int:
+        """Number of scored candidates (rows of ``perms``)."""
         return self.perms.shape[0]
 
     def result(self, i: int) -> CacheSimResult:
@@ -289,6 +303,7 @@ class BatchSimResult:
             working_set_blocks=dict(self.working_set_blocks))
 
     def best(self) -> Tuple[Tuple[int, ...], CacheSimResult]:
+        """(argmin permutation, its scalar result) over the batch."""
         i = int(np.argmin(self.cycles))
         return tuple(int(x) for x in self.perms[i]), self.result(i)
 
@@ -434,6 +449,8 @@ class TPUSpec:
 
 @dataclasses.dataclass(frozen=True)
 class KernelCost:
+    """Roofline terms for one TPU kernel schedule candidate."""
+
     flops: float
     hbm_bytes: float
     vmem_peak: float
@@ -444,22 +461,27 @@ class KernelCost:
 
     @property
     def time_s(self) -> float:
+        """Predicted wall time: max(compute, memory) + DMA overheads."""
         return max(self.compute_s, self.memory_s) + self.overhead_s
 
     @property
     def bound(self) -> str:
+        """Which roofline arm dominates ("compute" or "memory")."""
         return "compute" if self.compute_s >= self.memory_s else "memory"
 
     @property
     def arithmetic_intensity(self) -> float:
+        """Useful FLOPs per HBM byte moved."""
         return self.flops / max(self.hbm_bytes, 1.0)
 
 
 def _ceil_div(a: int, b: int) -> int:
+    """Ceiling integer division."""
     return -(-a // b)
 
 
 def _round_up(a: int, m: int) -> int:
+    """Round ``a`` up to the next multiple of ``m``."""
     return _ceil_div(a, m) * m
 
 
@@ -502,11 +524,13 @@ def conv_schedule_cost(layer: ConvLayer,
     blk_elems = {"out": out_blk, "wgt": wgt_blk, "img": img_blk}
 
     def fetches(op: str) -> float:
-        # Distinct blocks = product of trips over dependent axes; each
-        # distinct block refetched once per combination of *outer*
-        # non-dependent axes (it is evicted between revisits unless no
-        # dependent axis iterates in between — i.e. non-dependent axes that
-        # are innermost contiguous cause residency).
+        """Block fetches of one operand over the whole grid.
+
+        Distinct blocks = product of trips over dependent axes; each
+        distinct block refetched once per combination of *outer*
+        non-dependent axes (it is evicted between revisits unless no
+        dependent axis iterates in between — i.e. non-dependent axes that
+        are innermost contiguous cause residency)."""
         distinct = math.prod(trips[a] for a in dep[op])
         refetch = 1.0
         # walk outermost -> innermost; a non-dependent axis multiplies
@@ -574,6 +598,7 @@ def matmul_schedule_cost(m: int, n: int, k: int,
     blk = {"A": bm * bk, "B": bk * bn, "C": bm * bn}
 
     def fetches(op: str) -> float:
+        """Block fetches of one operand (same walk as the conv scorer)."""
         distinct = math.prod(trips[a] for a in dep[op])
         refetch = 1.0
         for i, a in enumerate(order):
@@ -636,6 +661,7 @@ class BatchKernelCost:
 
     @property
     def time_s(self) -> np.ndarray:
+        """Predicted wall time per candidate (same formula as scalar)."""
         return np.maximum(self.compute_s, self.memory_s) + self.overhead_s
 
     def cost(self, idx) -> KernelCost:
@@ -702,6 +728,7 @@ def conv_schedule_cost_batch(layer: ConvLayer,
            "img": frozenset({"ic", "y", "x"})}
 
     def fetches(op: str) -> np.ndarray:                   # [O, B]
+        """Vectorized operand block fetches over the [orders, blocks] grid."""
         distinct = np.ones(n_b, dtype=np.int64)
         for a in sorted(dep[op]):
             distinct = distinct * trips[a]
@@ -767,6 +794,7 @@ def matmul_schedule_cost_batch(m: int, n: int, k: int,
     blk = {"A": bm * bk, "B": bk * bn, "C": bm * bn}
 
     def fetches(op: str) -> np.ndarray:                   # [O, B]
+        """Vectorized operand block fetches over the [orders, blocks] grid."""
         distinct = np.ones(n_b, dtype=np.int64)
         for a in sorted(dep[op]):
             distinct = distinct * trips[a]

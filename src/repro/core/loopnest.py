@@ -52,6 +52,7 @@ class ConvLayer:
     elem_bytes: int = 4   # thesis uses 32-bit words
 
     def trips(self) -> Dict[str, int]:
+        """Trip count per loop name (the six extents, keyed by LOOPS)."""
         return {"oc": self.oc, "ic": self.ic, "y": self.h, "x": self.w,
                 "ky": self.kh, "kx": self.kw}
 
@@ -62,9 +63,11 @@ class ConvLayer:
 
     @property
     def macs(self) -> int:
+        """Multiply-accumulates: one per inner-body iteration."""
         return self.iterations
 
     def array_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        """Logical shapes of the three arrays (out / wgt / img)."""
         return {
             "out": (self.oc, self.h, self.w),
             "wgt": (self.oc, self.ic, self.kh, self.kw),
@@ -72,6 +75,7 @@ class ConvLayer:
         }
 
     def array_bytes(self) -> Dict[str, int]:
+        """Total bytes of each array at ``elem_bytes`` per element."""
         return {k: math.prod(v) * self.elem_bytes
                 for k, v in self.array_shapes().items()}
 
@@ -140,6 +144,7 @@ def footprint_blocks(layer: ConvLayer, array: str, inner: frozenset,
 
 
 def _array_shape(layer: ConvLayer, array: str) -> Tuple[int, ...]:
+    """Shape of one named array of ``layer``."""
     return ConvLayer.array_shapes(layer)[array]
 
 
@@ -156,6 +161,7 @@ def perm_loops(perm: Sequence[int]) -> Tuple[str, ...]:
 
 
 def loops_to_perm(names: Sequence[str]) -> Tuple[int, ...]:
+    """Inverse of :func:`perm_loops`: loop names -> loop-id permutation."""
     return tuple(LOOP_INDEX[n] for n in names)
 
 
@@ -202,6 +208,25 @@ def footprint_block_table(layer: ConvLayer, block_bytes: int,
         array: np.array([
             footprint_blocks(layer, array, subset_loops(m), block_bytes)
             for m in range(SUBSET_COUNT)], dtype=np.float64)
+        for array in ARRAY_DIMS
+    }
+
+
+def stacked_footprint_tables(layers: Sequence[ConvLayer],
+                             block_bytes: int) -> Dict[str, np.ndarray]:
+    """Per-layer 64-subset footprint tables stacked into one
+    ``tab[array][l, mask]`` float64 ``[L, 64]`` array.
+
+    This is the multi-layer gather surface the ECM tier scores whole
+    design spaces through: one ``tab[array][:, masks]`` fancy-index turns
+    the 216-layer x 720-permutation Table 4.2/4.3 spaces into a single
+    ``[L, P, 7]`` array computation with no per-layer Python loop at
+    scoring time.  Rows reuse the per-layer
+    :func:`footprint_block_table` lru_cache, so repeated sweeps over
+    overlapping layer sets pay the combinatorics once."""
+    return {
+        array: np.stack([footprint_block_table(layer, block_bytes)[array]
+                         for layer in layers])
         for array in ARRAY_DIMS
     }
 

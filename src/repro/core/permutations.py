@@ -69,6 +69,7 @@ def sjt_permutations(n: int) -> Tuple[Perm, ...]:
 
 @lru_cache(maxsize=8)
 def _sjt_index_table(n: int) -> Dict[Perm, int]:
+    """Permutation -> position along the SJT Hamiltonian path."""
     return {p: i for i, p in enumerate(sjt_permutations(n))}
 
 
@@ -91,6 +92,7 @@ def lex_index(perm: Sequence[int]) -> int:
 
 
 def lex_permutations(n: int) -> List[Perm]:
+    """All n! permutations of range(n) in lexicographic order."""
     return list(itertools.permutations(range(n)))
 
 
@@ -124,6 +126,7 @@ def perm_apply(perm: Sequence[int], items: Sequence) -> Tuple:
 
 
 def perm_inverse(perm: Sequence[int]) -> Perm:
+    """The inverse permutation: perm_apply(inv, perm_apply(perm, x)) == x."""
     inv = [0] * len(perm)
     for i, v in enumerate(perm):
         inv[v] = i

@@ -57,10 +57,12 @@ def canonical_json(obj: Any) -> str:
 
 @functools.lru_cache(maxsize=1024)
 def _fingerprint_dataclass(obj: Any) -> str:
-    # Machine descriptors (MachineModel, TPUSpec) are frozen dataclasses,
-    # so their digest is memoizable per-process: every cached_* call needs
-    # the machine fingerprint, and without this cache it re-serialised and
-    # re-hashed the same object on every lookup.
+    """Memoized digest of a frozen dataclass.
+
+    Machine descriptors (MachineModel, TPUSpec) are frozen dataclasses,
+    so their digest is memoizable per-process: every cached_* call needs
+    the machine fingerprint, and without this cache it re-serialised and
+    re-hashed the same object on every lookup."""
     payload = {"__class__": type(obj).__name__,
                **dataclasses.asdict(obj)}
     digest = hashlib.sha256(canonical_json(payload).encode("utf-8"))
@@ -101,6 +103,8 @@ def runtime_fingerprint() -> str:
 
 @dataclasses.dataclass(frozen=True)
 class RegistryKey:
+    """The four-part key every record is stored under (see module doc)."""
+
     kind: str
     problem: Tuple[Tuple[str, Any], ...]   # hashable canonical form
     machine: str                           # fingerprint
@@ -109,22 +113,27 @@ class RegistryKey:
     @staticmethod
     def make(kind: str, problem: Dict[str, Any], machine: str,
              cost_model: str) -> "RegistryKey":
+        """Build a key from a problem dict (canonicalised to a tuple)."""
         return RegistryKey(kind, tuple(sorted(problem.items())), machine,
                            cost_model)
 
     def problem_dict(self) -> Dict[str, Any]:
+        """The problem signature back as a plain dict."""
         return dict(self.problem)
 
     def to_dict(self) -> Dict[str, Any]:
+        """JSON-serialisable form (inverse of :meth:`from_dict`)."""
         return {"kind": self.kind, "problem": self.problem_dict(),
                 "machine": self.machine, "cost_model": self.cost_model}
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "RegistryKey":
+        """Rebuild a key from its :meth:`to_dict` form."""
         return RegistryKey.make(d["kind"], d["problem"], d["machine"],
                                 d["cost_model"])
 
     def canonical(self) -> str:
+        """Canonical-JSON identity string (the in-memory map key)."""
         return canonical_json(self.to_dict())
 
 
@@ -144,12 +153,14 @@ class TuningRecord:
     source: str = "offline"
 
     def to_dict(self) -> Dict[str, Any]:
+        """JSON-serialisable form, schema-stamped (one JSONL line)."""
         return {"schema": SCHEMA_VERSION, "key": self.key.to_dict(),
                 "value": self.value, "measured": self.measured,
                 "source": self.source}
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "TuningRecord":
+        """Rebuild a record from its :meth:`to_dict` form."""
         return TuningRecord(key=RegistryKey.from_dict(d["key"]),
                             value=d["value"],
                             measured=d.get("measured"),
@@ -161,6 +172,7 @@ class TuningRecord:
 # ---------------------------------------------------------------------------
 
 def schedule_to_dict(sched: Any) -> Dict[str, Any]:
+    """Serialise any schedule dataclass to a typed JSON dict."""
     from repro.core import schedule as sch
     if isinstance(sched, sch.ConvSchedule):
         return {"type": "conv", "grid_order": list(sched.grid_order),
@@ -184,6 +196,7 @@ def schedule_to_dict(sched: Any) -> Dict[str, Any]:
 
 
 def schedule_from_dict(d: Dict[str, Any]) -> Any:
+    """Inverse of :func:`schedule_to_dict` (raises on unknown types)."""
     from repro.core import schedule as sch
     if d["type"] == "conv":
         return sch.ConvSchedule.make(d["grid_order"], d["block"])
@@ -203,12 +216,42 @@ def schedule_from_dict(d: Dict[str, Any]) -> Any:
 
 
 def cost_to_dict(cost: Any) -> Dict[str, Any]:
+    """Serialise a predicted-cost dataclass to a plain dict."""
     return dataclasses.asdict(cost)
 
 
 def cost_from_dict(d: Dict[str, Any]) -> Any:
+    """Inverse of :func:`cost_to_dict` (KernelCost fields)."""
     from repro.core.cost_model import KernelCost
     return KernelCost(**d)
+
+
+# ---------------------------------------------------------------------------
+# Cost-model tier provenance
+# ---------------------------------------------------------------------------
+
+# Which cost-model tier produced each record kind (docs/TUNING.md): the
+# roofline-style analytic models, the ECM layer-condition tier, or the
+# exact trace-driven simulator.  A record may override this statically
+# derived tier with an explicit ``value["tier"]`` (e.g. an ``ecm_sweep``
+# winner that an exact consultation decided).
+KIND_TIERS: Dict[str, str] = {
+    "conv_sweep": "roofline",
+    "conv_schedule": "roofline",
+    "matmul_schedule": "roofline",
+    "flash_attention_schedule": "roofline",
+    "decode_attention_schedule": "roofline",
+    "ssm_scan_schedule": "roofline",
+    "sparse_conv_schedule": "roofline",
+    "ecm_sweep": "ecm",
+    "ecm_correction": "ecm",
+    "exact_sweep": "exact",
+}
+
+
+def kind_tier(kind: str) -> str:
+    """Default cost-model tier for a record kind ("other" if unknown)."""
+    return KIND_TIERS.get(kind, "other")
 
 
 # ---------------------------------------------------------------------------
@@ -226,6 +269,7 @@ class TuningRegistry:
     """
 
     def __init__(self, path: Optional[str] = None, autoload: bool = True):
+        """Open (and by default replay) the registry at ``path``."""
         self.path = path
         self._records: Dict[str, TuningRecord] = {}
         self._lock = threading.Lock()
@@ -236,6 +280,7 @@ class TuningRegistry:
     # -- construction ---------------------------------------------------
     @staticmethod
     def default_path() -> str:
+        """Registry path: env ``REPRO_TUNE_REGISTRY`` or the user cache."""
         return os.environ.get(_ENV_PATH, _DEFAULT_PATH)
 
     @classmethod
@@ -284,6 +329,7 @@ class TuningRegistry:
         return n
 
     def _append_line(self, rec: TuningRecord) -> None:
+        """Durably append one canonical JSONL line for ``rec``."""
         if not self.path:
             return
         os.makedirs(os.path.dirname(os.path.abspath(self.path)),
@@ -344,9 +390,11 @@ class TuningRegistry:
 
     # -- access ---------------------------------------------------------
     def get(self, key: RegistryKey) -> Optional[TuningRecord]:
+        """The record stored under ``key``, or None."""
         return self._records.get(key.canonical())
 
     def put(self, record: TuningRecord, persist: bool = True) -> None:
+        """Store (and by default append-persist) one record."""
         with self._lock:
             self._records[record.key.canonical()] = record
         if persist:
@@ -418,26 +466,37 @@ class TuningRegistry:
         return sorted({rec.key.machine for rec in self._records.values()})
 
     def keys(self) -> List[RegistryKey]:
+        """All keys, sorted canonically."""
         return [rec.key for _, rec in sorted(self._records.items())]
 
     def records(self) -> Iterator[TuningRecord]:
+        """All records in canonical key order."""
         for _, rec in sorted(self._records.items()):
             yield rec
 
     def __len__(self) -> int:
+        """Number of distinct keys held."""
         return len(self._records)
 
     def __contains__(self, key: RegistryKey) -> bool:
+        """Whether ``key`` has a stored record."""
         return key.canonical() in self._records
 
     def stats(self) -> Dict[str, Any]:
+        """Summary counts: total, per kind, per cost-model tier (an
+        explicit ``value["tier"]`` wins over the kind's default), and
+        how many records carry run-time measurements."""
         by_kind: Dict[str, int] = {}
+        by_tier: Dict[str, int] = {}
         measured = 0
         for rec in self._records.values():
             by_kind[rec.key.kind] = by_kind.get(rec.key.kind, 0) + 1
+            tier = rec.value.get("tier") or kind_tier(rec.key.kind)
+            by_tier[tier] = by_tier.get(tier, 0) + 1
             measured += rec.measured is not None
         return {"records": len(self._records), "by_kind": by_kind,
-                "measured": measured, "path": self.path,
+                "by_tier": by_tier, "measured": measured,
+                "path": self.path,
                 "malformed_lines": self.malformed_lines}
 
 
@@ -450,6 +509,7 @@ def prefer_record(a: TuningRecord, b: TuningRecord) -> TuningRecord:
     fewer, and canonical bytes break the remaining ties (so the winner
     does not depend on which registry was merged into which)."""
     def rank(rec: TuningRecord):
+        """Sort key of the conflict rule (higher wins)."""
         return (rec.measured is not None,
                 len(rec.value.get("schedules", ())),
                 len(rec.value.get("costs", ())))
@@ -472,10 +532,12 @@ def prefer_record(a: TuningRecord, b: TuningRecord) -> TuningRecord:
 # fingerprint has not been seen for N days.
 
 def machine_seen_path(registry_path: str) -> str:
+    """Path of the last-seen sidecar next to a registry file."""
     return registry_path + ".machines.json"
 
 
 def load_machine_seen(registry_path: str) -> Dict[str, str]:
+    """Read the sidecar: machine fingerprint -> last-seen ISO date."""
     path = machine_seen_path(registry_path)
     if not os.path.exists(path):
         return {}
@@ -488,6 +550,7 @@ def load_machine_seen(registry_path: str) -> Dict[str, str]:
 
 
 def save_machine_seen(registry_path: str, seen: Dict[str, str]) -> None:
+    """Write the sidecar (sorted, pretty) next to the registry."""
     path = machine_seen_path(registry_path)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "w", encoding="utf-8") as f:
@@ -500,11 +563,13 @@ def save_machine_seen(registry_path: str, seen: Dict[str, str]) -> None:
 # ---------------------------------------------------------------------------
 
 def conv_problem(layer: Any, elem_bytes: int = 2) -> Dict[str, Any]:
+    """Canonical problem dict of a ConvLayer shape."""
     return {"oc": layer.oc, "ic": layer.ic, "h": layer.h, "w": layer.w,
             "kh": layer.kh, "kw": layer.kw, "elem_bytes": elem_bytes}
 
 
 def conv_layer_from_problem(problem: Dict[str, Any]) -> Any:
+    """Rebuild the ConvLayer a :func:`conv_problem` dict describes."""
     from repro.core.loopnest import ConvLayer
     return ConvLayer(problem["oc"], problem["ic"], problem["h"],
                      problem["w"], problem["kh"], problem["kw"])
@@ -512,6 +577,7 @@ def conv_layer_from_problem(problem: Dict[str, Any]) -> Any:
 
 def conv_schedule_key(layer: Any, spec: Any, elem_bytes: int = 2,
                       ) -> RegistryKey:
+    """Key for a TPU conv-schedule ranking."""
     from repro.core.cost_model import COST_MODEL_VERSION
     return RegistryKey.make("conv_schedule", conv_problem(layer, elem_bytes),
                             fingerprint(spec), COST_MODEL_VERSION)
@@ -519,6 +585,7 @@ def conv_schedule_key(layer: Any, spec: Any, elem_bytes: int = 2,
 
 def matmul_schedule_key(m: int, n: int, k: int, spec: Any,
                         elem_bytes: int = 2) -> RegistryKey:
+    """Key for a TPU matmul-schedule ranking."""
     from repro.core.cost_model import COST_MODEL_VERSION
     problem = {"m": m, "n": n, "k": k, "elem_bytes": elem_bytes}
     return RegistryKey.make("matmul_schedule", problem, fingerprint(spec),
@@ -527,6 +594,7 @@ def matmul_schedule_key(m: int, n: int, k: int, spec: Any,
 
 def conv_sweep_key(layer: Any, machine: Any, threads: int = 1,
                    ) -> RegistryKey:
+    """Key for a tier-1 720-permutation sweep signature."""
     from repro.core.cost_model import COST_MODEL_VERSION
     problem = conv_problem(layer, layer.elem_bytes)
     problem["threads"] = threads
@@ -534,9 +602,36 @@ def conv_sweep_key(layer: Any, machine: Any, threads: int = 1,
                             COST_MODEL_VERSION)
 
 
+def ecm_sweep_key(layer: Any, machine: Any, threads: int = 1,
+                  ) -> RegistryKey:
+    """Key for a tier-2 ECM sweep winner (docs/TUNING.md).
+
+    Versioned under :data:`repro.core.ecm.ECM_MODEL_VERSION`, not the
+    tier-1 ``COST_MODEL_VERSION``: the two models evolve (and must
+    invalidate their cached predictions) independently."""
+    from repro.core.ecm import ECM_MODEL_VERSION
+    problem = conv_problem(layer, layer.elem_bytes)
+    problem["threads"] = threads
+    return RegistryKey.make("ecm_sweep", problem, fingerprint(machine),
+                            ECM_MODEL_VERSION)
+
+
+def ecm_correction_key(machine: Any) -> RegistryKey:
+    """Key for the machine's learned ECM correction coefficients.
+
+    The "problem" is the correction's functional form (feature count +
+    family), so a refit for the same machine overwrites in place while a
+    feature change lands under a fresh key."""
+    from repro.core.ecm import ECM_MODEL_VERSION, N_FEATURES
+    problem = {"features": N_FEATURES, "form": "log-linear"}
+    return RegistryKey.make("ecm_correction", problem,
+                            fingerprint(machine), ECM_MODEL_VERSION)
+
+
 def flash_attention_schedule_key(b: int, hq: int, hkv: int, s: int,
                                  d: int, spec: Any, causal: bool = True,
                                  elem_bytes: int = 2) -> RegistryKey:
+    """Key for a flash-attention schedule ranking."""
     from repro.core.cost_model import COST_MODEL_VERSION
     problem = {"b": b, "hq": hq, "hkv": hkv, "s": s, "d": d,
                "causal": bool(causal), "elem_bytes": elem_bytes}
@@ -547,6 +642,7 @@ def flash_attention_schedule_key(b: int, hq: int, hkv: int, s: int,
 def decode_attention_schedule_key(b: int, hq: int, hkv: int, s: int,
                                   d: int, spec: Any, elem_bytes: int = 2,
                                   ) -> RegistryKey:
+    """Key for a decode-attention schedule ranking."""
     from repro.core.cost_model import COST_MODEL_VERSION
     problem = {"b": b, "hq": hq, "hkv": hkv, "s": s, "d": d,
                "elem_bytes": elem_bytes}
@@ -556,6 +652,7 @@ def decode_attention_schedule_key(b: int, hq: int, hkv: int, s: int,
 
 def ssm_scan_schedule_key(bt: int, seq: int, di: int, n: int, spec: Any,
                           elem_bytes: int = 2) -> RegistryKey:
+    """Key for an SSM-scan schedule ranking."""
     from repro.core.cost_model import COST_MODEL_VERSION
     problem = {"bt": bt, "seq": seq, "di": di, "n": n,
                "elem_bytes": elem_bytes}
@@ -572,6 +669,7 @@ def quantize_density(density: float, steps: int = 16) -> int:
 
 def sparse_conv_schedule_key(layer: Any, density: float, spec: Any,
                              elem_bytes: int = 2) -> RegistryKey:
+    """Key for a block-sparse conv schedule ranking."""
     from repro.core.cost_model import COST_MODEL_VERSION
     problem = conv_problem(layer, elem_bytes)
     problem["density_16"] = quantize_density(density)
@@ -585,6 +683,7 @@ __all__ = [
     "schedule_to_dict", "schedule_from_dict", "cost_to_dict",
     "cost_from_dict", "conv_problem", "conv_layer_from_problem",
     "conv_schedule_key", "matmul_schedule_key", "conv_sweep_key",
+    "ecm_sweep_key", "ecm_correction_key", "KIND_TIERS", "kind_tier",
     "flash_attention_schedule_key", "decode_attention_schedule_key",
     "ssm_scan_schedule_key", "sparse_conv_schedule_key",
     "quantize_density", "machine_seen_path", "load_machine_seen",

@@ -16,23 +16,29 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class ConvSchedule:
+    """Conv2d launch point: grid order + block shapes (Table 4.1 axes)."""
+
     grid_order: Tuple[str, ...]           # permutation of (oc, ic, y, x)
     block: Tuple[Tuple[str, int], ...]    # hashable block dict
 
     def block_dict(self) -> Dict[str, int]:
+        """Block shapes as a plain dict (the kernels' kwarg form)."""
         return dict(self.block)
 
     @staticmethod
     def make(grid_order, block: Dict[str, int]) -> "ConvSchedule":
+        """Build from a plain block dict (canonicalised for hashing)."""
         return ConvSchedule(tuple(grid_order),
                             tuple(sorted(block.items())))
 
     def to_dict(self) -> Dict:
+        """Registry-serialisable form (see registry.schedule_to_dict)."""
         from repro.core import registry
         return registry.schedule_to_dict(self)
 
     def run(self, img: jnp.ndarray, wgt: jnp.ndarray, *,
             interpret: bool = True) -> jnp.ndarray:
+        """Execute the conv2d kernel with this schedule's parameters."""
         from repro.kernels.conv2d import conv2d
         return conv2d(img, wgt, block=self.block_dict(),
                       grid_order=self.grid_order, interpret=interpret)
@@ -40,25 +46,31 @@ class ConvSchedule:
 
 @dataclasses.dataclass(frozen=True)
 class MatmulSchedule:
+    """Matmul launch point: grid order, blocks, and the VMEM split."""
+
     grid_order: Tuple[str, ...]           # permutation of (m, n, k)
     block: Tuple[Tuple[str, int], ...]
     resident_rhs: bool = False            # the "tiles-for-L2" switch
 
     def block_dict(self) -> Dict[str, int]:
+        """Block shapes as a plain dict (the kernels' kwarg form)."""
         return dict(self.block)
 
     @staticmethod
     def make(grid_order, block: Dict[str, int],
              resident_rhs: bool = False) -> "MatmulSchedule":
+        """Build from a plain block dict (canonicalised for hashing)."""
         return MatmulSchedule(tuple(grid_order),
                               tuple(sorted(block.items())), resident_rhs)
 
     def to_dict(self) -> Dict:
+        """Registry-serialisable form (see registry.schedule_to_dict)."""
         from repro.core import registry
         return registry.schedule_to_dict(self)
 
     def run(self, a: jnp.ndarray, b: jnp.ndarray, *,
             interpret: bool = True) -> jnp.ndarray:
+        """Execute the matmul kernel with this schedule's parameters."""
         from repro.kernels.matmul import matmul
         return matmul(a, b, block=self.block_dict(),
                       grid_order=self.grid_order,
@@ -72,12 +84,14 @@ class FlashAttentionSchedule:
     block_kv: int
 
     def to_dict(self) -> Dict:
+        """Registry-serialisable form (see registry.schedule_to_dict)."""
         from repro.core import registry
         return registry.schedule_to_dict(self)
 
     def run(self, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             causal: bool = True, window: Optional[int] = None,
             interpret: bool = True) -> jnp.ndarray:
+        """Execute flash attention with this schedule's block sizes."""
         from repro.kernels.flash_attention import flash_attention
         return flash_attention(q, k, v, block_q=self.block_q,
                                block_kv=self.block_kv, causal=causal,
@@ -90,11 +104,13 @@ class DecodeAttentionSchedule:
     block_kv: int
 
     def to_dict(self) -> Dict:
+        """Registry-serialisable form (see registry.schedule_to_dict)."""
         from repro.core import registry
         return registry.schedule_to_dict(self)
 
     def run(self, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pos, *, interpret: bool = True) -> jnp.ndarray:
+        """Execute one decode attention step with this schedule."""
         from repro.kernels.decode_attention import decode_attention
         return decode_attention(q, k, v, pos, block_kv=self.block_kv,
                                 interpret=interpret)
@@ -106,11 +122,13 @@ class SSMScanSchedule:
     block_d: int
 
     def to_dict(self) -> Dict:
+        """Registry-serialisable form (see registry.schedule_to_dict)."""
         from repro.core import registry
         return registry.schedule_to_dict(self)
 
     def run(self, x, dt, b, c, a, d, *,
             interpret: bool = True) -> jnp.ndarray:
+        """Execute the fused selective scan with this schedule."""
         from repro.kernels.ssm_scan import ssm_scan
         return ssm_scan(x, dt, b, c, a, d, block_d=self.block_d,
                         interpret=interpret)
@@ -142,9 +160,11 @@ class ScheduleBundle:
         return getattr(self, kind, None)
 
     def replace(self, **kw) -> "ScheduleBundle":
+        """A copy with the given per-family slots swapped out."""
         return dataclasses.replace(self, **kw)
 
     def to_dict(self) -> Dict:
+        """Per-family serialisable dict (None for unset slots)."""
         from repro.core import registry
         return {f.name: (registry.schedule_to_dict(getattr(self, f.name))
                          if getattr(self, f.name) is not None else None)
@@ -157,18 +177,22 @@ class SparseConvSchedule:
     block: Tuple[Tuple[str, int], ...]    # hashable {"oc","ic"} dict
 
     def block_dict(self) -> Dict[str, int]:
+        """Block shapes as a plain dict (the kernels' kwarg form)."""
         return dict(self.block)
 
     @staticmethod
     def make(block: Dict[str, int]) -> "SparseConvSchedule":
+        """Build from a plain block dict (canonicalised for hashing)."""
         return SparseConvSchedule(tuple(sorted(block.items())))
 
     def to_dict(self) -> Dict:
+        """Registry-serialisable form (see registry.schedule_to_dict)."""
         from repro.core import registry
         return registry.schedule_to_dict(self)
 
     def run(self, img: jnp.ndarray, wgt: jnp.ndarray, *,
             sparsity=None, interpret: bool = True) -> jnp.ndarray:
+        """Execute the block-sparse conv kernel with this schedule."""
         from repro.kernels.sparse_conv import sparse_conv2d
         return sparse_conv2d(img, wgt, block=self.block_dict(),
                              sparsity=sparsity, interpret=interpret)

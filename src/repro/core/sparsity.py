@@ -22,6 +22,8 @@ from repro.core.loopnest import ConvLayer
 
 @dataclasses.dataclass(frozen=True)
 class SparsityDecision:
+    """Dense-vs-sparse verdict with both predicted times (thesis §6.4)."""
+
     algorithm: str              # "dense" | "sparse"
     dense_time_s: float
     sparse_time_s: float
@@ -46,6 +48,7 @@ def choose_algorithm(layer: ConvLayer, block: Dict[str, int],
                      spec: cm.TPUSpec = cm.TPUSpec(),
                      grid_order=("oc", "y", "x", "ic"),
                      elem_bytes: int = 2) -> SparsityDecision:
+    """Pick dense vs block-sparse conv by predicted time at ``density``."""
     dense = cm.conv_schedule_cost(
         layer, grid_order,
         {"oc": block["oc"], "ic": block["ic"],

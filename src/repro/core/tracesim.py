@@ -22,7 +22,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import loopnest as ln
-from repro.core.cost_model import CacheLevel, MachineModel
+from repro.core.cost_model import EVAL_COUNTS, CacheLevel, MachineModel
 from repro.core.loopnest import ConvLayer, LOOPS
 
 
@@ -145,6 +145,8 @@ def simulate_set_associative(blocks: np.ndarray, n_sets: int, ways: int,
 
 @dataclasses.dataclass(frozen=True)
 class TraceSimResult:
+    """One exact simulation: cycles, accesses, per-level misses, iterations."""
+
     cycles: float
     accesses: int
     misses: Dict[str, int]
@@ -158,6 +160,7 @@ def simulate_trace(layer: ConvLayer, perm: Sequence[int],
                    l2_policy: str = "random") -> TraceSimResult:
     """End-to-end: generate trace, run it through L1 then L2, produce the
     thesis' cycle estimate (1 cycle/instr + per-level hit latencies)."""
+    EVAL_COUNTS["tracesim"] += 1
     trace, iters = generate_trace(layer, perm, partial_sums, max_iters)
     l1, l2 = machine.levels[0], machine.levels[1]
 

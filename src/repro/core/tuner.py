@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import cost_model as cm
+from repro.core import ecm as ecm_model
 from repro.core import permutations as perms
 from repro.core import registry as reg
 from repro.core.loopnest import ConvLayer
@@ -92,6 +93,7 @@ def batch_perm_scorer(layer: ConvLayer,
     """A many-perms-at-once cycles scorer for the permutohedron searches:
     ``scorer(perms) -> float64 [len(perms)]``."""
     def score_batch(candidates: Sequence[Perm]) -> np.ndarray:
+        """Cycles for each candidate via one simulate_batch call."""
         return cm.simulate_batch(layer, list(candidates), machine,
                                  threads).cycles
     return score_batch
@@ -116,6 +118,8 @@ def speedup_matrix(sweeps: Sequence[SweepResult],
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
+    """A static permutation candidate with its design-space speedups."""
+
     perm: Perm
     avg_speedup: float
     worst_speedup: float
@@ -196,6 +200,7 @@ def sample_size_for_confidence(sweeps: Sequence[SweepResult],
 def good_permutation_counts(sweeps: Sequence[SweepResult],
                             good_threshold: float = 0.9,
                             metric: str = "cycles") -> np.ndarray:
+    """Per-layer count of >=threshold permutations (Fig 5.4 input)."""
     S = speedup_matrix(sweeps, metric)
     return (S >= good_threshold).sum(axis=1)
 
@@ -208,6 +213,7 @@ def _score_perms(score: Optional[Callable[[Perm], float]],
                  score_batch: Optional[Callable[[Sequence[Perm]],
                                                 np.ndarray]],
                  candidates: Sequence[Perm]) -> List[float]:
+    """Score candidates via the batch scorer when given, else per-perm."""
     if not candidates:
         return []
     if score_batch is not None:
@@ -274,6 +280,7 @@ def bfs_search(score: Optional[Callable[[Perm], float]], start: Perm,
 # ---------------------------------------------------------------------------
 
 def _divisors(n: int, cap: int = 1 << 30) -> List[int]:
+    """All divisors of ``n`` up to ``cap``."""
     return [d for d in range(1, min(n, cap) + 1) if n % d == 0]
 
 
@@ -425,8 +432,11 @@ def _tune_counter(name: str):
 
 
 def _ranked_to_value(ranked) -> Dict:
+    """Registry value for a ranked (schedule, cost) list, stamped with
+    the cost-model tier that produced it (roofline-style analytic)."""
     return {"schedules": [reg.schedule_to_dict(s) for s, _ in ranked],
-            "costs": [reg.cost_to_dict(c) for _, c in ranked]}
+            "costs": [reg.cost_to_dict(c) for _, c in ranked],
+            "tier": "roofline"}
 
 
 def _has_ranked(value: Dict, top_k: int) -> bool:
@@ -443,6 +453,7 @@ def _has_ranked(value: Dict, top_k: int) -> bool:
 
 
 def _value_to_ranked(value: Dict, top_k: Optional[int] = None):
+    """Rebuild the ranked (schedule, cost) list from a registry value."""
     pairs = zip(value["schedules"][:top_k], value["costs"][:top_k])
     return [(reg.schedule_from_dict(s), reg.cost_from_dict(c))
             for s, c in pairs]
@@ -635,21 +646,121 @@ def _map_parallel(fn, jobs: Sequence, workers: Optional[int]) -> List:
 
 
 def _exact_sweep_worker(args) -> float:
-    layer, perm, machine = args
+    """Pool target: one trace-driven simulation, returns cycles."""
+    layer, perm, machine, max_iters = args
     from repro.core import tracesim
-    return float(tracesim.simulate_trace(layer, perm, machine).cycles)
+    return float(tracesim.simulate_trace(layer, perm, machine,
+                                         max_iters=max_iters).cycles)
 
 
 def exact_sweep(layer: ConvLayer,
                 sample: Sequence[Perm],
                 machine: cm.MachineModel = cm.MachineModel(),
-                workers: Optional[int] = None) -> np.ndarray:
+                workers: Optional[int] = None,
+                max_iters: Optional[int] = None) -> np.ndarray:
     """Exact trace-driven cycles for a permutation sample — the validator
     for the analytic batch engine, and the one remaining consumer of the
     worker pool (a trace costs seconds; the analytic batch costs
-    microseconds)."""
-    jobs = [(layer, tuple(p), machine) for p in sample]
+    microseconds).  ``max_iters`` truncates each trace like the thesis'
+    instruction caps (§4.3.2), keeping consultations on big layers
+    bounded."""
+    jobs = [(layer, tuple(p), machine, max_iters) for p in sample]
     return np.asarray(_map_parallel(_exact_sweep_worker, jobs, workers))
+
+
+@dataclasses.dataclass
+class ECMSweepResult:
+    """Outcome of the three-tier sweep over ``L`` layers x ``P`` perms.
+
+    ``tiers[l]`` records which tier decided layer ``l``'s winner:
+    ``"ecm"`` when roofline and ECM agreed within tolerance on the
+    short-list, ``"exact"`` when tracesim arbitrated.  ``consulted[l]``
+    holds the permutation indices actually sent to tracesim (empty when
+    the exact tier never fired).
+    """
+
+    layers: Tuple[ConvLayer, ...]
+    perms: Tuple[Perm, ...]
+    roofline_cycles: np.ndarray            # float64 [L, P]
+    ecm_cycles: np.ndarray                 # float64 [L, P] (corrected)
+    best: List[Tuple[Perm, float]]         # per-layer winner + cycles
+    tiers: List[str]                       # per-layer "ecm" | "exact"
+    consulted: List[Tuple[int, ...]]       # per-layer tracesim'd indices
+
+    @property
+    def consultation_rate(self) -> float:
+        """Fraction of the L x P space that reached the exact tier."""
+        total = len(self.layers) * len(self.perms)
+        return sum(len(c) for c in self.consulted) / max(total, 1)
+
+
+def ecm_sweep(layers: Sequence[ConvLayer],
+              machine: cm.MachineModel = cm.MachineModel(),
+              threads: int = 1,
+              perms_subset: Optional[Sequence[Perm]] = None,
+              top_k: int = 8,
+              tolerance: float = 0.25,
+              correction: Optional[ecm_model.ECMCorrection] = None,
+              max_exact_iters: Optional[int] = None,
+              workers: Optional[int] = None,
+              consult: bool = True,
+              registry: Optional[reg.TuningRegistry] = None,
+              ) -> ECMSweepResult:
+    """The three-tier sweep (docs/TUNING.md): roofline + ECM everywhere,
+    tracesim only where they disagree.
+
+    Tier 1 scores each layer's permutation space with the batch roofline
+    engine; tier 2 scores all layers at once with the ECM
+    layer-condition model (plus the machine's learned ``correction`` if
+    given).  Per layer, the union of both tiers' top-``top_k``
+    short-lists is compared: if the models' relative disagreement on any
+    short-listed candidate exceeds ``tolerance``, the exact trace
+    simulator arbitrates *those candidates only* (``max_exact_iters``
+    bounds each trace); otherwise the ECM argmin wins without a single
+    trace.  With a ``registry``, each layer's winner is persisted under
+    ``ecm_sweep_key`` with its deciding tier stamped in the value.
+    """
+    layers = tuple(layers)
+    perm_tuple: Tuple[Perm, ...] = (ALL_PERMS if perms_subset is None
+                                    else tuple(tuple(p) for p
+                                               in perms_subset))
+    roof = np.stack([cm.simulate_batch(l, perm_tuple, machine,
+                                       threads).cycles for l in layers])
+    ecm_res = ecm_model.ecm_predict(layers, perm_tuple, machine, threads)
+    ecm_cyc = ecm_model.apply_correction(ecm_res, correction)
+
+    best: List[Tuple[Perm, float]] = []
+    tiers: List[str] = []
+    consulted: List[Tuple[int, ...]] = []
+    for li, layer in enumerate(layers):
+        short_r = np.argsort(roof[li], kind="stable")[:top_k]
+        short_e = np.argsort(ecm_cyc[li], kind="stable")[:top_k]
+        cand = np.union1d(short_r, short_e)
+        rel = np.abs(ecm_cyc[li, cand] - roof[li, cand]) \
+            / np.maximum(roof[li, cand], 1e-12)
+        if consult and float(rel.max()) > tolerance:
+            exact = exact_sweep(layer, [perm_tuple[i] for i in cand],
+                                machine, workers, max_exact_iters)
+            win = int(cand[int(np.argmin(exact))])
+            best.append((perm_tuple[win], float(exact.min())))
+            tiers.append("exact")
+            consulted.append(tuple(int(i) for i in cand))
+        else:
+            win = int(np.argmin(ecm_cyc[li]))
+            best.append((perm_tuple[win], float(ecm_cyc[li, win])))
+            tiers.append("ecm")
+            consulted.append(())
+        if registry is not None:
+            registry.put(reg.TuningRecord(
+                key=reg.ecm_sweep_key(layer, machine, threads),
+                value={"perm": list(best[-1][0]),
+                       "cycles": best[-1][1],
+                       "tier": tiers[-1],
+                       "consulted": len(consulted[-1])},
+                source="offline"))
+    return ECMSweepResult(layers=layers, perms=perm_tuple,
+                          roofline_cycles=roof, ecm_cycles=ecm_cyc,
+                          best=best, tiers=tiers, consulted=consulted)
 
 
 def parallel_sweep(layers: Sequence[ConvLayer],

@@ -162,6 +162,7 @@ class _Resolved:
     candidates: List[Any]
     predicted: List[float]            # cost-model time_s per candidate
     observations: int = 0
+    tier: str = "roofline"            # cost-model tier that ranked them
 
 
 class DispatchService:
@@ -258,6 +259,12 @@ class DispatchService:
             ranked = fam.tune(problem, self.spec, elem_bytes, self.top_k,
                               self.registry)
         self._c_resolves.inc()
+        # Tier provenance: which cost-model tier produced the ranking we
+        # are about to serve (docs/TUNING.md).  The stored record carries
+        # an explicit stamp; kind-derived default otherwise.
+        rec = self.registry.get(rkey)
+        tier = ((rec.value.get("tier") if rec is not None else None)
+                or reg.kind_tier(rkey.kind))
         with self._lock:
             if skey not in self._slots:
                 self.selector.register_ranked(skey, ranked,
@@ -266,7 +273,8 @@ class DispatchService:
                     kind=kind, problem=problem, elem_bytes=elem_bytes,
                     registry_key=rkey,
                     candidates=[s for s, _ in ranked],
-                    predicted=[float(c.time_s) for _, c in ranked])
+                    predicted=[float(c.time_s) for _, c in ranked],
+                    tier=tier if tier != "other" else "roofline")
             self._key_cache[ckey] = skey
         return skey
 
@@ -436,6 +444,7 @@ class DispatchService:
                 "kind": slot.kind,
                 "problem": dict(slot.problem),
                 "machine": slot.registry_key.machine,
+                "tier": slot.tier,
                 "n_candidates": len(slot.candidates),
                 "observations": slot.observations,
                 "committed": (reg.schedule_to_dict(committed)

@@ -87,8 +87,64 @@ def cmd_inspect(args) -> int:
 
 
 def cmd_stats(args) -> int:
+    """Summary counts, including per-cost-model-tier provenance
+    (``by_tier``: roofline / ecm / exact / other)."""
     registry = _registry(args)
     print(json.dumps(registry.stats(), indent=2, sort_keys=True))
+    return 0
+
+
+def cmd_ecm(args) -> int:
+    """Run (and inspect) the three-tier ECM sweep over a layer set.
+
+    Tier 1 (batch roofline) and tier 2 (ECM layer conditions) score the
+    whole space; the exact trace simulator is consulted only for layers
+    where the two disagree beyond ``--tolerance`` on the union of their
+    top-``--top-k`` short-lists — and then only on those candidates.
+    Winners are persisted under ``ecm_sweep`` keys with their deciding
+    tier stamped, so ``stats`` shows the provenance split."""
+    import time
+    from repro.core.loopnest import LOOPS
+
+    registry = _registry(args)
+    layers = _load_layers(args.config)
+    if args.limit:
+        layers = layers[:args.limit]
+    if args.hierarchy:
+        try:
+            machine = cm.HIERARCHIES[args.hierarchy]
+        except KeyError:
+            raise SystemExit(f"unknown --hierarchy {args.hierarchy!r}; "
+                             f"choose from {sorted(cm.HIERARCHIES)}")
+    else:
+        machine = cm.MachineModel()
+
+    from repro.core import ecm as ecm_model
+    correction = ecm_model.load_correction(machine, registry)
+    cm.reset_eval_counts()
+    t0 = time.perf_counter()
+    result = tuner.ecm_sweep(
+        layers, machine, threads=args.threads, top_k=args.top_k,
+        tolerance=args.tolerance, correction=correction,
+        max_exact_iters=args.max_exact_iters, workers=args.workers,
+        consult=not args.no_exact, registry=registry)
+    dt = time.perf_counter() - t0
+
+    for layer, (perm, cycles), tier, cons in zip(
+            result.layers, result.best, result.tiers, result.consulted):
+        order = ">".join(LOOPS[i] for i in perm)
+        extra = f" (exact on {len(cons)} candidates)" if cons else ""
+        print(f"{_fmt_problem(reg.conv_problem(layer, layer.elem_bytes)):48s}"
+              f" best={order:17s} tier={tier:5s}"
+              f" cycles={cycles:.3e}{extra}")
+    n_scored = len(result.layers) * len(result.perms)
+    n_traced = sum(len(c) for c in result.consulted)
+    print(f"-- {len(result.layers)} layers x {len(result.perms)} perms "
+          f"scored in {dt:.3f}s; exact consultation rate "
+          f"{result.consultation_rate:.2%} "
+          f"({n_traced} traces / {n_scored} candidates)"
+          + (f"; correction={correction.n_samples}-sample fit"
+             if correction else "; no learned correction in registry"))
     return 0
 
 
@@ -383,8 +439,37 @@ def build_parser() -> argparse.ArgumentParser:
     i.add_argument("--kind", default=None)
     i.set_defaults(fn=cmd_inspect)
 
-    s = sub.add_parser("stats", help="summary counts")
+    s = sub.add_parser("stats", help="summary counts (records, by_kind, "
+                                     "by_tier, measured)")
     s.set_defaults(fn=cmd_stats)
+
+    ec = sub.add_parser("ecm", help="three-tier sweep: roofline + ECM "
+                                    "everywhere, tracesim only on "
+                                    "disagreement")
+    ec.add_argument("--config", default="squeezenet_layers",
+                    help="layer set: " + ", ".join(sorted(CONFIG_SETS)))
+    ec.add_argument("--hierarchy", default=None,
+                    help="one of the §5.1 cache hierarchies "
+                         "(16K/128K, 32K/512K, 64K/960K); default: "
+                         "thesis Table 2.1 machine")
+    ec.add_argument("--limit", type=int, default=None,
+                    help="only the first N layers of the set")
+    ec.add_argument("--threads", type=int, default=1,
+                    help="modelled thread count")
+    ec.add_argument("--top-k", type=int, default=8,
+                    help="short-list size per tier for the "
+                         "disagreement check")
+    ec.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative roofline-vs-ECM disagreement that "
+                         "triggers exact consultation")
+    ec.add_argument("--max-exact-iters", type=int, default=200_000,
+                    help="trace-length cap per exact consultation "
+                         "(thesis §4.3.2-style instruction cap)")
+    ec.add_argument("--workers", type=int, default=None,
+                    help="process-pool width for exact consultations")
+    ec.add_argument("--no-exact", action="store_true",
+                    help="never consult tracesim (pure two-tier mode)")
+    ec.set_defaults(fn=cmd_ecm)
 
     e = sub.add_parser("export", help="dump as a JSON array")
     e.add_argument("--out", default="-", help="output path ('-' = stdout)")

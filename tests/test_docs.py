@@ -14,6 +14,7 @@ REPO = Path(__file__).resolve().parent.parent
 D1_PATHS = sorted(
     list((REPO / "src/repro/serving").glob("*.py"))
     + list((REPO / "src/repro/obs").glob("*.py"))
+    + list((REPO / "src/repro/core").glob("*.py"))
     + [REPO / "src/repro/runtime/dispatch.py"]
 )
 
@@ -22,6 +23,7 @@ DOC_FILES = [
     REPO / "docs/ARCHITECTURE.md",
     REPO / "docs/SERVING.md",
     REPO / "docs/OBSERVABILITY.md",
+    REPO / "docs/TUNING.md",
 ]
 
 
@@ -89,7 +91,8 @@ def test_markdown_links():
 
 
 def test_readme_links_docs():
-    """The README points readers at both deep-dive documents."""
+    """The README points readers at the deep-dive documents."""
     text = (REPO / "README.md").read_text()
     assert "docs/ARCHITECTURE.md" in text
     assert "docs/SERVING.md" in text
+    assert "docs/TUNING.md" in text

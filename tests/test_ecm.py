@@ -1,0 +1,219 @@
+"""ECM tier tests: layer-condition batch scoring, the learned
+correction, disagreement-triggered exact consultation, and tier
+provenance in the registry and dispatch report (ISSUE 9 satellites)."""
+import json
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import ecm, tracesim, tuner
+from repro.core import registry as reg
+from repro.core.loopnest import ConvLayer
+
+SMALL = cm.MachineModel(levels=(cm.CacheLevel("L1", 2048, 32, 3),
+                                cm.CacheLevel("L2", 8192, 32, 10,
+                                              associativity=8)))
+
+L1 = ConvLayer(8, 8, 10, 10, 3, 3)
+L2 = ConvLayer(4, 16, 6, 6, 1, 1)
+
+
+def _fresh_registry(tmp_path):
+    return reg.TuningRegistry(path=tmp_path / "reg.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# Batched scoring
+
+
+def test_stacked_batch_matches_single_layer_calls():
+    both = ecm.ecm_predict([L1, L2], tuner.ALL_PERMS, SMALL)
+    for i, layer in enumerate((L1, L2)):
+        solo = ecm.ecm_predict([layer], tuner.ALL_PERMS, SMALL)
+        np.testing.assert_allclose(both.cycles[i], solo.cycles[0])
+        np.testing.assert_allclose(both.accesses[i], solo.accesses[0])
+        for lvl in both.misses:
+            np.testing.assert_allclose(both.misses[lvl][i],
+                                       solo.misses[lvl][0])
+
+
+def test_ecm_counts_batch_evals():
+    cm.reset_eval_counts()
+    ecm.ecm_predict([L1, L2], tuner.ALL_PERMS, SMALL)
+    assert cm.EVAL_COUNTS["ecm_batch"] == 2 * len(tuner.ALL_PERMS)
+    assert cm.EVAL_COUNTS["tracesim"] == 0
+
+
+def test_ecm_cycles_finite_and_positive():
+    res = ecm.ecm_predict([L1, L2], tuner.ALL_PERMS, SMALL)
+    assert np.all(np.isfinite(res.cycles))
+    assert np.all(res.cycles > 0)
+
+
+def test_ecm_tracks_roofline_ranking():
+    """ECM is coarser than tier 1 but must agree on the broad ordering:
+    the ECM argmin should land in roofline's better half."""
+    res = ecm.ecm_predict([L1], tuner.ALL_PERMS, SMALL)
+    roof = cm.simulate_batch(L1, tuner.ALL_PERMS, SMALL).cycles
+    rank = np.argsort(np.argsort(roof))
+    assert rank[int(res.argmin()[0])] < len(tuner.ALL_PERMS) // 2
+
+
+# ---------------------------------------------------------------------------
+# Tier agreement on the thesis §5.1 hierarchies
+
+
+@pytest.mark.parametrize("name", sorted(cm.HIERARCHIES))
+def test_ecm_sweep_matches_exact_argmin_within_tolerance(name):
+    """On each §5.1 cache hierarchy the tier-2 winner must be exact-best
+    (or within 10% of it) over a representative permutation sample."""
+    machine = cm.HIERARCHIES[name]
+    layer = ConvLayer(16, 16, 14, 14, 3, 3)
+    rng = random.Random(17)
+    sample = sorted(rng.sample(range(len(tuner.ALL_PERMS)), 14))
+    perms = tuple(tuner.ALL_PERMS[i] for i in sample)
+    res = tuner.ecm_sweep([layer], machine=machine, perms_subset=perms,
+                          top_k=4, tolerance=0.25, max_exact_iters=120_000,
+                          workers=2)
+    exact = np.array([tracesim.simulate_trace(layer, p, machine,
+                                              max_iters=120_000).cycles
+                      for p in perms], dtype=np.float64)
+    win_perm, _ = res.best[0]
+    win_exact = exact[perms.index(win_perm)]
+    assert win_exact <= 1.10 * exact.min()
+
+
+# ---------------------------------------------------------------------------
+# Learned correction
+
+
+def _residual_samples(result, n=8, seed=3):
+    rng = random.Random(seed)
+    idx = rng.sample(range(result.cycles.shape[1]), n)
+    out = []
+    for li in range(result.cycles.shape[0]):
+        for pi in idx:
+            perm = tuple(int(v) for v in result.perms[pi])
+            exact = tracesim.simulate_trace(result.layers[li], perm,
+                                            result.machine,
+                                            max_iters=60_000).cycles
+            out.append((li, pi, float(exact)))
+    return out
+
+
+def test_correction_fit_is_byte_deterministic():
+    res = ecm.ecm_predict([L1, L2], tuner.ALL_PERMS, SMALL)
+    samples = _residual_samples(res, n=6)
+    fit_a = ecm.fit_correction(res, samples)
+    shuffled = list(samples)
+    random.Random(99).shuffle(shuffled)
+    fit_b = ecm.fit_correction(res, shuffled)
+    assert json.dumps(fit_a.to_dict(), sort_keys=True) == \
+        json.dumps(fit_b.to_dict(), sort_keys=True)
+    assert fit_a.version == ecm.ECM_MODEL_VERSION
+    assert fit_a.n_samples == len(samples)
+
+
+def test_correction_reduces_residual_error():
+    res = ecm.ecm_predict([L1, L2], tuner.ALL_PERMS, SMALL)
+    samples = _residual_samples(res, n=8)
+    fit = ecm.fit_correction(res, samples)
+    corrected = ecm.apply_correction(res, fit)
+    raw_err, cor_err = [], []
+    for li, pi, exact in samples:
+        raw_err.append(abs(res.cycles[li, pi] - exact) / exact)
+        cor_err.append(abs(corrected[li, pi] - exact) / exact)
+    assert np.mean(cor_err) <= np.mean(raw_err)
+
+
+def test_apply_correction_none_is_identity():
+    res = ecm.ecm_predict([L1], tuner.ALL_PERMS, SMALL)
+    np.testing.assert_array_equal(ecm.apply_correction(res, None),
+                                  res.cycles)
+
+
+def test_correction_registry_roundtrip_and_version_gate(tmp_path):
+    registry = _fresh_registry(tmp_path)
+    res = ecm.ecm_predict([L1], tuner.ALL_PERMS, SMALL)
+    fit = ecm.fit_correction(res, _residual_samples(res, n=5))
+    ecm.save_correction(fit, SMALL, registry=registry)
+    loaded = ecm.load_correction(SMALL, registry=registry)
+    assert loaded == fit
+    stale = ecm.ECMCorrection(version="ecm-0", coef=fit.coef,
+                              n_samples=fit.n_samples)
+    ecm.save_correction(stale, SMALL, registry=registry)
+    assert ecm.load_correction(SMALL, registry=registry) is None
+
+
+# ---------------------------------------------------------------------------
+# Disagreement-triggered exact consultation
+
+
+def test_exact_consultation_only_on_disagreement():
+    cm.reset_eval_counts()
+    res = tuner.ecm_sweep([L1, L2], machine=SMALL, top_k=4,
+                          tolerance=1e9, max_exact_iters=40_000)
+    assert res.tiers == ["ecm", "ecm"]
+    assert res.consultation_rate == 0.0
+    assert cm.EVAL_COUNTS["tracesim"] == 0
+
+
+def test_exact_consultation_touches_only_top_k_union():
+    cm.reset_eval_counts()
+    top_k = 4
+    # workers=1 keeps the traces in-process so EVAL_COUNTS is observable
+    res = tuner.ecm_sweep([L1, L2], machine=SMALL, top_k=top_k,
+                          tolerance=0.0, max_exact_iters=40_000, workers=1)
+    assert res.tiers == ["exact", "exact"]
+    traced = sum(len(c) for c in res.consulted)
+    assert cm.EVAL_COUNTS["tracesim"] == traced
+    for li, cand in enumerate(res.consulted):
+        short_r = set(np.argsort(res.roofline_cycles[li],
+                                 kind="stable")[:top_k].tolist())
+        short_e = set(np.argsort(res.ecm_cycles[li],
+                                 kind="stable")[:top_k].tolist())
+        assert set(cand) <= short_r | short_e
+        assert 0 < len(cand) <= 2 * top_k
+    assert res.consultation_rate < 0.2
+
+
+def test_no_exact_flag_disables_consultation():
+    cm.reset_eval_counts()
+    res = tuner.ecm_sweep([L1], machine=SMALL, tolerance=0.0,
+                          consult=False)
+    assert res.tiers == ["ecm"]
+    assert cm.EVAL_COUNTS["tracesim"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Tier provenance
+
+
+def test_ecm_sweep_stamps_tier_in_registry(tmp_path):
+    registry = _fresh_registry(tmp_path)
+    tuner.ecm_sweep([L1, L2], machine=SMALL, tolerance=0.0,
+                    max_exact_iters=40_000, workers=2, registry=registry)
+    stats = registry.stats()
+    assert stats["by_kind"] == {"ecm_sweep": 2}
+    assert stats["by_tier"] == {"exact": 2}
+    for rec in registry.records():
+        assert rec.value["tier"] == "exact"
+        assert rec.key.cost_model == ecm.ECM_MODEL_VERSION
+
+
+def test_kind_tier_defaults():
+    assert reg.kind_tier("conv_schedule") == "roofline"
+    assert reg.kind_tier("ecm_sweep") == "ecm"
+    assert reg.kind_tier("exact_sweep") == "exact"
+    assert reg.kind_tier("mystery") == "other"
+
+
+def test_dispatch_report_carries_tier(tmp_path):
+    from repro.runtime.dispatch import DispatchService
+    svc = DispatchService(_fresh_registry(tmp_path))
+    svc.resolve("conv2d", {"oc": 4, "ic": 4, "h": 6, "w": 6,
+                           "kh": 1, "kw": 1})
+    rep = svc.report()
+    assert rep and all(e["tier"] == "roofline" for e in rep.values())
