@@ -17,7 +17,15 @@ Headline numbers land in ``BENCH_faults.json``:
                                 tail request carries a 0-second
                                 deadline (report-only: documents the
                                 shedding path, deterministic by design)
+  faults.drift_detect_steps     decode steps between a sustained
+                                injected slowdown landing on a
+                                committed dispatch slot and the
+                                watchdog's drift alarm (report-only:
+                                bounded by patience, asserted here)
   faults.events_recorded        SessionStats events across scenarios
+
+The drift scenario also writes flight-recorder postmortem bundles
+under ``artifacts/postmortems/`` (the CI chaos job uploads them).
 """
 from __future__ import annotations
 
@@ -123,15 +131,56 @@ def run() -> None:
     shed_rate = shed / n
     assert shed == n - head, f"expected {n - head} shed, got {shed}"
 
+    # ---- drift detection: a sustained injected slowdown on a committed
+    # dispatch slot must trip the performance watchdog within a bounded
+    # number of steps, reopen the slot, and leave a postmortem bundle.
+    import os
+
+    from repro.core import registry as reg
+    from repro.obs import FlightRecorder, PerformanceWatchdog
+    from repro.runtime.dispatch import DispatchService
+
+    svc = DispatchService(reg.TuningRegistry(None), top_k=1,
+                          probes_per_candidate=1, max_extra_probes=0)
+    wd = PerformanceWatchdog(ratio=3.0, patience=2, cooldown=2,
+                             retune_budget=2)
+    rec = FlightRecorder(out_dir=os.path.join("artifacts",
+                                              "postmortems"))
+    fault_start, fault_len = 3, 4
+    fi = FaultInjector([parse_fault(f"slow@{fault_start}x{fault_len}")])
+    # Homogeneous full batch: one decode slot for the whole stream, so
+    # the injected window lands on a committed slot (top_k=1 + one
+    # probe commits at the first observation).
+    drift_reqs = [(np.full(4, 7, dtype=np.int64), 8) for _ in range(4)]
+    s_wd, res_wd = _stream(model, params, drift_reqs, backend="pallas",
+                           faults=fi, dispatch=svc, batch_sizes=(4,),
+                           straggler_threshold=1e9, watchdog=wd,
+                           recorder=rec)
+    assert all(r.state == RequestState.COMPLETED
+               for r in res_wd.values())
+    drifts = [e for e in wd.events if e.kind == "drift"]
+    assert drifts, (
+        f"injected slow@{fault_start}x{fault_len} never tripped the "
+        f"watchdog (report: {wd.report()})")
+    detect_steps = drifts[0].step - fault_start + 1
+    assert detect_steps <= wd.patience + wd.cooldown, (
+        f"drift detected after {detect_steps} steps, bound "
+        f"{wd.patience + wd.cooldown}")
+    assert rec.dumps.get("drift", 0) >= 1, "no drift postmortem dumped"
+
     record_metric("faults.survival_rate", survival)
     record_metric("faults.degraded_tok_s_ratio", ratio)
     record_metric("faults.shed_rate", shed_rate)
+    record_metric("faults.drift_detect_steps", float(detect_steps))
     record_metric("faults.events_recorded", float(events))
     emit("faults.survival_rate", survival * 100.0,
          f"survived={survived};of={total}")
     emit("faults.degraded_tok_s_ratio", ratio * 100.0,
          f"degraded_buckets={s_deg.stats.degraded_buckets}")
     emit("faults.shed_rate", shed_rate * 100.0, f"shed={shed}")
+    emit("faults.drift_detect_steps", float(detect_steps),
+         f"drifts={wd.drift_count()};reopens={wd.reopen_count()};"
+         f"postmortems={sum(rec.dumps.values())}")
     assert survival == 1.0, (
         f"survival rate {survival:.3f} < 1.0: an injected single fault "
         f"killed a non-targeted request")

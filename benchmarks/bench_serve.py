@@ -26,20 +26,31 @@ batch's full drain.  Headline numbers land in ``BENCH_serve.json``:
   serve.telemetry_overhead_ratio  mean decode-step time with telemetry
                            on / off (min over repeats) — CI gates the
                            <= 1.05 budget
+  serve.watchdog_overhead_ratio  mean decode-step time with the full
+                           reactive layer (watchdog + SLO tracker +
+                           flight recorder) on / telemetry-only (min
+                           over repeats) — CI gates the <= 1.05 budget
   serve.inflight_admissions  requests admitted at step boundaries
   serve.decode_tok_s       fleet decode throughput (machine-absolute)
 
 The telemetry-on rerun also writes the observability artifacts the CI
-bench job uploads and validates: ``trace.json`` (Chrome trace-event /
-Perfetto) and ``metrics.prom`` (Prometheus text exposition), checked
-by ``tools/check_trace.py``.
+bench job uploads and validates, all under ``artifacts/``:
+``trace.json`` (Chrome trace-event / Perfetto), ``metrics.prom`` plus
+an early ``metrics.head.prom`` snapshot (Prometheus text exposition —
+the pair proves counters never decrease), and ``lifecycle.json``
+(per-request timelines), checked by ``tools/check_trace.py``.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 import jax
 
 from benchmarks.common import emit, is_quick, record_metric
+
+ART_DIR = "artifacts"
 
 
 def _inject_fleet_measurements(svc, cfg, batch_sizes, classes):
@@ -66,7 +77,8 @@ def _inject_fleet_measurements(svc, cfg, batch_sizes, classes):
             svc.registry.record_measurement(rkey, best, times[b])
 
 
-def _stream(arch: str, n_requests: int, telemetry=None) -> dict:
+def _stream(arch: str, n_requests: int, telemetry=None, watchdog=None,
+            recorder=None) -> dict:
     from repro.configs import get_config
     from repro.core import registry as reg
     from repro.models import build_model
@@ -86,7 +98,8 @@ def _stream(arch: str, n_requests: int, telemetry=None) -> dict:
     session = ServeSession(model, params, dispatch=svc, backend="pallas",
                            batch_sizes=batch_sizes,
                            bucket_lengths=bucket_lengths,
-                           telemetry=telemetry)
+                           telemetry=telemetry, watchdog=watchdog,
+                           recorder=recorder)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(n_requests):
@@ -150,25 +163,51 @@ def run() -> None:
     # first arch's stream with full telemetry (spans, lifecycle,
     # histograms) and compare mean decode-step time against the
     # telemetry-off streams above.  Two pairs, min ratio: overhead is
-    # non-negative, so noise only inflates a single measurement.
-    from repro.obs import Telemetry
+    # non-negative, so noise only inflates a single measurement.  The
+    # watchdog pair layers the full reactive stack (drift watch + SLO
+    # tracker + flight recorder) on top of a telemetry-on stream, so
+    # its ratio prices the reaction layer alone.
+    from repro.obs import FlightRecorder, PerformanceWatchdog, Telemetry
+
+    os.makedirs(ART_DIR, exist_ok=True)
 
     def _mean_step_s(st: dict) -> float:
         d_s = st["tokens_generated"] / max(st["decode_tok_s"], 1e-9)
         return d_s / max(st["steps"], 1)
 
     ratios = []
+    wd_ratios = []
     telemetry = None
-    for _ in range(2):
+    for rep in range(2):
         off = _stream(archs[0], n)
         # Default metrics registry: session instruments land next to the
         # bench.* gauges record_metric mirrors, so one metrics.prom
         # carries both.
         telemetry = Telemetry()
         on = _stream(archs[0], n, telemetry=telemetry)
+        if rep == 0:
+            # Early snapshot of the shared process registry: CI checks
+            # that no cumulative series decreases between this and the
+            # final metrics.prom (tools/check_trace.py --metrics-pair).
+            telemetry.metrics.write_prometheus(
+                os.path.join(ART_DIR, "metrics.head.prom"))
         ratios.append(_mean_step_s(on) / max(_mean_step_s(off), 1e-12))
+        wd = PerformanceWatchdog(("ttft_p95<=10", "queue_p95<=10",
+                                  "error_rate<=0.5"))
+        rec = FlightRecorder(
+            out_dir=os.path.join(ART_DIR, "postmortems"))
+        wd_on = _stream(archs[0], n, telemetry=Telemetry(),
+                        watchdog=wd, recorder=rec)
+        wd_ratios.append(_mean_step_s(wd_on)
+                         / max(_mean_step_s(on), 1e-12))
     overhead = min(ratios)
-    telemetry.tracer.write("trace.json")
+    wd_overhead = min(wd_ratios)
+    telemetry.tracer.write(os.path.join(ART_DIR, "trace.json"))
+    with open(os.path.join(ART_DIR, "lifecycle.json"), "w",
+              encoding="utf-8") as f:
+        json.dump(telemetry.lifecycle.as_dicts(), f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
 
     hit_rate = hits / max(hits + misses, 1)
     tok_s = tokens / max(decode_s, 1e-9)
@@ -182,6 +221,7 @@ def run() -> None:
     record_metric("serve.ttft_p50_s", ttft_p50)
     record_metric("serve.ttft_p95_s", ttft_p95)
     record_metric("serve.telemetry_overhead_ratio", overhead)
+    record_metric("serve.watchdog_overhead_ratio", wd_overhead)
     record_metric("serve.inflight_admissions", float(admissions))
     record_metric("serve.decode_tok_s", tok_s)
     emit("serve.cache_hit_rate", hit_rate * 100.0,
@@ -190,8 +230,10 @@ def run() -> None:
          f"p95_us={queue_p95 * 1e6:.0f}")
     emit("serve.ttft", ttft_p50 * 1e6, f"p95_us={ttft_p95 * 1e6:.0f}")
     emit("serve.telemetry_overhead", overhead)
+    emit("serve.watchdog_overhead", wd_overhead)
     emit("serve.decode_tok_s", tok_s)
-    telemetry.metrics.write_prometheus("metrics.prom")
+    telemetry.metrics.write_prometheus(
+        os.path.join(ART_DIR, "metrics.prom"))
     assert hit_rate >= 0.5, (
         f"executable-cache hit rate {hit_rate:.2f} < 0.5: the session "
         f"is re-lowering instead of reusing")

@@ -221,6 +221,21 @@ class AdaptiveSelector(Generic[S]):
         slot = self._slots.get(key)
         return slot.committed if slot else None
 
+    def reopen(self, key: str) -> bool:
+        """Drop a committed winner and all samples so the slot probes
+        from scratch — the runtime-adaptation answer to drift: when the
+        workload shifts under a committed schedule, re-run the
+        micro-profile instead of trusting a stale measurement.  Returns
+        False for unknown or not-yet-committed slots (nothing to
+        reopen)."""
+        slot = self._slots.get(key)
+        if slot is None or slot.committed is None:
+            return False
+        slot.committed = None
+        slot.samples = {i: [] for i in range(len(slot.candidates))}
+        slot.next_candidate = 0
+        return True
+
     def measured_median(self, key: str) -> Optional[float]:
         """Best measured step time for a slot: the committed winner's
         median when committed, otherwise the fastest candidate median

@@ -118,6 +118,21 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the metrics registry in Prometheus text "
                          "exposition format to PATH")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="enable the performance watchdog: online drift "
+                         "detection over the dispatch slots (sustained "
+                         "breaches reopen the slot for re-tuning) plus "
+                         "SLO burn tracking (--session)")
+    ap.add_argument("--slo", action="append", default=None,
+                    metavar="SPEC",
+                    help="declarative SLO, repeatable (implies "
+                         "--watchdog): ttft_p95<=S, queue_p95<=S, "
+                         "tok_s>=R, error_rate<=F (--session)")
+    ap.add_argument("--postmortem-dir", default=None, metavar="DIR",
+                    help="enable the flight recorder: faults, SLO "
+                         "pages, and drift alarms dump a deterministic "
+                         "postmortem-<reason>.json bundle into DIR "
+                         "(--session)")
     args = ap.parse_args()
 
     import jax
@@ -177,6 +192,14 @@ def main() -> None:
         from repro.serving import FaultInjector, ServeSession
         faults = (FaultInjector.from_strings(args.inject_fault)
                   if args.inject_fault else None)
+        watchdog = None
+        if args.watchdog or args.slo:
+            from repro.obs import PerformanceWatchdog
+            watchdog = PerformanceWatchdog(args.slo or ())
+        recorder = None
+        if args.postmortem_dir:
+            from repro.obs import FlightRecorder
+            recorder = FlightRecorder(out_dir=args.postmortem_dir)
         session = ServeSession(
             model, params, dispatch=dispatch, backend=args.backend,
             registry=registry, max_recompiles=args.max_recompiles,
@@ -189,7 +212,8 @@ def main() -> None:
             request_deadline_s=args.request_deadline_s,
             max_queue_s=args.max_queue_s,
             fallback_backend=args.fallback_backend,
-            faults=faults, telemetry=telemetry)
+            faults=faults, telemetry=telemetry,
+            watchdog=watchdog, recorder=recorder)
         rng = np.random.default_rng(0)
         reqs = _load_requests(args.requests_file, args.num_requests,
                               args.prompt_len, args.new_tokens,
@@ -237,6 +261,22 @@ def main() -> None:
                 print(f"dispatch {entry['kind']}: "
                       f"obs={entry['observations']} "
                       f"committed={committed if committed else '(probing)'}")
+        if watchdog is not None:
+            wrep = watchdog.report()
+            pages = sum(int(s["pages"]) for s in wrep["slo"].values())
+            line = (f"watchdog: drift={wrep['drifts']} "
+                    f"reopens={wrep['reopens']}/{wrep['retune_budget']} "
+                    f"slo_pages={pages}")
+            for name, s in sorted(wrep["slo"].items()):
+                line += (f" | {s['spec']}: burn "
+                         f"{s['burn_short']:.2f}/{s['burn_long']:.2f}"
+                         f"{' PAGED' if s['paged'] else ''}")
+            print(line)
+        if recorder is not None and recorder.dumps:
+            print("postmortems: " + ", ".join(
+                f"{reason} x{n}"
+                for reason, n in sorted(recorder.dumps.items()))
+                + f" (in {recorder.out_dir}/)")
         _write_telemetry()
         return
 

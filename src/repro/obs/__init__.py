@@ -15,6 +15,17 @@ Three pillars (see ``docs/OBSERVABILITY.md``):
 :class:`~repro.obs.telemetry.Telemetry` bundles the three behind one
 ``telemetry=`` parameter; :data:`~repro.obs.telemetry.NULL_TELEMETRY`
 is the shared disabled instance every component defaults to.
+
+On top of the measurement pillars sits the reactive layer:
+
+* :class:`~repro.obs.watchdog.PerformanceWatchdog` — online drift
+  detection over dispatch step times (reopening drifted slots for
+  re-tuning) plus declarative SLOs (:mod:`repro.obs.slo`) with
+  multi-window burn-rate paging.
+* :class:`~repro.obs.recorder.FlightRecorder` — a bounded ring of
+  recent events/spans/metric deltas, dumped as a deterministic
+  ``postmortem-<reason>.json`` bundle on faults, SLO pages, and drift
+  alarms.
 """
 
 from repro.obs.events import (
@@ -32,23 +43,32 @@ from repro.obs.metrics import (
     prom_name,
     set_metrics_registry,
 )
+from repro.obs.recorder import POSTMORTEM_KINDS, FlightRecorder
+from repro.obs.slo import SLOSpec, SLOTracker, parse_slo
 from repro.obs.telemetry import NULL_TELEMETRY, Telemetry
 from repro.obs.trace import NullTracer, SpanTracer
+from repro.obs.watchdog import PerformanceWatchdog
 
 __all__ = [
     "Counter",
     "Event",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
     "LifecycleLog",
     "MetricsRegistry",
     "NULL_TELEMETRY",
     "NullTracer",
+    "POSTMORTEM_KINDS",
+    "PerformanceWatchdog",
     "RequestLifecycle",
+    "SLOSpec",
+    "SLOTracker",
     "SpanTracer",
     "Telemetry",
     "format_event_summary",
     "get_metrics_registry",
+    "parse_slo",
     "prom_name",
     "set_metrics_registry",
     "summarize_events",

@@ -29,18 +29,26 @@ class Telemetry:
 
     def __init__(self, metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[SpanTracer] = None,
-                 clock: Optional[Callable[[], float]] = None) -> None:
+                 clock: Optional[Callable[[], float]] = None,
+                 watchdog=None, recorder=None) -> None:
         """Build a live bundle.
 
         ``metrics`` defaults to the process-wide registry; ``tracer``
         defaults to a fresh :class:`SpanTracer` on ``clock`` (which
         defaults to ``time.perf_counter``, and is the handle tests use
-        to make traces deterministic).
+        to make traces deterministic).  ``watchdog`` (a
+        :class:`~repro.obs.watchdog.PerformanceWatchdog`) and
+        ``recorder`` (a :class:`~repro.obs.recorder.FlightRecorder`)
+        are optional reactive components — both default to ``None``
+        (pure measurement, no reaction); components that accept a
+        bundle pick them up from here unless handed one explicitly.
         """
         self.clock = clock if clock is not None else time.perf_counter
         self.metrics = metrics if metrics is not None else get_metrics_registry()
         self.tracer = tracer if tracer is not None else SpanTracer(clock=self.clock)
         self.lifecycle = LifecycleLog()
+        self.watchdog = watchdog
+        self.recorder = recorder
 
 
 class _NullTelemetry(Telemetry):
@@ -55,6 +63,8 @@ class _NullTelemetry(Telemetry):
         self.metrics = MetricsRegistry()  # inert scratch, never exported
         self.tracer = NullTracer()
         self.lifecycle = LifecycleLog()
+        self.watchdog = None
+        self.recorder = None
 
 
 NULL_TELEMETRY = _NullTelemetry()

@@ -217,6 +217,13 @@ class DispatchService:
             "dispatch.observations_total", help=hlp)
         self._c_commits = self.metrics.counter(
             "dispatch.commits_total", help=hlp)
+        self._c_reopens = self.metrics.counter(
+            "dispatch.reopens_total", help=hlp)
+        # Predicted-vs-measured hook: called as ``(slot key, kind, dt)``
+        # after every observation, outside the service lock — the
+        # performance watchdog subscribes here (obs/watchdog.py) and may
+        # re-enter the service (e.g. ``reopen``) from the callback.
+        self.on_observe: Optional[Callable[[str, str, float], None]] = None
         self._committed_seen: set = set()
         self.selector: AdaptiveSelector = AdaptiveSelector(
             probes_per_candidate=probes_per_candidate,
@@ -312,6 +319,8 @@ class DispatchService:
             self._slots[skey].observations += 1
             self.selector.observe(skey, dt)
             self._after_observe(skey)
+        if self.on_observe is not None:
+            self.on_observe(skey, kind, dt)
 
     @contextlib.contextmanager
     def measure(self, kind: str, problem: Dict[str, Any],
@@ -333,6 +342,8 @@ class DispatchService:
             self._slots[skey].observations += 1
             self.selector.observe_at(skey, idx, dt)
             self._after_observe(skey)
+        if self.on_observe is not None:
+            self.on_observe(skey, kind, dt)
 
     def committed(self, kind: str, problem: Dict[str, Any],
                   elem_bytes: int = 2) -> Optional[Any]:
@@ -361,6 +372,63 @@ class DispatchService:
             if sched is not None:
                 return sched
         return slot.candidates[0]
+
+    # -- drift surface (obs/watchdog.py) --------------------------------
+    def is_committed(self, slot: str) -> bool:
+        """Whether a resolved slot (by key) has a committed winner."""
+        return self.selector.committed(slot) is not None
+
+    def committed_schedule(self, slot: str) -> Optional[Dict[str, Any]]:
+        """The committed schedule of a slot as a registry dict (None
+        while probing / for unknown slots)."""
+        committed = self.selector.committed(slot)
+        return (reg.schedule_to_dict(committed)
+                if committed is not None else None)
+
+    def baseline_time(self, slot: str) -> Optional[float]:
+        """The committed schedule's expected step time (seconds) — the
+        reference a drift detector compares live measurements against.
+
+        Priority: the median measured at commit time > the registry's
+        persisted ``time_s`` (what another process measured) > the
+        cost-model prediction for the committed candidate.  ``None``
+        while the slot is still probing (no commitment, no baseline).
+        """
+        committed = self.selector.committed(slot)
+        if committed is None:
+            return None
+        m = self._measured_for_slot(slot)
+        if m is not None:
+            return m
+        s = self._slots.get(slot)
+        if s is None:
+            return None
+        if committed in s.candidates:
+            return float(s.predicted[s.candidates.index(committed)])
+        return float(min(s.predicted)) if s.predicted else None
+
+    def reopen(self, slot: str) -> bool:
+        """Flip a committed slot (by key) back to exploration.
+
+        The selector drops the committed winner and every sample, so
+        the next ``propose`` round-robins candidates from scratch and a
+        fresh commit — possibly a different winner — follows once the
+        steadiness gate passes again.  The commit-transition tracking
+        is reset so the re-commit counts in ``dispatch.commits_total``
+        and emits its ``dispatch.commit`` instant like the first one.
+        Returns False for unknown or not-committed slots.
+        """
+        with self._lock:
+            if slot not in self._slots:
+                return False
+            if not self.selector.reopen(slot):
+                return False
+            self._committed_seen.discard(slot)
+            self._c_reopens.inc()
+            if self.tracer.enabled:
+                self.tracer.instant("dispatch.reopen",
+                                    kind=self._slots[slot].kind)
+        return True
 
     def schedule_bundle(self, problems, elem_bytes: int = 2):
         """Resolve a :class:`~repro.core.schedule.ScheduleBundle` for a

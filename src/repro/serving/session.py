@@ -67,6 +67,7 @@ from repro.core import registry as reg
 from repro.models.model_zoo import (Model, bucket_length,
                                     left_pad_prompts, prompt_starts)
 from repro.obs.events import Event
+from repro.obs.recorder import POSTMORTEM_KINDS
 from repro.obs.telemetry import NULL_TELEMETRY
 from repro.runtime.ft import StragglerMonitor
 from repro.serving.bucketing import (Bucket, candidate_buckets,
@@ -273,6 +274,19 @@ class ServeSession:
     ``on_straggler`` (slow-step hook; returning an int N holds admission
     for N step boundaries), and ``faults`` (a
     :class:`~repro.serving.faults.FaultInjector`, dev/test only).
+
+    Reactive observability (ISSUE 10): ``watchdog`` (a
+    :class:`~repro.obs.watchdog.PerformanceWatchdog`) is fed the decode
+    slot's measured step times — fault-injected slowdowns included — at
+    every step boundary plus the SLO samples (TTFT, queue wait,
+    terminal outcomes, tok/s), and its drift/SLO events land in the
+    session event ledger; ``recorder`` (a
+    :class:`~repro.obs.recorder.FlightRecorder`) taps the same ledger
+    and step spans, and any event whose kind is in
+    ``repro.obs.recorder.POSTMORTEM_KINDS`` triggers a
+    ``postmortem-<reason>.json`` dump.  Both default to the matching
+    slot on the telemetry bundle, then to ``None``; with neither bound
+    the engine executes the exact same instruction stream as before.
     """
 
     def __init__(self, model: Model, params, *,
@@ -296,7 +310,9 @@ class ServeSession:
                  straggler_threshold: float = 3.0,
                  on_straggler=None,
                  faults=None,
-                 telemetry=None):
+                 telemetry=None,
+                 watchdog=None,
+                 recorder=None):
         """Validate the knobs and set up an empty queue + caches."""
         self.model = model
         self.params = params
@@ -353,6 +369,22 @@ class ServeSession:
         self._straggler = StragglerMonitor(
             threshold=straggler_threshold,
             on_straggler=self._straggler_event)
+        # Reactive layer (ISSUE 10): explicit parameters win, then the
+        # telemetry bundle's slots, then None (measurement only).  Every
+        # tap below guards on `is not None`, so a session without a
+        # watchdog/recorder runs the identical instruction stream.
+        self._watchdog = (watchdog if watchdog is not None
+                          else self.telemetry.watchdog)
+        self._recorder = (recorder if recorder is not None
+                          else self.telemetry.recorder)
+        if self._watchdog is not None:
+            self._watchdog.bind(
+                dispatch=dispatch, clock=self._clock,
+                on_event=self._record_event,
+                metrics=(self.telemetry.metrics
+                         if self.telemetry.enabled else None))
+        if self._recorder is not None:
+            self._recorder.bind(clock=self._clock)
         if self.telemetry.enabled:
             self._register_instruments()
 
@@ -402,7 +434,9 @@ class ServeSession:
 
     def _record_event(self, ev: Event) -> None:
         """Append an event to the ledger and mirror it into telemetry
-        (per-kind counters + a trace instant)."""
+        (per-kind counters + a trace instant).  With a flight recorder
+        bound the event also lands in its ring, and postmortem-worthy
+        kinds (faults, SLO pages, drift alarms) trigger a bundle dump."""
         self.stats.events.append(ev)
         tel = self.telemetry
         if tel.enabled:
@@ -410,6 +444,40 @@ class ServeSession:
             tel.metrics.counter(f"serve.events.{ev.kind}_total").inc()
             tel.tracer.instant(f"event:{ev.kind}", step=ev.step,
                                request_id=ev.request_id)
+        rec = self._recorder
+        if rec is not None:
+            rec.record_event(ev)
+            if ev.kind in POSTMORTEM_KINDS:
+                self.dump_postmortem(ev.kind)
+
+    def dump_postmortem(self, reason: str) -> Optional[str]:
+        """Write ``postmortem-<reason>.json`` via the bound flight
+        recorder (None without one): the recorder's recent timeline and
+        allocator state, plus session context — registry provenance of
+        the active schedules (``dispatch.report()``), the watchdog's
+        drift/SLO report, and the lifecycle of every request the
+        timeline names.  Called automatically when a postmortem-worthy
+        event is recorded, and again at the end of the drain that
+        dumped it (so the bundle on disk also reflects what recovery —
+        e.g. a re-tuned commit — did); callable directly for ad-hoc
+        snapshots."""
+        rec = self._recorder
+        if rec is None:
+            return None
+        context: Dict[str, Any] = {}
+        if self.dispatch is not None:
+            context["schedules"] = self.dispatch.report()
+        if self._watchdog is not None:
+            context["watchdog"] = self._watchdog.report()
+        tel = self.telemetry
+        if tel.enabled:
+            lifecycles = {}
+            for rid in rec.request_ids():
+                r = tel.lifecycle.records.get(rid)
+                if r is not None:
+                    lifecycles[rid] = r.as_dict()
+            context["request_lifecycles"] = lifecycles
+        return rec.dump(reason, context)
 
     # ------------------------------------------------------ admission
     def submit(self, tokens, max_new_tokens: int,
@@ -494,13 +562,17 @@ class ServeSession:
         """Terminal result for a request that never reached a row."""
         log.warning("request %s finished %s without admission: %s",
                     req.request_id, state, reason)
+        queue_s = self._clock() - req.submitted_at
         sink.append(RequestResult(
             request_id=req.request_id,
             tokens=np.zeros((0,), np.int32), bucket=_NULL_BUCKET,
-            queue_s=self._clock() - req.submitted_at, stats=None,
+            queue_s=queue_s, stats=None,
             state=state, reason=reason))
         self.stats.requests += 1
         self._count_terminal(state)
+        if self._watchdog is not None:
+            self._watchdog.note_queue(queue_s)
+            self._watchdog.note_terminal(state == RequestState.COMPLETED)
         tel = self.telemetry
         if tel.enabled:
             tel.lifecycle.terminal(req.request_id, self._clock(),
@@ -835,6 +907,12 @@ class ServeSession:
         deg0 = self.stats.degraded_buckets
         tel = self.telemetry
         t_act0 = tel.clock() if tel.enabled else 0.0
+        # Postmortem dump counts at drain entry: any reason dumped
+        # during this drain is re-dumped once at the end, so the bundle
+        # on disk also reflects what recovery did (e.g. the re-tuned
+        # commit after a drift reopen).
+        dumps0 = (dict(self._recorder.dumps)
+                  if self._recorder is not None else {})
 
         problems = (serve_dispatch_problems(cfg, rows_n, s_pad, cap)
                     if dispatch is not None else {})
@@ -948,6 +1026,10 @@ class ServeSession:
             self.stats.requests += 1
             self._count_terminal(state)
             self.stats.queue_s.append(row_wait[r])
+            if self._watchdog is not None:
+                self._watchdog.note_queue(row_wait[r])
+                self._watchdog.note_terminal(
+                    state == RequestState.COMPLETED)
             if tel.enabled:
                 tel.lifecycle.terminal(req.request_id, self._clock(),
                                        state, reason)
@@ -981,6 +1063,8 @@ class ServeSession:
                 state=RequestState.FAILED, reason=reason))
             self.stats.requests += 1
             self._count_terminal(RequestState.FAILED)
+            if self._watchdog is not None:
+                self._watchdog.note_terminal(False)
             if tel.enabled:
                 tel.lifecycle.terminal(req.request_id, self._clock(),
                                        RequestState.FAILED, reason)
@@ -1076,6 +1160,8 @@ class ServeSession:
             # token right here — submit -> now on the session clock.
             now = self._clock()
             self.stats.ttft_s.append(now - req.submitted_at)
+            if self._watchdog is not None:
+                self._watchdog.note_ttft(now - req.submitted_at)
             if tel.enabled:
                 tel.metrics.counter(
                     "serve.inflight_admissions_total").inc()
@@ -1261,6 +1347,11 @@ class ServeSession:
                     jnp.all(jnp.isfinite(lg[:, -1]), axis=-1))
                     if self.nan_check else None)
                 dt = time.perf_counter() - t_step
+                # Injected slowdowns count once: the magnitude is read
+                # here and reused by the straggler record and the
+                # watchdog taps below (slow_extra_s logs its firing).
+                extra = (self._faults.slow_extra_s(self._step_count)
+                         if self._faults is not None else 0.0)
                 act_stats.decode_s += dt
                 self.stats.decode_s += dt
                 bucket_entry()["decode_s"] += dt
@@ -1272,6 +1363,14 @@ class ServeSession:
                         "serve.decode_step_seconds").observe(dt)
                 if dispatch is not None:
                     dispatch.observe(kind, prob, dt)
+                    if self._watchdog is not None:
+                        # Drift watch sees what the hardware delivered,
+                        # injected slowdown included — dispatch medians
+                        # stay clean (dt only), the watchdog judges the
+                        # committed baseline against dt + extra.
+                        self._watchdog.observe_slot(
+                            dispatch.resolve(kind, prob), kind,
+                            dt + extra, step=self._step_count)
                     if pallas and not switch_blocked:
                         committed = dispatch.committed(kind, prob)
                         if (committed is not None
@@ -1323,9 +1422,24 @@ class ServeSession:
                             tel.lifecycle.decode_step(row_req[r].request_id)
                 self.stats.steps += 1
                 step_idx += 1
-                extra = (self._faults.slow_extra_s(self._step_count)
-                         if self._faults is not None else 0.0)
                 self._straggler.record(self._step_count, dt + extra)
+                wd = self._watchdog
+                if wd is not None:
+                    wd.note_step(tokens=len(active), dt=dt + extra)
+                    wd.tick(self._step_count)
+                rec = self._recorder
+                if rec is not None:
+                    rec.record_span("serve.decode_step",
+                                    step=self._step_count,
+                                    dur_s=dt + extra)
+                    rec.record_metric("serve.tokens_generated_total",
+                                      self.stats.tokens_generated)
+                    if attn_family:
+                        rec.note_allocator({
+                            "blocks_total": alloc.n_blocks,
+                            "blocks_live": alloc.num_live,
+                            "blocks_free": alloc.num_free,
+                            "fragmentation": alloc.fragmentation()})
                 self._step_count += 1
                 if tel.enabled and attn_family:
                     tel.metrics.gauge("serve.kv_blocks_live").set(
@@ -1376,6 +1490,10 @@ class ServeSession:
                 key, {"type": "serve_decode", "arch": cfg.name,
                       "decode_tok_s": act_stats.decode_tok_s},
                 act_stats.decode_s / max(step_idx, 1))
+        if self._recorder is not None:
+            for reason, n in sorted(self._recorder.dumps.items()):
+                if n > dumps0.get(reason, 0):
+                    self.dump_postmortem(reason)
         return results
 
     # ------------------------------------------------------ execution
@@ -1624,6 +1742,18 @@ class ServeSession:
             extra = (self._faults.slow_extra_s(self._step_count)
                      if self._faults is not None else 0.0)
             self._straggler.record(self._step_count, dt + extra)
+            wd = self._watchdog
+            if wd is not None:
+                if dispatch is not None:
+                    wd.observe_slot(dispatch.resolve(kind, problem),
+                                    kind, dt + extra,
+                                    step=self._step_count)
+                wd.note_step(tokens=bsz, dt=dt + extra)
+                wd.tick(self._step_count)
+            if self._recorder is not None:
+                self._recorder.record_span("serve.decode_step",
+                                           step=self._step_count,
+                                           dur_s=dt + extra)
             self._step_count += 1
             if dispatch is not None:
                 dispatch.observe(kind, problem, dt)

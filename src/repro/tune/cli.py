@@ -362,6 +362,92 @@ def cmd_serve_report(args) -> int:
     return 0
 
 
+def cmd_doctor(args) -> int:
+    """Offline drift report: flag registry records whose run-time
+    measurement disagrees with the offline prediction.
+
+    The online half lives in
+    :class:`repro.obs.watchdog.PerformanceWatchdog` (sustained breach →
+    reopen the slot); ``doctor`` is the post-hoc view over a persisted
+    registry — the same measured/predicted extraction as
+    ``serve-report``, with a verdict column: ``DRIFT`` when the ratio
+    leaves ``[1/ratio, ratio]``, ``ok`` inside the band, ``unmeasured``
+    when only the prediction exists.  ``--metrics`` folds in a JSON
+    metrics snapshot from a live run (``tune metrics --format json`` or
+    a benchmark artifact) and reports the ``watchdog.*`` / ``slo.*``
+    counters it carries; ``--fail-on-drift`` exits non-zero for CI.
+    """
+    registry = _registry(args)
+    schedule_kinds = ("conv_schedule", "matmul_schedule",
+                      "flash_attention_schedule",
+                      "decode_attention_schedule", "ssm_scan_schedule",
+                      "sparse_conv_schedule")
+    runtime_kinds = ("serve_decode", "train_step")
+    lo, hi = 1.0 / args.ratio, args.ratio
+    rows = drifted = unmeasured = 0
+    print(f"{'kind':26s} {'problem':44s} {'predicted':>11s} "
+          f"{'measured':>11s} {'ratio':>7s} verdict")
+    for rec in registry.records():
+        kind = rec.key.kind
+        if kind not in schedule_kinds and kind not in runtime_kinds:
+            continue
+        if args.kind and kind != args.kind:
+            continue
+        # Same degrade-to-"-" extraction as cmd_serve_report: predicted
+        # time of the measured winner (rank 0 fallback), measurement
+        # with the legacy bare-number fallback.
+        pred = None
+        value = rec.value if isinstance(rec.value, dict) else {}
+        meas_rec = rec.measured if isinstance(rec.measured, dict) else {}
+        costs = value.get("costs") or []
+        scheds = value.get("schedules") or []
+        best = meas_rec.get("best")
+        if costs:
+            idx = scheds.index(best) if best in scheds[:len(costs)] else 0
+            try:
+                pred = float(reg.cost_from_dict(costs[idx]).time_s)
+            except (TypeError, ValueError, KeyError):
+                pred = None
+        meas = meas_rec.get("time_s")
+        if not isinstance(meas, (int, float)):
+            meas = rec.measured if isinstance(rec.measured,
+                                              (int, float)) else None
+        ratio = (meas / pred) if (pred and meas is not None) else None
+        if ratio is None:
+            verdict = "unmeasured"
+            unmeasured += 1
+        elif ratio > hi or ratio < lo:
+            verdict = "DRIFT"
+            drifted += 1
+        else:
+            verdict = "ok"
+        rows += 1
+        fmt = lambda v, f: ("-" if v is None else f % v)  # noqa: E731
+        print(f"{kind:26s} {_fmt_problem(rec.key.problem_dict()):44s} "
+              f"{fmt(pred, '%.3e'):>11s} {fmt(meas, '%.3e'):>11s} "
+              f"{fmt(ratio, '%.2f'):>7s} {verdict}")
+    print(f"-- {rows} records checked: {drifted} drifted (band "
+          f"[{lo:.2f}, {hi:.2f}]), {unmeasured} unmeasured"
+          + (f" ({registry.path})" if registry.path else ""))
+    if args.metrics:
+        with open(args.metrics, encoding="utf-8") as f:
+            snap = json.load(f)
+        watch = {k: v for k, v in sorted(snap.items())
+                 if k.startswith(("watchdog.", "slo.",
+                                  "dispatch.reopens"))}
+        if watch:
+            print("live watchdog counters "
+                  f"({os.path.basename(args.metrics)}):")
+            for name, val in watch.items():
+                v = val.get("value") if isinstance(val, dict) else val
+                print(f"  {name} = {v}")
+        else:
+            print(f"no watchdog.*/slo.* series in {args.metrics}")
+    if drifted and args.fail_on_drift:
+        return 1
+    return 0
+
+
 def cmd_metrics(args) -> int:
     """Export the process metrics registry (``repro.obs.metrics``).
 
@@ -518,6 +604,22 @@ def build_parser() -> argparse.ArgumentParser:
                     help="restrict to one kind (e.g. "
                          "decode_attention_schedule)")
     sr.set_defaults(fn=cmd_serve_report)
+
+    dr = sub.add_parser("doctor",
+                        help="offline drift report: flag records whose "
+                             "measurement left the [1/ratio, ratio] "
+                             "band around the prediction")
+    dr.add_argument("--kind", default=None,
+                    help="restrict to one kind")
+    dr.add_argument("--ratio", type=float, default=3.0,
+                    help="drift band half-width (flag when "
+                         "measured/predicted > ratio or < 1/ratio)")
+    dr.add_argument("--metrics", default=None,
+                    help="JSON metrics snapshot from a live run; "
+                         "reports its watchdog.*/slo.* series")
+    dr.add_argument("--fail-on-drift", action="store_true",
+                    help="exit 1 when any record drifted (CI gate)")
+    dr.set_defaults(fn=cmd_doctor)
 
     mt = sub.add_parser("metrics",
                         help="export process metrics (+ registry "

@@ -346,3 +346,133 @@ def test_telemetry_on_off_results_identical():
     assert ([np.asarray(r.tokens).tolist() for r in r_on]
             == [np.asarray(r.tokens).tolist() for r in r_off])
     assert [r.state for r in r_on] == [r.state for r in r_off]
+
+
+# --------------------- ISSUE 10 S3: TTFT semantics for preempted paths
+
+
+def test_lifecycle_ttft_absent_without_first_token():
+    log = LifecycleLog()
+    log.submitted("r1", 10.0)
+    log.terminal("r1", 10.2, "REJECTED", reason="kv pool too small")
+    log.submitted("r2", 11.0)
+    log.admitted("r2", 11.1)
+    log.terminal("r2", 11.4, "CANCELLED")
+    for rec in log.records.values():
+        assert rec.first_token_ts is None
+        assert rec.ttft_s is None          # absent, never 0 or negative
+        assert rec.as_dict()["ttft_s"] is None
+    assert log.ttft_values() == []         # percentiles skip them too
+
+
+def test_preempted_requests_have_null_ttft(tmp_path):
+    """End-to-end: REJECTED / CANCELLED / TIMED_OUT-before-first-token
+    requests carry no TTFT in the exported lifecycle (S3), and the
+    export passes tools/check_trace.py --lifecycle."""
+    cfg, model, params = _smoke_model()
+    tel = Telemetry(metrics=MetricsRegistry(), clock=FakeClock())
+    # kv_blocks=2 => pool holds 1 usable block of 4 tokens: a request
+    # needing 3 blocks can NEVER fit and is rejected at admission.
+    session = ServeSession(
+        model, params,
+        dispatch=DispatchService(reg.TuningRegistry(None)),
+        backend="reference", batch_sizes=(1, 2),
+        bucket_lengths=(8, 16), straggler_threshold=1e9,
+        kv_block_size=4, kv_blocks=2, telemetry=tel)
+    prompt = np.array([3, 5, 7], dtype=np.int64)
+    session.submit(prompt, max_new_tokens=1, request_id="r-ok")
+    session.submit(prompt, max_new_tokens=9, request_id="r-reject")
+    session.submit(prompt, max_new_tokens=1, request_id="r-timeout",
+                   deadline_s=0.0)
+    session.submit(prompt, max_new_tokens=1, request_id="r-cancel")
+    assert session.cancel("r-cancel") is True
+    results = {r.request_id: r for r in session.drain()}
+    assert results["r-ok"].state == "COMPLETED"
+    assert results["r-reject"].state == "REJECTED"
+    assert results["r-timeout"].state == "TIMED_OUT"
+    assert results["r-cancel"].state == "CANCELLED"
+
+    recs = {d["request_id"]: d for d in tel.lifecycle.as_dicts()}
+    assert recs["r-ok"]["ttft_s"] > 0
+    for rid in ("r-reject", "r-timeout", "r-cancel"):
+        assert recs[rid]["first_token_ts"] is None
+        assert recs[rid]["ttft_s"] is None, rid
+        assert recs[rid]["finished_ts"] >= recs[rid]["submitted_ts"]
+
+    path = tmp_path / "lifecycle.json"
+    path.write_text(json.dumps(tel.lifecycle.as_dicts()))
+    assert _check_trace_module().check_lifecycle(str(path)) == []
+
+
+def test_check_lifecycle_good_and_bad(tmp_path):
+    ct = _check_trace_module()
+    good = [
+        {"request_id": "a", "submitted_ts": 1.0, "admitted_ts": 1.5,
+         "first_token_ts": 2.0, "last_token_ts": 3.0,
+         "finished_ts": 3.0, "ttft_s": 1.0, "state": "COMPLETED"},
+        {"request_id": "b", "submitted_ts": 1.0, "admitted_ts": None,
+         "first_token_ts": None, "last_token_ts": None,
+         "finished_ts": 1.2, "ttft_s": None, "state": "REJECTED"},
+    ]
+    p = tmp_path / "good.json"
+    p.write_text(json.dumps(good))
+    assert ct.check_lifecycle(str(p)) == []
+
+    # a preempted request reporting a zero TTFT is the S3 failure mode
+    bad = json.loads(p.read_text())
+    bad[1]["ttft_s"] = 0.0
+    p_ttft = tmp_path / "ttft.json"
+    p_ttft.write_text(json.dumps(bad))
+    assert any("must be null" in s
+               for s in ct.check_lifecycle(str(p_ttft)))
+
+    # ...as is a first token with a non-positive TTFT
+    bad = json.loads(p.read_text())
+    bad[0]["ttft_s"] = 0.0
+    p_zero = tmp_path / "zero.json"
+    p_zero.write_text(json.dumps(bad))
+    assert any("must be > 0" in s for s in ct.check_lifecycle(str(p_zero)))
+
+    # timestamps running backwards
+    bad = json.loads(p.read_text())
+    bad[0]["finished_ts"] = 0.5
+    p_mono = tmp_path / "mono.json"
+    p_mono.write_text(json.dumps(bad))
+    assert any("precedes" in s for s in ct.check_lifecycle(str(p_mono)))
+
+    p_junk = tmp_path / "junk.json"
+    p_junk.write_text("{}")
+    assert ct.check_lifecycle(str(p_junk))
+
+
+def test_check_metrics_pair_good_and_bad(tmp_path):
+    ct = _check_trace_module()
+    old = tmp_path / "old.prom"
+    new = tmp_path / "new.prom"
+    old.write_text(
+        "# TYPE c_total counter\nc_total 3\n"
+        "# TYPE g gauge\ng 9\n"
+        "# TYPE h histogram\n"
+        'h_bucket{le="1"} 2\nh_bucket{le="+Inf"} 4\n'
+        "h_sum 1.5\nh_count 4\n")
+    new.write_text(
+        "# TYPE c_total counter\nc_total 5\n"
+        "# TYPE g gauge\ng 2\n"          # gauges may move freely
+        "# TYPE h histogram\n"
+        'h_bucket{le="1"} 2\nh_bucket{le="+Inf"} 6\n'
+        "h_sum 2.5\nh_count 6\n"
+        "# TYPE late_total counter\nlate_total 1\n")  # new series: fine
+    assert ct.check_metrics_pair(str(old), str(new)) == []
+
+    shrunk = tmp_path / "shrunk.prom"
+    shrunk.write_text(
+        "# TYPE c_total counter\nc_total 2\n"
+        "# TYPE g gauge\ng 9\n"
+        "# TYPE h histogram\n"
+        'h_bucket{le="1"} 2\nh_bucket{le="+Inf"} 3\n'
+        "h_sum 1.5\nh_count 3\n")
+    problems = ct.check_metrics_pair(str(old), str(shrunk))
+    assert any(s.startswith("c_total:") for s in problems)
+    assert any(s.startswith('h_bucket{le="+Inf"}') for s in problems)
+    assert any(s.startswith("h_count") for s in problems)
+    assert not any(s.startswith("g") for s in problems)

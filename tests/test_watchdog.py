@@ -1,0 +1,478 @@
+"""ISSUE 10: the performance watchdog — online drift detection over
+dispatch slots, SLO burn-rate tracking, and the flight-recorder
+postmortem bundle.
+
+The acceptance-critical tests live here: a sustained injected slowdown
+on a committed slot raises a ``drift`` event within a bounded number
+of steps, ``DispatchService.reopen`` triggers re-exploration and a new
+commit, the flight recorder writes a byte-deterministic postmortem
+bundle under a fake clock that names the drifting slot, its old/new
+schedules, and the registry provenance — and a watchdog-free session
+produces bit-identical output to one that was never wired at all.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import registry as reg
+from repro.core.adaptive import AdaptiveSelector
+from repro.obs import (
+    FlightRecorder,
+    MetricsRegistry,
+    PerformanceWatchdog,
+    SLOSpec,
+    SLOTracker,
+    Telemetry,
+    parse_slo,
+)
+from repro.runtime.dispatch import DispatchService
+from repro.serving import FaultInjector, RequestState, ServeSession
+from repro.serving.faults import parse_fault
+
+
+class FakeClock:
+    """Deterministic monotonic clock: each reading advances 1 ms."""
+
+    def __init__(self, start=100.0, tick=1e-3):
+        self.t = start
+        self.tick = tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+PROBLEM = {"m": 128, "n": 128, "k": 128}
+
+
+def _svc(top_k=1, **kw):
+    """A dispatch service that commits a slot at its first observation
+    per candidate (one probe, no extra rounds) on a fresh in-memory
+    registry and a private metrics registry."""
+    return DispatchService(reg.TuningRegistry(None), top_k=top_k,
+                           probes_per_candidate=1, max_extra_probes=0,
+                           metrics=MetricsRegistry(), **kw)
+
+
+# ----------------------------------------------------------- SLO specs
+
+
+def test_parse_slo_forms():
+    spec = parse_slo("ttft_p95<=0.25")
+    assert spec == SLOSpec("ttft_p95", "<=", 0.25, 0.05)
+    assert spec.bad(0.3) and not spec.bad(0.25)
+    floor = parse_slo("tok_s >= 50")
+    assert floor.op == ">=" and floor.bad(49.0) and not floor.bad(50.0)
+    err = parse_slo("error_rate<=0.05")
+    assert err.budget == pytest.approx(0.05)  # threshold IS the budget
+    assert parse_slo("error_rate<=0").budget > 0  # clamped, not zero
+
+
+@pytest.mark.parametrize("bad", [
+    "ttft_p95<0.25",      # unsupported operator
+    "ttft_p95>=0.25",     # wrong direction for an upper-bound signal
+    "tok_s<=50",          # wrong direction for a floor
+    "made_up<=1",         # unknown signal
+    "ttft_p95<=-1",       # non-positive threshold
+    "ttft_p95",           # no comparison at all
+])
+def test_parse_slo_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_slo(bad)
+
+
+def test_slo_burn_page_hysteresis_and_rearm():
+    m = MetricsRegistry()
+    t = SLOTracker(["ttft_p95<=0.1"], short_window=4, long_window=8,
+                   burn_threshold=2.0, min_samples=4, metrics=m)
+    for _ in range(4):
+        t.sample("ttft_p95", 0.5)  # all bad: burn = 1/0.05 = 20
+    events = t.evaluate(step=4)
+    assert [e.kind for e in events] == ["slo_page"]
+    assert events[0].data["slo"] == "ttft_p95<=0.1"
+    assert m.gauge("slo.ttft_p95.ok").value == 0.0
+    assert m.counter("slo.pages_total").value == 1
+    # still burning: one page per excursion, no re-fire
+    t.sample("ttft_p95", 0.5)
+    assert t.evaluate(step=5) == []
+    # recover: both windows must drop under burn 1.0 to re-arm
+    for _ in range(8):
+        t.sample("ttft_p95", 0.01)
+    assert t.evaluate(step=6) == []
+    assert m.gauge("slo.ttft_p95.ok").value == 1.0
+    # second excursion pages again
+    for _ in range(4):
+        t.sample("ttft_p95", 0.5)
+    assert [e.kind for e in t.evaluate(step=7)] == ["slo_page"]
+    assert t.report()["ttft_p95"]["pages"] == 2
+
+
+def test_slo_tracker_ignores_untracked_signals():
+    t = SLOTracker(["tok_s>=50"])
+    t.sample("ttft_p95", 99.0)  # no SLO targets this signal: dropped
+    for _ in range(8):
+        t.sample("tok_s", 1.0)
+    events = t.evaluate()
+    assert [e.data["signal"] for e in events] == ["tok_s"]
+
+
+# ----------------------------------------------------- reopen plumbing
+
+
+def test_adaptive_selector_reopen():
+    sel = AdaptiveSelector(probes_per_candidate=1, max_extra_probes=0)
+    sel.register("s", ["a", "b"])
+    assert sel.reopen("s") is False       # nothing committed yet
+    assert sel.reopen("missing") is False
+    sel.observe("s", 0.002)
+    sel.observe("s", 0.001)
+    assert sel.committed("s") == "b"
+    assert sel.reopen("s") is True
+    assert sel.committed("s") is None
+    assert all(v == [] for v in sel._slots["s"].samples.values())
+    # the slot probes from scratch and can commit a different winner
+    sel.observe("s", 0.001)
+    sel.observe("s", 0.002)
+    assert sel.committed("s") == "a"
+
+
+def test_dispatch_reopen_baseline_and_counters():
+    svc = _svc(top_k=2)
+    slot = svc.resolve("matmul", PROBLEM)
+    assert svc.is_committed(slot) is False
+    assert svc.baseline_time(slot) is None
+    assert svc.committed_schedule(slot) is None
+    svc.observe("matmul", PROBLEM, 1e-3)
+    svc.observe("matmul", PROBLEM, 2e-3)
+    assert svc.is_committed(slot)
+    assert svc.baseline_time(slot) == pytest.approx(1e-3)
+    assert isinstance(svc.committed_schedule(slot), dict)
+    assert svc.metrics.counter("dispatch.commits_total").value == 1
+    assert svc.reopen(slot) is True
+    assert svc.is_committed(slot) is False
+    assert svc.baseline_time(slot) is None
+    assert svc.metrics.counter("dispatch.reopens_total").value == 1
+    assert svc.reopen(slot) is False        # already exploring
+    assert svc.reopen("no-such-slot") is False
+    # re-exploration leads to a fresh commit that counts again
+    svc.observe("matmul", PROBLEM, 3e-3)
+    svc.observe("matmul", PROBLEM, 4e-3)
+    assert svc.is_committed(slot)
+    assert svc.metrics.counter("dispatch.commits_total").value == 2
+
+
+def test_dispatch_on_observe_hook_fires_outside_lock():
+    svc = _svc(top_k=1)
+    seen = []
+
+    def hook(slot, kind, dt):
+        seen.append((slot, kind, dt))
+        svc.reopen(slot)  # re-entering the service must not deadlock
+
+    svc.on_observe = hook
+    svc.observe("matmul", PROBLEM, 1e-3)
+    (entry,) = seen
+    assert entry[1] == "matmul" and entry[2] == pytest.approx(1e-3)
+
+
+# ------------------------------------------------------ drift detection
+
+
+def test_watchdog_drift_reopen_recommit_loop():
+    svc = _svc(top_k=1)
+    m = MetricsRegistry()
+    wd = PerformanceWatchdog(ratio=3.0, patience=2, cooldown=2,
+                             retune_budget=1, metrics=m)
+    wd.attach(svc)
+    slot = svc.resolve("matmul", PROBLEM)
+    svc.observe("matmul", PROBLEM, 1e-3)    # commits at 1 ms baseline
+    assert svc.is_committed(slot)
+    svc.observe("matmul", PROBLEM, 5e-2)    # breach 1/2
+    assert wd.drift_count() == 0            # patience not yet met
+    svc.observe("matmul", PROBLEM, 5e-2)    # breach 2/2 -> alarm
+    assert wd.drift_count() == 1
+    assert m.counter("watchdog.drift_total").value == 1
+    assert m.counter("watchdog.reopens_total").value == 1
+    (ev,) = [e for e in wd.events if e.kind == "drift"]
+    assert ev.data["slot"] == slot
+    assert ev.data["kernel_kind"] == "matmul"
+    assert ev.data["reopened"] is True
+    assert ev.data["old_schedule"] is not None
+    assert ev.data["ratio"] == pytest.approx(5e-2 / 1e-3, rel=0.5)
+    # the reopen flipped the slot back to exploration; the selector
+    # re-commits at the new (slow) reality on the next observation
+    assert svc.is_committed(slot) is False
+    svc.observe("matmul", PROBLEM, 5e-2)
+    assert svc.is_committed(slot)
+    assert svc.baseline_time(slot) == pytest.approx(5e-2)
+    # post-reopen cooldown: immediately-following slow steps are
+    # hysteresis-suppressed, then the new baseline absorbs them
+    for _ in range(4):
+        svc.observe("matmul", PROBLEM, 5e-2)
+    assert wd.drift_count() == 1
+
+
+def test_watchdog_single_blip_does_not_alarm():
+    svc = _svc(top_k=1)
+    wd = PerformanceWatchdog(ratio=3.0, patience=2, cooldown=2)
+    wd.attach(svc)
+    svc.observe("matmul", PROBLEM, 1e-3)
+    for _ in range(5):
+        svc.observe("matmul", PROBLEM, 5e-2)  # blip...
+        svc.observe("matmul", PROBLEM, 1e-3)  # ...recovers: streak resets
+    assert wd.drift_count() == 0
+
+
+def test_watchdog_retune_budget_bounds_flapping():
+    svc = _svc(top_k=1)
+    wd = PerformanceWatchdog(ratio=3.0, patience=1, cooldown=0,
+                             retune_budget=1)
+    wd.attach(svc)
+    slot = svc.resolve("matmul", PROBLEM)
+    svc.observe("matmul", PROBLEM, 1e-3)
+    svc.observe("matmul", PROBLEM, 5e-2)    # drift 1: reopens
+    assert wd.reopen_count() == 1
+    svc.observe("matmul", PROBLEM, 5e-2)    # re-commit at 50 ms
+    svc.observe("matmul", PROBLEM, 2.0)     # drift 2: budget exhausted
+    assert wd.drift_count() == 2
+    assert wd.reopen_count() == 1           # alarm fired, no reopen
+    assert svc.is_committed(slot)           # slot kept its commitment
+    drifts = [e for e in wd.events if e.kind == "drift"]
+    assert drifts[-1].data["reopened"] is False
+    rep = wd.report()
+    assert rep["drifts"] == 2 and rep["reopens"] == 1
+    assert rep["slots"][slot]["reopens"] == 1
+
+
+def test_watchdog_ignores_uncommitted_slots():
+    svc = _svc(top_k=2)  # two candidates: first observe cannot commit
+    wd = PerformanceWatchdog(ratio=3.0, patience=1, cooldown=0)
+    wd.attach(svc)
+    svc.observe("matmul", PROBLEM, 10.0)   # probing: no baseline yet
+    assert wd.drift_count() == 0
+    assert wd.report()["slots"]  # the slot is watched, just not judged
+
+
+# ------------------------------------------------------ flight recorder
+
+
+def test_recorder_ring_is_bounded_and_reason_sanitised(tmp_path):
+    rec = FlightRecorder(out_dir=str(tmp_path), capacity=3,
+                         clock=FakeClock())
+    for i in range(10):
+        rec.record_metric("m", float(i))
+    assert [e["value"] for e in rec.timeline()] == [7.0, 8.0, 9.0]
+    path = rec.dump("we?ird reason/../x")
+    assert path.endswith("postmortem-we_ird_reason_.._x.json")
+    bundle = json.loads((tmp_path / "postmortem-we_ird_reason_.._x.json")
+                        .read_text())
+    assert bundle["reason"] == "we?ird reason/../x"
+    assert len(bundle["timeline"]) == 3
+    assert bundle["ts"] > 100.0
+
+
+def _drift_run(out_dir: str) -> str:
+    """One deterministic standalone drift incident: commit at 1 ms,
+    sustained 50 ms regression, alarm, reopen, postmortem dump."""
+    svc = _svc(top_k=1)
+    clock = FakeClock()
+    rec = FlightRecorder(out_dir=out_dir, clock=clock)
+    wd = PerformanceWatchdog(ratio=3.0, patience=2, cooldown=2,
+                             retune_budget=2, clock=clock,
+                             metrics=MetricsRegistry())
+    paths = []
+
+    def on_event(ev):
+        rec.record_event(ev)
+        if ev.kind == "drift":
+            paths.append(rec.dump("drift", context={
+                "schedules": svc.report(),
+                "watchdog": wd.report()}))
+
+    wd.on_event = on_event
+    wd.attach(svc)
+    svc.observe("matmul", PROBLEM, 1e-3)
+    for _ in range(3):
+        svc.observe("matmul", PROBLEM, 5e-2)
+    assert wd.drift_count() == 1
+    (path,) = paths
+    return path
+
+
+def test_postmortem_bundle_is_byte_deterministic(tmp_path):
+    a = _drift_run(str(tmp_path / "a"))
+    b = _drift_run(str(tmp_path / "b"))
+    raw_a = open(a, "rb").read()
+    raw_b = open(b, "rb").read()
+    assert raw_a == raw_b
+
+    bundle = json.loads(raw_a)
+    # the bundle names the drifting slot and its old schedule...
+    (drift,) = [e for e in bundle["timeline"] if e.get("kind") == "drift"]
+    slot = drift["slot"]
+    assert drift["old_schedule"] is not None
+    assert drift["baseline_s"] == pytest.approx(1e-3)
+    assert drift["reopened"] is True
+    # ...and carries the dispatch report for that slot with its
+    # registry provenance (machine fingerprint + cost-model tier)
+    sched = bundle["schedules"][slot]
+    assert sched["kind"] == "matmul"
+    assert sched["machine"] and sched["tier"]
+    assert bundle["watchdog"]["drifts"] == 1
+    # timestamps come from the fake clock, monotonic along the timeline
+    stamps = [e["ts"] for e in bundle["timeline"] if "ts" in e]
+    assert stamps == sorted(stamps) and stamps[0] > 100.0
+
+
+# --------------------------------------------- end-to-end serving loop
+
+
+def _smoke_model(arch="phi3-mini-3.8b-smoke"):
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_session_drift_loop_under_fault_harness(tmp_path):
+    """The ISSUE 10 acceptance loop: slow@step injection on a committed
+    decode slot -> drift event within a bounded number of steps ->
+    reopen -> re-exploration -> new commit -> postmortem bundle naming
+    the drifting slot and schedules."""
+    cfg, model, params = _smoke_model()
+    svc = _svc(top_k=1)
+    wd = PerformanceWatchdog(ratio=3.0, patience=2, cooldown=2,
+                             retune_budget=2)
+    rec = FlightRecorder(out_dir=str(tmp_path))
+    fault_start, fault_len = 3, 4
+    fi = FaultInjector([parse_fault(f"slow@{fault_start}x{fault_len}")])
+    session = ServeSession(
+        model, params, dispatch=svc, backend="pallas",
+        batch_sizes=(2,), bucket_lengths=(8, 16),
+        straggler_threshold=1e9, faults=fi,
+        telemetry=Telemetry(metrics=MetricsRegistry()),
+        watchdog=wd, recorder=rec)
+    for i in range(2):
+        session.submit(np.full(4, 7, dtype=np.int64), max_new_tokens=8,
+                       request_id=f"r{i}")
+    results = session.drain()
+    assert all(r.state == RequestState.COMPLETED for r in results)
+
+    drifts = [e for e in wd.events if e.kind == "drift"]
+    assert drifts, f"no drift alarm fired: {wd.report()}"
+    ev = drifts[0]
+    # bounded detection: the alarm lands within patience steps of the
+    # injected window opening
+    assert fault_start <= ev.step <= fault_start + wd.patience
+    assert ev.data["reopened"] is True
+    slot = ev.data["slot"]
+    old = ev.data["old_schedule"]
+    assert old is not None
+    # re-exploration re-committed the slot by end of drain (the slow
+    # window closed, so the new commit reflects post-incident reality)
+    assert svc.is_committed(slot)
+    new = svc.committed_schedule(slot)
+    assert isinstance(new, dict)
+    # the drift event also reached the session ledger and the counters
+    assert any(e.kind == "drift" for e in session.stats.events)
+    assert svc.metrics.counter("dispatch.reopens_total").value >= 1
+
+    # the postmortem bundle exists and names the incident: the drifting
+    # slot, its old schedule, the refreshed dispatch report (new
+    # schedule + registry provenance), and the affected requests'
+    # lifecycles (telemetry was enabled)
+    bundle = json.loads((tmp_path / "postmortem-drift.json").read_text())
+    (bev,) = [e for e in bundle["timeline"]
+              if e.get("kind") == "drift"][:1]
+    assert bev["slot"] == slot
+    assert bev["old_schedule"] == old
+    assert bundle["schedules"][slot]["committed"] == new
+    assert bundle["schedules"][slot]["machine"]
+    assert bundle["watchdog"]["drifts"] >= 1
+    assert "request_lifecycles" in bundle
+
+
+def _token_stream(cfg, model, params, watchdog=None, recorder=None,
+                  tmp_path=None):
+    """The deterministic 3-request reference stream, optionally with
+    the reactive layer wired."""
+    session = ServeSession(
+        model, params,
+        dispatch=DispatchService(reg.TuningRegistry(None),
+                                 metrics=MetricsRegistry()),
+        backend="reference", batch_sizes=(1, 2),
+        bucket_lengths=(8, 16), straggler_threshold=1e9,
+        watchdog=watchdog, recorder=recorder)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        session.submit(rng.integers(0, cfg.vocab_size, 5 + i),
+                       max_new_tokens=3, request_id=f"req-{i}")
+    return session, session.drain()
+
+
+def test_watchdog_off_is_bit_identical(tmp_path):
+    """With no watchdog/recorder bound the session must produce exactly
+    the PR 9 output — same tokens, same states, same event ledger — as
+    a run with the full reactive layer wired (which, absent incidents,
+    only observes)."""
+    cfg, model, params = _smoke_model()
+    s_plain, plain = _token_stream(cfg, model, params)
+    wd = PerformanceWatchdog(("ttft_p95<=10",), ratio=1e9)
+    rec = FlightRecorder(out_dir=str(tmp_path))
+    s_wd, wired = _token_stream(cfg, model, params, watchdog=wd,
+                                recorder=rec)
+    assert ([np.asarray(r.tokens).tolist() for r in plain]
+            == [np.asarray(r.tokens).tolist() for r in wired])
+    assert [r.state for r in plain] == [r.state for r in wired]
+    assert ([e.kind for e in s_wd.stats.events]
+            == [e.kind for e in s_plain.stats.events])
+    assert rec.dumps == {}  # healthy run: nothing to postmortem
+    assert list(tmp_path.iterdir()) == []
+
+
+# ------------------------------------------------------- tune doctor
+
+
+def test_tune_doctor_flags_drift(tmp_path, capsys):
+    from repro.configs import squeezenet_layers as sq
+    from repro.core import cost_model as cm
+    from repro.core import tuner
+    from repro.tune.cli import build_parser
+
+    path = str(tmp_path / "reg.jsonl")
+    r = reg.TuningRegistry(path)
+    layer = list(sq.TABLE_4_1.values())[0]
+    ranked = tuner.cached_tune_conv(layer, cm.TPUSpec(), 2, 3,
+                                    registry=r)
+    key = reg.conv_schedule_key(layer, cm.TPUSpec(), 2)
+    r.record_measurement(key, reg.schedule_to_dict(ranked[0][0]),
+                         ranked[0][1].time_s * 10)  # 10x drifted
+
+    snap = tmp_path / "metrics.json"
+    snap.write_text(json.dumps({
+        "watchdog.drift_total": {"value": 2.0},
+        "slo.pages_total": {"value": 1.0},
+        "serve.decode_tok_s": {"value": 100.0}}))
+
+    ap = build_parser()
+    args = ap.parse_args(["--registry", path, "doctor",
+                          "--fail-on-drift", "--metrics", str(snap)])
+    rc = args.fn(args)
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "DRIFT" in out and "1 drifted" in out
+    assert "watchdog.drift_total = 2.0" in out
+    assert "serve.decode_tok_s" not in out  # only watchdog/slo series
+
+    # inside the band: ok verdict, exit 0 even with --fail-on-drift
+    args = ap.parse_args(["--registry", path, "doctor",
+                          "--fail-on-drift", "--ratio", "20"])
+    assert args.fn(args) == 0
+    assert "DRIFT" not in capsys.readouterr().out

@@ -18,6 +18,17 @@ Checks, in order:
   samples, histogram ``_bucket`` series with cumulative counts).
 * Every ``--require NAME`` (a sanitised metric-family prefix, e.g.
   ``serve_exec_cache_hits_total``) appears in the metrics file.
+* ``--lifecycle`` parses as a JSON array of request-lifecycle records
+  (``LifecycleLog.as_dicts()``): per record the timestamps are
+  monotonic (submitted ≤ admitted ≤ first token ≤ finished) and
+  ``ttft_s`` is null exactly when no first token was emitted — a
+  rejected/cancelled request must never report a zero or negative
+  TTFT.
+* ``--metrics-pair OLD NEW`` cross-checks two snapshots of the same
+  process: counter samples (and histogram ``_bucket``/``_sum``/
+  ``_count`` series) present in both must never decrease from OLD to
+  NEW — a decreasing counter means some code path reset or rebuilt a
+  registry mid-run.
 
 Exit status 0 = all good; 1 = any violation, with one line per problem.
 CI runs this as a hard gate after the quick benches, so a change that
@@ -181,6 +192,131 @@ def check_metrics(path: str, require: List[str]) -> List[str]:
     return problems
 
 
+def check_lifecycle(path: str) -> List[str]:
+    """Problems found in a lifecycle-records JSON file (empty = ok).
+
+    Input is ``LifecycleLog.as_dicts()``: per record the recorded
+    timestamps must be monotonic in lifecycle order, and the derived
+    ``ttft_s`` must be null exactly when ``first_token_ts`` is null
+    (and strictly positive otherwise) — a request rejected or
+    cancelled before its first token has *no* TTFT, not a zero one.
+    """
+    problems: List[str] = []
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            recs = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: cannot parse as JSON: {e}"]
+    if not isinstance(recs, list):
+        return [f"{path}: not a JSON array of lifecycle records"]
+    order = ("submitted_ts", "admitted_ts", "first_token_ts",
+             "last_token_ts", "finished_ts")
+    for i, rec in enumerate(recs):
+        if not isinstance(rec, dict):
+            problems.append(f"record[{i}]: not an object")
+            continue
+        rid = rec.get("request_id", f"#{i}")
+        if not isinstance(rec.get("submitted_ts"), (int, float)):
+            problems.append(f"{rid}: missing submitted_ts")
+            continue
+        prev_name, prev_ts = "submitted_ts", rec["submitted_ts"]
+        for name in order[1:]:
+            ts = rec.get(name)
+            if ts is None:
+                continue
+            if not isinstance(ts, (int, float)):
+                problems.append(f"{rid}: {name} is not a number")
+                continue
+            if ts < prev_ts:
+                problems.append(
+                    f"{rid}: {name}={ts} precedes {prev_name}={prev_ts}")
+            prev_name, prev_ts = name, ts
+        ttft = rec.get("ttft_s")
+        if rec.get("first_token_ts") is None:
+            if ttft is not None:
+                problems.append(
+                    f"{rid}: ttft_s={ttft} but no first token was "
+                    f"emitted (must be null)")
+        elif not isinstance(ttft, (int, float)) or ttft <= 0:
+            problems.append(
+                f"{rid}: first token emitted but ttft_s={ttft!r} "
+                f"(must be > 0)")
+    return problems
+
+
+def _parse_samples(path: str, problems: List[str],
+                   ) -> Tuple[Dict[Tuple[str, str], float],
+                              Dict[str, str]]:
+    """Samples ``{(name, labels): value}`` + family types from one
+    exposition file; parse errors are appended to ``problems``."""
+    samples: Dict[Tuple[str, str], float] = {}
+    types: Dict[str, str] = {}
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            text = f.read()
+    except OSError as e:
+        problems.append(f"{path}: cannot read: {e}")
+        return samples, types
+    for n, line in enumerate(text.splitlines(), 1):
+        if line.startswith("# TYPE"):
+            m = _TYPE_RE.match(line)
+            if m:
+                _, _, fam, typ = line.split(" ", 3)
+                types[fam] = typ
+            continue
+        if not line.strip() or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            problems.append(f"{path}:{n}: malformed sample: {line!r}")
+            continue
+        try:
+            val = float(m.group("value").replace("+Inf", "inf")
+                        .replace("-Inf", "-inf").replace("NaN", "nan"))
+        except ValueError:
+            problems.append(
+                f"{path}:{n}: non-numeric value {m.group('value')!r}")
+            continue
+        samples[(m.group("name"), m.group("labels") or "")] = val
+    return samples, types
+
+
+def check_metrics_pair(old_path: str, new_path: str) -> List[str]:
+    """Problems from comparing two snapshots of one process's metrics.
+
+    Counter samples and histogram ``_bucket``/``_sum``/``_count``
+    series present in both files must not decrease from OLD to NEW;
+    cumulative series that go backwards mean a registry was reset or
+    rebuilt mid-run, which corrupts every rate() computed over the
+    scrape.  Gauges may move freely; samples only in one file are fine
+    (new instruments appear lazily).
+    """
+    problems: List[str] = []
+    old, old_types = _parse_samples(old_path, problems)
+    new, new_types = _parse_samples(new_path, problems)
+
+    def family(sample_name: str) -> str:
+        """Metric family a sample belongs to (strip histogram suffix)."""
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = sample_name[:-len(suffix)]
+            if sample_name.endswith(suffix) and base in old_types:
+                return base
+        return sample_name
+
+    for key in sorted(set(old) & set(new)):
+        name, labels = key
+        fam = family(name)
+        typ = old_types.get(fam) or new_types.get(fam)
+        if typ not in ("counter", "histogram"):
+            continue
+        if new[key] < old[key]:
+            problems.append(
+                f"{name}{labels}: cumulative series decreased "
+                f"{old[key]} -> {new[key]} "
+                f"({old_path} -> {new_path})")
+    return problems
+
+
 def main(argv=None) -> int:
     """CLI entry point; returns the process exit status."""
     ap = argparse.ArgumentParser(
@@ -195,22 +331,40 @@ def main(argv=None) -> int:
                     help="metric family (sanitised name, e.g. "
                          "serve_ttft_seconds) that must be present; "
                          "repeatable")
+    ap.add_argument("--lifecycle", default=None,
+                    help="request-lifecycle JSON (LifecycleLog."
+                         "as_dicts()) to validate for timestamp "
+                         "monotonicity and TTFT-null semantics")
+    ap.add_argument("--metrics-pair", nargs=2, default=None,
+                    metavar=("OLD", "NEW"),
+                    help="two exposition snapshots of one process; "
+                         "counters and histogram series must never "
+                         "decrease from OLD to NEW")
     args = ap.parse_args(argv)
-    if not args.trace and not args.metrics:
-        ap.error("nothing to check: pass --trace and/or --metrics")
+    if not (args.trace or args.metrics or args.lifecycle
+            or args.metrics_pair):
+        ap.error("nothing to check: pass --trace, --metrics, "
+                 "--lifecycle, and/or --metrics-pair")
 
     problems: List[str] = []
     if args.trace:
         problems += check_trace(args.trace)
     if args.metrics:
         problems += check_metrics(args.metrics, args.require)
+    if args.lifecycle:
+        problems += check_lifecycle(args.lifecycle)
+    if args.metrics_pair:
+        problems += check_metrics_pair(*args.metrics_pair)
 
     if problems:
         for p in problems:
             print(f"FAIL {p}")
         print(f"{len(problems)} problem(s)")
         return 1
-    checked = [p for p in (args.trace, args.metrics) if p]
+    checked = [p for p in (args.trace, args.metrics, args.lifecycle)
+               if p]
+    if args.metrics_pair:
+        checked.append("{} -> {}".format(*args.metrics_pair))
     print(f"ok: {', '.join(checked)} valid"
           + (f"; {len(args.require)} required families present"
              if args.require else ""))
